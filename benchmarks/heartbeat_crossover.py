@@ -1,0 +1,35 @@
+"""Paper §4.1 footnote 6: control-plane message-rate crossover.
+
+LARK full-mesh heartbeats n(n-1) vs quorum-log per-partition heartbeats
+P*RF*(RF-1); for P=4096, RF=3 the curves cross at n ~ sqrt(6P) ~ 157.
+"""
+from __future__ import annotations
+
+import math
+
+
+def lark_heartbeats(n: int) -> int:
+    return n * (n - 1)
+
+
+def quorum_heartbeats(P: int = 4096, rf: int = 3) -> int:
+    return P * rf * (rf - 1)
+
+
+def crossover(P: int = 4096, rf: int = 3) -> float:
+    return math.sqrt(P * rf * (rf - 1))
+
+
+def main(argv=None):
+    P, rf = 4096, 3
+    n_star = crossover(P, rf)
+    below = lark_heartbeats(150) < quorum_heartbeats(P, rf)
+    above = lark_heartbeats(165) > quorum_heartbeats(P, rf)
+    print(f"heartbeat_crossover,n_star,0,"
+          f"n={n_star:.1f};paper=156.8;below150={below};above165={above}")
+    assert abs(n_star - 156.76) < 0.5
+    return 0
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Kernel micro-benchmarks: µs/call of the jnp oracle paths on CPU (the
+Pallas kernels themselves target TPU; interpret mode is not a timing proxy).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+
+def _time(fn, *args, iters=5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else None
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main(argv=None):
+    rng = np.random.default_rng(0)
+    B, H, S, D = 1, 4, 1024, 64
+    q, k, v = (jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+               for _ in range(3))
+    att = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v))
+    print(f"kernel_attention_ref,b{B}s{S}h{H}d{D},{_time(att, q, k, v):.0f},"
+          f"flops={4*B*H*S*S*D:.3g}")
+
+    qh = jnp.transpose(q, (0, 2, 1, 3))
+    lf = jnp.asarray(rng.standard_normal((B, H, S)), jnp.float32)
+    ml = jax.jit(lambda q, k, v, lf, li: ref.mlstm_chunkwise(q, k, v, lf, li)[0])
+    print(f"kernel_mlstm_ref,b{B}s{S}h{H}d{D},"
+          f"{_time(ml, qh, qh, qh, lf, lf):.0f},chunk=256")
+
+    x = jnp.asarray(rng.standard_normal((2, 2048, 512)), jnp.float32)
+    la = -jnp.asarray(rng.uniform(0.01, 1.0, (2, 2048, 512)), jnp.float32)
+    rg = jax.jit(ref.rglru_scan_ref)
+    print(f"kernel_rglru_ref,b2s2048w512,{_time(rg, x, la):.0f},assoc_scan")
+
+    up = jnp.asarray(rng.random((4096, 256)) < 0.95)
+    full = jnp.asarray(rng.random((4096, 256)) < 0.3)
+    pc = jax.jit(lambda u, f: ref.pac_eval_rank_ref(u, f, rf=3, voters=5,
+                                                    n_real=155))
+    print(f"kernel_pac_ref,p4096n155,{_time(pc, up, full):.0f},per_tick_eval")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Paper §5.2 Tables 3-4: per-partition throughput/latency during an outage.
+
+Emits one CSV row per table cell:
+  microsim_t<3|4>,row<i>,0,thrL=...;thrB=...;ratio=...;avgL=...;p99L=...;
+                         backfill=...;down=...
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.core.microsim import run_table, table_configs
+
+# (u, lf) per paper table
+TABLES = {"t3": (0.5, 0.5), "t4": (0.8, 1.0)}
+
+# published values for drift-checking: (thr_lark, thr_base, backfill, down)
+PAPER_T3 = [(2500, 2364, 66, 20), (25000, 24839, 8, 2), (2500, 1356, 135, 200),
+            (25000, 23640, 66, 20), (2500, 837, 149, 300),
+            (25000, 13547, 135, 200), (250, 236, 65, 20), (2500, 2484, 8, 2),
+            (250, 136, 135, 200), (2500, 2364, 66, 20), (250, 84, 149, 300),
+            (2500, 1356, 135, 200)]
+PAPER_T4 = [(3326, 3153, 69, 20), (33327, 33118, 8, 2), (3316, 1926, 172, 200),
+            (33275, 31535, 69, 20), (3313, 1330, 197, 300),
+            (33187, 19248, 171, 200), (332, 315, 69, 20), (3333, 3312, 8, 2),
+            (331, 193, 172, 200), (3326, 3153, 69, 20), (331, 134, 199, 300),
+            (3316, 1926, 172, 200)]
+
+
+def run(ticks: int = 520_000):
+    out = {}
+    for name, (u, lf) in TABLES.items():
+        out[name] = run_table(table_configs(u, lf), ticks=ticks)
+    return out
+
+
+def main(argv=None):
+    ticks = 520_000
+    results = run(ticks=ticks)
+    paper = {"t3": PAPER_T3, "t4": PAPER_T4}
+    for name, rows in results.items():
+        for i, r in enumerate(rows):
+            pl = paper[name][i]
+            print(f"microsim_{name},row{i+1},0,"
+                  f"thrL={r['lark']['throughput']:.0f};"
+                  f"thrB={r['base']['throughput']:.0f};"
+                  f"ratio={r['throughput_ratio']:.2f};"
+                  f"avgL={r['lark']['avg_ms']:.1f};avgB={r['base']['avg_ms']:.1f};"
+                  f"p99L={r['lark']['p99_ms']};p99B={r['base']['p99_ms']};"
+                  f"backfill={r['lark_backfill_s']:.0f};"
+                  f"down={r['base_down_s']:.0f};"
+                  f"paper_thrL={pl[0]};paper_backfill={pl[2]};paper_down={pl[3]}")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

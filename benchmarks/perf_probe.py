@@ -1,0 +1,77 @@
+"""§Perf experiment harness: re-lower one cell under config/sharding variants
+and report the roofline terms + per-device memory.  Used for the
+hypothesis -> change -> measure -> validate iterations logged in
+EXPERIMENTS.md §Perf.
+
+  PYTHONPATH=src python -m benchmarks.perf_probe --arch internlm2_20b \
+      --shape train_4k --variant baseline --variant no_fsdp ...
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import time
+
+import jax
+
+
+def apply_variant(name: str):
+    """Monkeypatch-style variant switches (kept out of the core library)."""
+    import repro.launch.shardings as sh
+    import repro.launch.dryrun as dr
+    if name == "baseline":
+        return {}
+    if name == "no_fsdp":
+        orig = sh.param_shardings
+        sh.param_shardings = lambda cfg, mesh, tree, fsdp=True: \
+            orig(cfg, mesh, tree, fsdp=False)
+        dr.param_shardings = sh.param_shardings
+        return {}
+    if name == "no_zero_grads":
+        dr.grad_shardings = lambda cfg, mesh, tree: None
+        return {}
+    if name.startswith("nmb"):
+        return {"microbatches_train": int(name[3:])}
+    if name.startswith("rg"):
+        return {"remat_group": int(name[2:])}
+    if name == "no_remat":
+        return {"remat": False}
+    raise ValueError(name)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", action="append", default=[])
+    ap.add_argument("--multipod", action="store_true")
+    args = ap.parse_args()
+
+    for variant in (args.variant or ["baseline"]):
+        # fresh import state per variant
+        import importlib
+        import repro.launch.shardings
+        import repro.launch.dryrun
+        importlib.reload(repro.launch.shardings)
+        importlib.reload(repro.launch.dryrun)
+        from repro.launch import dryrun
+        overrides = apply_variant(variant)
+        t0 = time.time()
+        try:
+            rec = dryrun.run_cell(args.arch, args.shape, args.multipod,
+                                  overrides=overrides)
+            h = rec["hlo_analysis"]
+            print(f"PROBE {args.arch} {args.shape} {variant}: "
+                  f"peak={rec['memory']['peak_bytes_per_device']/1e9:.1f}GB "
+                  f"flops={h['flops']:.3e} hbm={h['hbm_bytes']:.3e} "
+                  f"coll={h['collective_bytes_total']:.3e} "
+                  f"compile={rec['compile_s']}s total={time.time()-t0:.0f}s",
+                  flush=True)
+        except Exception as e:
+            print(f"PROBE {args.arch} {args.shape} {variant}: ERROR {e!r}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

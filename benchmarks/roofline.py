@@ -1,0 +1,130 @@
+"""Roofline analysis from the compiled dry-run artifacts (deliverable g).
+
+Per (arch x shape) single-pod cell:
+  compute_term    = HLO_FLOPs_per_device / peak_FLOPs     (197 TF/s bf16)
+  memory_term     = HLO_bytes_per_device / HBM_bw         (819 GB/s)
+  collective_term = collective_bytes_per_device / link_bw (50 GB/s/link)
+plus MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) and the useful-compute
+ratio MODEL_FLOPS / (HLO_FLOPs * chips).
+
+HLO terms come from launch/hlo_analysis.py (loop-trip-aware; XLA's own
+cost_analysis undercounts scan bodies — verified in tests/test_hlo_analysis).
+"""
+from __future__ import annotations
+
+import json
+import math
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.configs import ARCH_IDS, SHAPES_BY_NAME, get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+CHIPS = {"pod16x16": 256, "pod2x16x16": 512}
+
+RESULTS_DIR = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def active_params(cfg: ModelConfig) -> float:
+    """~Active parameters per token (MoE counts top-k experts only)."""
+    d, L, ff, V = cfg.d_model, cfg.num_layers, cfg.d_ff, cfg.vocab_size
+    h, kv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    per_layer = 0.0
+    for kind in (cfg.block_pattern * (L // len(cfg.block_pattern) + 1))[:L]:
+        if kind in ("attn", "local"):
+            if cfg.mla is not None:
+                m = cfg.mla
+                qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+                per_layer += (d * m.q_lora_rank + m.q_lora_rank * h * qk
+                              + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                              + m.kv_lora_rank * h * (m.qk_nope_head_dim
+                                                      + m.v_head_dim)
+                              + h * m.v_head_dim * d)
+            else:
+                per_layer += d * h * dh + 2 * d * kv * dh + h * dh * d
+            if cfg.moe is not None:
+                mult = 3 if cfg.mlp in ("swiglu", "gelu_glu") else 2
+                per_layer += cfg.moe.experts_per_token * mult * d * ff
+            elif ff:
+                mult = 3 if cfg.mlp in ("swiglu", "gelu_glu") else 2
+                per_layer += mult * d * ff
+        elif kind == "mlstm":
+            inner = int(cfg.proj_factor * d)
+            per_layer += 2 * d * inner + 3 * inner * inner + inner * d
+        elif kind == "slstm":
+            per_layer += 4 * d * d + int(4 * d / 3) * d * 3
+        elif kind == "rglru":
+            w = cfg.lru_width
+            per_layer += 2 * d * w + 2 * w * w + w * d
+            mult = 3 if cfg.mlp in ("swiglu", "gelu_glu") else 2
+            per_layer += mult * d * ff
+    emb = V * d * (1 if cfg.tie_embeddings else 2)
+    if cfg.is_encoder_decoder:
+        per_layer *= 2  # encoder + cross-attention, roughly
+    return per_layer + emb
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    n_act = active_params(cfg)
+    if shape.kind == "train":
+        return 6.0 * n_act * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_act * shape.tokens
+    return 2.0 * n_act * shape.global_batch  # decode: one token per row
+
+
+def load_cells(mesh: str = "pod16x16") -> List[Dict]:
+    rows = []
+    for arch in ARCH_IDS:
+        for shape_name in SHAPES_BY_NAME:
+            f = RESULTS_DIR / f"{arch}__{shape_name}__{mesh}.json"
+            if not f.exists():
+                continue
+            rec = json.loads(f.read_text())
+            if rec["status"] != "ok":
+                rows.append({"arch": arch, "shape": shape_name,
+                             "status": rec["status"]})
+                continue
+            cfg = get_config(arch)
+            shape = SHAPES_BY_NAME[shape_name]
+            h = rec["hlo_analysis"]
+            chips = CHIPS[mesh]
+            compute_s = h["flops"] / PEAK_FLOPS
+            memory_s = h["hbm_bytes"] / HBM_BW
+            coll_s = h["collective_bytes_total"] / LINK_BW
+            dom = max((compute_s, "compute"), (memory_s, "memory"),
+                      (coll_s, "collective"))[1]
+            mf = model_flops(cfg, shape)
+            rows.append({
+                "arch": arch, "shape": shape_name, "status": "ok",
+                "compute_s": compute_s, "memory_s": memory_s,
+                "collective_s": coll_s, "dominant": dom,
+                "model_flops": mf,
+                "useful_ratio": mf / max(h["flops"] * chips, 1),
+                "roofline_fraction": compute_s / max(compute_s, memory_s,
+                                                     coll_s),
+                "peak_gb": rec["memory"].get("peak_bytes_per_device", 0) / 1e9,
+                "collectives": h["collectives"],
+            })
+    return rows
+
+
+def main(argv=None):
+    rows = load_cells()
+    for r in rows:
+        if r["status"] != "ok":
+            print(f"roofline,{r['arch']}__{r['shape']},0,status={r['status']}")
+            continue
+        print(f"roofline,{r['arch']}__{r['shape']},0,"
+              f"compute_s={r['compute_s']:.4f};memory_s={r['memory_s']:.4f};"
+              f"collective_s={r['collective_s']:.4f};dominant={r['dominant']};"
+              f"useful={r['useful_ratio']:.3f};"
+              f"frac={r['roofline_fraction']:.3f};peakGB={r['peak_gb']:.1f}")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * heartbeat_crossover  — §4.1 footnote 6 (n* ≈ 157)
+  * availability         — §5.1 Fig 6 / Table 2 (reduced grid; --full for
+                           the paper's n=155, P=4096 sweep)
+  * microsim_t3/t4       — §5.2 Tables 3 and 4 (all 24 cells)
+  * kernel_*             — Pallas-oracle micro-timings
+  * roofline             — per (arch x shape) terms from the dry-run
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    argv = sys.argv[1:]
+    from benchmarks import (availability_sweep, heartbeat_crossover,
+                            kernel_bench, microsim_tables, roofline)
+
+    t0 = time.time()
+    heartbeat_crossover.main(argv)
+    kernel_bench.main(argv)
+    availability_sweep.main(argv)
+    microsim_tables.main(argv)
+    roofline.main(argv)
+    print(f"benchmarks_total,all,{(time.time()-t0)*1e6:.0f},seconds="
+          f"{time.time()-t0:.1f}")
+
+
+if __name__ == '__main__':
+    main()

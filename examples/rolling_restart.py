@@ -1,0 +1,46 @@
+"""Zero-downtime rolling restart at RF=2 (paper §1, SuperMajority).
+
+Restart every node of a 5-node cluster one at a time.  Under SuperMajority
+(fewer than RF=2 roster nodes missing) every partition stays available
+throughout: when one original replica reboots, the other serves with an
+interim second copy; on return, only accrued deltas flow back (the interim
+accepted only new updates).  Writes continue during every phase.
+
+Run:  PYTHONPATH=src python examples/rolling_restart.py
+"""
+from repro.core.simulator import LarkSim
+from repro.core.linearizability import check_history
+
+NODES, RF, PARTS = 5, 2, 8
+
+sim = LarkSim(num_nodes=NODES, rf=RF, num_partitions=PARTS)
+sim.recluster(); sim.settle(); sim.run_migrations()
+
+writes = 0
+unavailable_any = 0
+for victim in range(NODES):
+    sim.fail_node(victim)
+    sim.settle(); sim.run_migrations()
+    avail = sum(1 for p in range(PARTS) if sim.leader_of(p) is not None)
+    unavailable_any += PARTS - avail
+    # keep writing during the restart window
+    for p in range(PARTS):
+        op = sim.client_write(p, f"key-{p}", f"v{victim}-{p}")
+        sim.settle()
+        writes += 1 if sim.result(op).ok else 0
+    sim.recover_node(victim)
+    sim.settle(); sim.run_migrations()
+    print(f"restarted node {victim}: partitions available during window: "
+          f"{avail}/{PARTS}, regime {sim.er_counter}")
+
+reads_ok = 0
+for p in range(PARTS):
+    op = sim.client_read(p, f"key-{p}")
+    sim.settle()
+    r = sim.result(op)
+    reads_ok += 1 if (r.ok and r.value == f"v{NODES-1}-{p}") else 0
+
+print(f"\nwrites committed during restarts: {writes}/{NODES*PARTS}")
+print(f"final reads correct: {reads_ok}/{PARTS}")
+print(f"partition-unavailability events: {unavailable_any} (expect 0)")
+print("linearizable:", all(check_history(sim.finalize_history()).values()))

@@ -1,0 +1,12 @@
+"""Serving example: batched decode with LARK-replicated session state.
+
+A decode session survives the failure of the server holding it: the session
+store (the paper's protocol) fails over per-key with a dup-res round trip,
+and generation resumes from the last committed decode state.
+
+Run:  PYTHONPATH=src python examples/serve_kv.py
+"""
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    serve_main(["--arch", "smollm_360m", "--fail-server"])

@@ -1,0 +1,28 @@
+"""End-to-end training driver: train a small LM for a few hundred steps with
+LARK-replicated checkpointing and a mid-run worker failure.
+
+Default is a ~8M-param llama-family model (CPU-sized; pass --big for a
+~110M config if you have time/cores — the code path is identical, and the
+full 360M+ configs run through repro.launch.dryrun on the production mesh).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200] [--big]
+"""
+import argparse
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--big", action="store_true")
+    args = ap.parse_args()
+    arch = "smollm_360m"
+    argv = ["--arch", arch, "--reduced", "--steps", str(args.steps),
+            "--batch", "8", "--seq", "128", "--lr", "3e-3",
+            "--fail-worker-at", str(args.steps // 2),
+            "--recover-worker-at", str(args.steps // 2 + 20)]
+    if args.big:
+        argv += ["--batch", "4"]
+    metrics = train_main(argv)
+    first, last = metrics[0]["loss"], metrics[-1]["loss"]
+    print(f"loss {first:.3f} -> {last:.3f} ({'OK' if last < first else 'WARN'})")

@@ -1,0 +1,6 @@
+from .lark_store import LarkStore
+from .baseline_store import QuorumLogStore
+from .disk import load_pytree, save_pytree, AsyncCheckpointer
+
+__all__ = ["LarkStore", "QuorumLogStore", "save_pytree", "load_pytree",
+           "AsyncCheckpointer"]

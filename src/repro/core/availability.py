@@ -1,0 +1,151 @@
+"""Cluster-scale availability Monte Carlo — paper §5.1.
+
+Event-driven engine with per-tick Bernoulli failure semantics (sampled as
+geometric inter-failure gaps — statistically identical, so availability only
+needs recomputing at failure/recovery events; between events the unavailable
+partition count is constant and accumulates as count x Delta_t).
+
+Model (exactly the paper's):
+  * n nodes, P partitions, replication factor RF; i.i.d. failure prob p per
+    up-node per tick; fixed downtime r ticks.
+  * LARK availability = PAC SimpleMajority only (a lower bound, per §5.1.1):
+    database majority up AND >=1 roster replica up AND >=1 latest-copy holder
+    up.  Latest-copy holders ("full", data-level): whenever the partition is
+    available, holders := the current cluster replicas (migration modeled as
+    instantaneous, consistent with Appendix C's leading-order analysis);
+    while unavailable the holder set is frozen (no writes can commit).
+  * Baseline = majority of the fixed 2f+1 replica-set (first 2f+1 succession
+    nodes) reachable.
+  * Early stop: checked every `check_every` ticks once >=200 unavailable
+    events observed and the 95% CI half-width <= max(eps_abs, eps_rel * U).
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+from .succession import succession_matrix_fast
+
+
+@dataclass
+class AvailabilityResult:
+    p: float
+    rf: int
+    n: int
+    partitions: int
+    ticks: int
+    u_lark: float
+    u_maj: float
+    lark_events: int
+    maj_events: int
+    ci_lark: float
+    ci_maj: float
+    stopped_early: bool
+
+    @property
+    def improvement(self) -> float:
+        return self.u_maj / self.u_lark if self.u_lark > 0 else math.inf
+
+
+def simulate_availability(*, n: int = 155, partitions: int = 4096,
+                          rf: int = 2, p: float = 1e-3, downtime: int = 10,
+                          min_ticks: int = 50_000, max_ticks: int = 3_000_000,
+                          eps_abs: float = 5e-6, eps_rel: float = 0.05,
+                          check_every: int = 5_000, min_events: int = 200,
+                          seed: int = 0) -> AvailabilityResult:
+    rng = np.random.default_rng(seed)
+    succ = succession_matrix_fast(partitions, range(n), seed=seed)  # (P,n)
+    f = rf - 1
+    voters = 2 * f + 1
+
+    up = np.ones(n, dtype=bool)
+    # succession-rank-space state: column i of row p refers to node succ[p,i]
+    up_succ = up[succ]
+    full_succ = np.zeros((partitions, n), dtype=bool)
+    full_succ[:, :rf] = True          # initially the roster replicas are full
+
+    heap = []  # (tick, seq, kind, node)
+    seq = 0
+    for node in range(n):
+        t = int(rng.geometric(p))
+        heapq.heappush(heap, (t, seq, "fail", node))
+        seq += 1
+
+    # initial availability
+    def evaluate():
+        nonlocal up_succ
+        up_succ = up[succ]
+        majority = 2 * int(up.sum()) > n
+        roster_up = up_succ[:, :rf].any(axis=1)
+        full_up = (full_succ & up_succ).any(axis=1)
+        lark = majority & roster_up & full_up
+        # instant migration: available partitions refresh their holder set
+        rank = np.cumsum(up_succ, axis=1) <= rf
+        creps = up_succ & rank
+        np.copyto(full_succ, creps, where=lark[:, None])
+        maj = up_succ[:, :voters].sum(axis=1) * 2 > voters
+        return int((~lark).sum()), int((~maj).sum())
+
+    unavail_lark, unavail_maj = evaluate()
+    lark_pt = 0.0   # unavailable partition-ticks
+    maj_pt = 0.0
+    lark_events = 0
+    maj_events = 0
+    prev_t = 0
+    now = 0
+    stopped = False
+
+    while heap and now < max_ticks:
+        t, _, kind, node = heapq.heappop(heap)
+        t = min(t, max_ticks)
+        if t > prev_t:
+            lark_pt += unavail_lark * (t - prev_t)
+            maj_pt += unavail_maj * (t - prev_t)
+            prev_t = t
+        now = t
+        if t >= max_ticks:
+            break
+        if kind == "fail":
+            if up[node]:
+                up[node] = False
+                heapq.heappush(heap, (t + downtime, seq, "recover", node))
+                seq += 1
+        else:
+            up[node] = True
+            heapq.heappush(heap, (t + int(rng.geometric(p)), seq, "fail", node))
+            seq += 1
+        new_lark, new_maj = evaluate()
+        if new_lark > unavail_lark:
+            lark_events += new_lark - unavail_lark
+        if new_maj > unavail_maj:
+            maj_events += new_maj - unavail_maj
+        unavail_lark, unavail_maj = new_lark, new_maj
+
+        # early-stopping check
+        if now >= min_ticks and now % check_every < downtime \
+                and lark_events >= min_events and maj_events >= min_events:
+            pt = partitions * now
+            u_l = lark_pt / pt
+            u_m = maj_pt / pt
+            hw_l = 1.96 * math.sqrt(max(u_l * (1 - u_l), 1e-30) / pt)
+            hw_m = 1.96 * math.sqrt(max(u_m * (1 - u_m), 1e-30) / pt)
+            if hw_l <= max(eps_abs, eps_rel * u_l) and \
+                    hw_m <= max(eps_abs, eps_rel * u_m):
+                stopped = True
+                break
+
+    ticks = max(prev_t, 1)
+    pt = partitions * ticks
+    u_l = lark_pt / pt
+    u_m = maj_pt / pt
+    return AvailabilityResult(
+        p=p, rf=rf, n=n, partitions=partitions, ticks=ticks,
+        u_lark=u_l, u_maj=u_m, lark_events=lark_events,
+        maj_events=maj_events,
+        ci_lark=1.96 * math.sqrt(max(u_l * (1 - u_l), 1e-30) / pt),
+        ci_maj=1.96 * math.sqrt(max(u_m * (1 - u_m), 1e-30) / pt),
+        stopped_early=stopped)

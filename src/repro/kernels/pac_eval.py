@@ -1,0 +1,79 @@
+"""Pallas TPU PAC-evaluation kernel — the §5.1 availability hot loop.
+
+Evaluates, for a block of partitions at a time (succession lists resident in
+VMEM), LARK availability (SimpleMajority et al.), the majority baseline, and
+the refreshed full-holder masks.  Pure VPU integer/boolean work on
+(block_p, n) tiles; the node axis is padded to a lane multiple by ops.py.
+
+Inputs are in succession-rank space: up_succ[p, i] = up[succ[p, i]],
+full_succ likewise — the same layout the vectorized numpy engine uses, so
+the Monte Carlo can call either implementation interchangeably.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pac_kernel(up_ref, full_ref, valid_ref, lark_ref, maj_ref, creps_ref, *,
+                rf: int, voters: int, n_real: int):
+    up = up_ref[...].astype(jnp.int32)            # (bp, n)
+    full = full_ref[...].astype(jnp.int32)
+    valid = valid_ref[...].astype(jnp.int32)      # 1 for real node columns
+    up = up * valid
+    full = full * valid
+
+    lanes = jax.lax.broadcasted_iota(jnp.int32, up.shape, 1)
+    n_up = jnp.sum(up, axis=1, keepdims=True)
+    majority = (2 * n_up > n_real).astype(jnp.int32)
+
+    roster_up = jnp.sum(jnp.where(lanes < rf, up, 0), axis=1, keepdims=True)
+    any_roster = (roster_up > 0).astype(jnp.int32)
+    full_up = (jnp.sum(full * up, axis=1, keepdims=True) > 0).astype(jnp.int32)
+
+    lark = majority * any_roster * full_up
+    lark_ref[...] = (lark[:, 0] > 0)
+
+    voter_up = jnp.sum(jnp.where(lanes < voters, up, 0), axis=1, keepdims=True)
+    maj_ref[...] = (2 * voter_up[:, 0] > voters)
+
+    rank = jnp.cumsum(up, axis=1)
+    creps = (up > 0) & (rank <= rf)
+    creps_ref[...] = creps
+
+
+def pac_eval(up_succ, full_succ, *, rf: int, voters: int, n_real: int,
+             block_p: int = 256, interpret: bool = False):
+    """up_succ/full_succ: (P, n_pad) bool.  Returns (lark, maj, creps)."""
+    P, n_pad = up_succ.shape
+    block_p = min(block_p, P)
+    assert P % block_p == 0
+    valid = (jnp.arange(n_pad) < n_real)[None, :].astype(jnp.bool_)
+    valid = jnp.broadcast_to(valid, (block_p, n_pad))
+
+    kernel = functools.partial(_pac_kernel, rf=rf, voters=voters,
+                               n_real=n_real)
+    lark, maj, creps = pl.pallas_call(
+        kernel,
+        grid=(P // block_p,),
+        in_specs=[
+            pl.BlockSpec((block_p, n_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_p, n_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_p, n_pad), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_p,), lambda i: (i,)),
+            pl.BlockSpec((block_p,), lambda i: (i,)),
+            pl.BlockSpec((block_p, n_pad), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((P,), jnp.bool_),
+            jax.ShapeDtypeStruct((P,), jnp.bool_),
+            jax.ShapeDtypeStruct((P, n_pad), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(up_succ, full_succ, valid)
+    return lark, maj, creps

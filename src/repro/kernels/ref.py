@@ -1,0 +1,245 @@
+"""Pure-jnp oracles for every Pallas kernel (and the canonical impls used on CPU).
+
+Contents
+  attention_ref      dense softmax attention (flash_attention oracle)
+  mlstm_chunkwise    xLSTM matrix-memory, chunk-parallel (mlstm_chunk oracle)
+  mlstm_step         single-step mLSTM recurrence (decode)
+  rglru_scan_ref     RG-LRU linear recurrence via associative scan
+  rglru_step         single-step RG-LRU (decode)
+  pac_eval_ref       PAC availability over (partitions x nodes) masks
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Flash-attention oracle: plain dense softmax attention (small shapes only).
+# ---------------------------------------------------------------------------
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  scale: Optional[float] = None) -> jax.Array:
+    """q (B,Sq,H,D), k/v (B,Sk,H,D) — same head count (no GQA grouping here)."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    qp, kp = jnp.arange(Sq)[:, None], jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kp <= qp + (Sk - Sq)   # right-aligned when Sq < Sk
+    if window:
+        mask &= kp > qp + (Sk - Sq) - window
+    s = jnp.where(mask[None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix memory with exponential gating, stabilized)
+# ---------------------------------------------------------------------------
+
+def mlstm_chunkwise(q, k, v, log_f, log_i, *, chunk: int = 256,
+                    initial: Optional[Tuple] = None):
+    """Chunk-parallel mLSTM forward.
+
+    q,k,v: (B, H, S, Dq|Dv); log_f/log_i: (B, H, S) log-space gates
+    (log_f = logsigmoid(f_raw)).  Returns (h (B,H,S,Dv), (C, n, m) final state)
+    with C (B,H,Dq,Dv), n (B,H,Dq), m (B,H).
+
+    Math (per head; F_t local cumsum of log_f, g_s = log_i_s - F_s,
+    M_t = max(m_prev, cummax g), m_t = F_t + M_t):
+      h_t = [e^{m_prev - M_t} qC~ + sum_{s<=t} e^{g_s - M_t}(q.k_s) v_s]
+            / max(|den_t|, e^{-m_t})
+    """
+    B, H, S, Dq = q.shape
+    Dv = v.shape[-1]
+    if S % chunk:
+        pad = chunk - S % chunk
+        q, k, v = (jnp.pad(a, [(0, 0), (0, 0), (0, pad), (0, 0)]) for a in (q, k, v))
+        log_f = jnp.pad(log_f, [(0, 0), (0, 0), (0, pad)])           # f = 1
+        log_i = jnp.pad(log_i, [(0, 0), (0, 0), (0, pad)],
+                        constant_values=NEG)                          # i = 0
+        Sp = S + pad
+    else:
+        Sp = S
+    nC = Sp // chunk
+    reshape = lambda a: a.reshape(B, H, nC, chunk, *a.shape[3:]).swapaxes(0, 2)
+    qc, kc, vc = reshape(q), reshape(k), reshape(v)      # (nC, H, B, L, D)
+    lfc = log_f.reshape(B, H, nC, chunk).swapaxes(0, 2)  # (nC, H, B, L)
+    lic = log_i.reshape(B, H, nC, chunk).swapaxes(0, 2)
+
+    if initial is None:
+        C0 = jnp.zeros((B, H, Dq, Dv), jnp.float32)
+        n0 = jnp.zeros((B, H, Dq), jnp.float32)
+        m0 = jnp.full((B, H), NEG, jnp.float32)
+    else:
+        C0, n0, m0 = (x.astype(jnp.float32) for x in initial)
+
+    scale = 1.0 / math.sqrt(Dq)
+
+    def chunk_body(carry, xs):
+        C, n, m = carry                                   # (B,H,Dq,Dv),(B,H,Dq),(B,H)
+        qi, ki, vi, lf, li = xs                           # (H,B,L,*) / (H,B,L)
+        qi, ki, vi = (a.swapaxes(0, 1).astype(jnp.float32) for a in (qi, ki, vi))
+        lf = lf.swapaxes(0, 1).astype(jnp.float32)        # (B,H,L)
+        li = li.swapaxes(0, 1).astype(jnp.float32)
+        F = jnp.cumsum(lf, axis=-1)                       # inclusive
+        g = li - F
+        Mt = jnp.maximum(m[..., None], jax.lax.cummax(g, axis=g.ndim - 1))  # (B,H,L)
+        m_t = F + Mt
+        # inter-chunk (carry) contribution
+        qCf = jnp.einsum("bhld,bhdv->bhlv", qi, C) * scale
+        qnf = jnp.einsum("bhld,bhd->bhl", qi, n) * scale
+        w_carry = jnp.exp(m[..., None] - Mt)              # (B,H,L)
+        # intra-chunk
+        sc = jnp.einsum("bhld,bhsd->bhls", qi, ki) * scale
+        lpos = jnp.arange(chunk)
+        causal = lpos[:, None] >= lpos[None, :]
+        D = jnp.where(causal[None, None], jnp.exp(g[:, :, None, :] - Mt[..., None]), 0.0)
+        W = sc * D
+        num = w_carry[..., None] * qCf + jnp.einsum("bhls,bhsv->bhlv", W, vi)
+        den = w_carry * qnf + jnp.sum(W, axis=-1)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # carry update
+        ML = Mt[..., -1]                                  # (B,H)
+        FL = F[..., -1]
+        wv = jnp.exp(g - ML[..., None])                   # (B,H,L)
+        C_new = jnp.exp(m - ML)[..., None, None] * C + \
+            jnp.einsum("bhld,bhlv->bhdv", wv[..., None] * ki, vi)
+        n_new = jnp.exp(m - ML)[..., None] * n + jnp.sum(wv[..., None] * ki, axis=-2)
+        m_new = FL + ML
+        return (C_new, n_new, m_new), h.swapaxes(0, 1)    # back to (H,B,L,Dv)
+
+    (Cf, nf, mf), hs = jax.lax.scan(chunk_body, (C0, n0, m0), (qc, kc, vc, lfc, lic))
+    h = hs.swapaxes(0, 2).reshape(B, H, Sp, Dv)[:, :, :S]
+    return h.astype(q.dtype), (Cf, nf, mf)
+
+
+def mlstm_step(q, k, v, log_f, log_i, state):
+    """Single decode step.  q/k/v (B,H,D*); log_f/log_i (B,H); state (C,n,m)."""
+    C, n, m = state
+    Dq = q.shape[-1]
+    scale = 1.0 / math.sqrt(Dq)
+    qf, kf, vf = (a.astype(jnp.float32) for a in (q, k, v))
+    m_new = jnp.maximum(log_f + m, log_i)
+    wf = jnp.exp(log_f + m - m_new)
+    wi = jnp.exp(log_i - m_new)
+    C_new = wf[..., None, None] * C + wi[..., None, None] * (kf[..., :, None] * vf[..., None, :])
+    n_new = wf[..., None] * n + wi[..., None] * kf
+    num = jnp.einsum("bhd,bhdv->bhv", qf, C_new) * scale
+    den = jnp.einsum("bhd,bhd->bh", qf, n_new) * scale
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return h.astype(q.dtype), (C_new, n_new, m_new)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin/RecurrentGemma)
+# ---------------------------------------------------------------------------
+
+def rglru_scan_ref(x, log_a):
+    """h_t = a_t * h_{t-1} + sqrt(1-a_t^2) * x_t  via associative scan.
+
+    x (B, S, W) gated input; log_a (B, S, W) (negative).  Returns h (B,S,W) f32.
+    """
+    a = jnp.exp(log_a.astype(jnp.float32))
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a.astype(jnp.float32)), 0.0)) \
+        * x.astype(jnp.float32)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_step(x, log_a, h):
+    """One step: x/log_a (B, W); h (B, W) f32 carry."""
+    a = jnp.exp(log_a.astype(jnp.float32))
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 0.0)) * x.astype(jnp.float32)
+    return a * h + b
+
+
+# ---------------------------------------------------------------------------
+# PAC evaluation (the §5.1 availability hot loop)
+# ---------------------------------------------------------------------------
+
+def pac_eval_rank_ref(up_succ, full_succ, *, rf: int, voters: int,
+                      n_real: int):
+    """Succession-rank-space PAC (oracle for kernels/pac_eval.py).
+
+    up_succ/full_succ: (P, n_pad) bool where column i of row p refers to the
+    node of rank i in partition p's succession list; columns >= n_real are
+    padding.  Returns (lark_simple_majority, maj_baseline, cluster_replicas).
+    """
+    valid = (jnp.arange(up_succ.shape[1]) < n_real)[None, :]
+    up = up_succ & valid
+    full = full_succ & valid
+    n_up = jnp.sum(up, axis=1)
+    majority = 2 * n_up > n_real
+    any_roster = jnp.any(up[:, :rf], axis=1)
+    full_up = jnp.any(full & up, axis=1)
+    lark = majority & any_roster & full_up
+    maj = 2 * jnp.sum(up[:, :voters], axis=1) > voters
+    rank = jnp.cumsum(up.astype(jnp.int32), axis=1)
+    creps = up & (rank <= rf)
+    return lark, maj, creps
+
+def pac_eval_ref(up, succ, full, rf: int, *, voters: Optional[int] = None,
+                 conditions: Tuple[str, ...] = ("simple_majority",)):
+    """Vectorized Partition Availability Conditions.
+
+    up:   (n,) bool — node reachability (the cluster = all up nodes).
+    succ: (P, n) int32 — succession lists (node ids by rendezvous rank).
+    full: (P, n) bool — full[p, node] = node holds latest copy of all keys in p.
+    rf:   replication factor (roster replicas = first rf of each succession list).
+    voters: baseline quorum size (default 2*(rf-1)+1).
+
+    Returns dict with per-partition bools: lark availability under the chosen
+    condition set, each individual PAC condition, the majority baseline, and
+    the (P, n) cluster-replica mask (first rf *up* nodes per succession list).
+    """
+    n = up.shape[0]
+    P = succ.shape[0]
+    up_succ = jnp.take(up, succ)                        # (P, n) up by rank
+    roster_up = up_succ[:, :rf]                         # roster replicas present?
+    n_up = jnp.sum(up)
+    majority = n_up * 2 > n
+    half = n_up * 2 == n
+
+    full_succ = jnp.take_along_axis(full, succ, axis=1)  # full by rank
+    any_full_up = jnp.any(full_succ & up_succ, axis=1)   # (P,)
+    any_roster_up = jnp.any(roster_up, axis=1)
+    all_roster_up = jnp.all(roster_up, axis=1)
+    leader_up = up_succ[:, 0]
+
+    missing = n - n_up
+    cond = {
+        "super_majority": jnp.broadcast_to(majority & (missing < rf), (P,)),
+        "all_roster_replicas": all_roster_up,
+        "simple_majority": majority & any_roster_up & any_full_up,
+        "half_roster": half & leader_up & any_full_up,
+    }
+    lark = jnp.zeros((P,), bool)
+    for c in conditions:
+        lark = lark | cond[c]
+
+    nv = voters if voters is not None else 2 * (rf - 1) + 1
+    maj_baseline = jnp.sum(up_succ[:, :nv], axis=1) * 2 > nv
+
+    # cluster replicas: first rf up nodes per succession list
+    rank_up = jnp.cumsum(up_succ.astype(jnp.int32), axis=1)
+    cr_in_succ = up_succ & (rank_up <= rf)              # (P, n) in rank space
+    rows = jnp.arange(P)[:, None]
+    cr_mask = jnp.zeros((P, n), bool).at[rows, succ].set(cr_in_succ)
+
+    return {"lark": lark, "baseline": maj_baseline, "cluster_replicas": cr_mask,
+            **cond}

@@ -1,0 +1,234 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first — jax locks the device count on first
+init, and the production meshes need 512 placeholder host devices.
+
+Per cell this records (to results/dryrun/<arch>__<shape>__<mesh>.json):
+  * compiled.memory_analysis()  — proves the cell fits per-device memory,
+  * compiled.cost_analysis()    — XLA's flops/bytes (while-bodies counted 1x),
+  * analyze_hlo(compiled HLO)   — loop-aware flops / HBM-traffic / collective
+    bytes (the roofline inputs; see launch/hlo_analysis.py),
+  * lower/compile wall times, batch axes, parameter counts.
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm_360m --shape train_4k
+  python -m repro.launch.dryrun --all [--multipod|--singlepod]
+"""
+import argparse
+import gc
+import json
+import math
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES_BY_NAME, get_config
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shardings import (batch_axes, batch_shardings,
+                                    grad_shardings, opt_state_shardings,
+                                    param_shardings, state_shardings,
+                                    with_shardings)
+from repro.models import batch_specs, decode_input_specs
+from repro.training import make_serve_steps, make_train_step
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _tree_bytes(tree) -> int:
+    return sum(math.prod(l.shape) * l.dtype.itemsize for l in jax.tree.leaves(tree))
+
+
+def _tree_params(tree) -> int:
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(tree))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides=None) -> dict:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind, "status": "ok"}
+    if not cfg.supports(shape):
+        rec["status"] = "skipped"
+        rec["reason"] = ("long_500k needs sub-quadratic attention; "
+                         "skipped for pure full-attention archs (DESIGN.md)")
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec["batch_axes"] = list(batch_axes(cfg, mesh, shape.global_batch))
+
+    t0 = time.time()
+    if shape.kind == "train":
+        init_fn, step_fn, _ = make_train_step(cfg)
+        params_s, opt_s = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+        gshard = grad_shardings(cfg, mesh, params_s)
+        pshard = param_shardings(cfg, mesh, params_s)
+        oshard = opt_state_shardings(cfg, mesh, params_s, opt_s)
+        bspecs = batch_specs(cfg, shape)
+        bshard = batch_shardings(cfg, mesh, bspecs, shape.global_batch)
+        init_fn, step_fn, _ = make_train_step(cfg, grad_shardings=gshard,
+                                              batch_shardings=bshard)
+        args = (with_shardings(params_s, pshard),
+                with_shardings(opt_s, oshard),
+                with_shardings(bspecs, bshard))
+        fn = jax.jit(step_fn, donate_argnums=(0, 1),
+                     out_shardings=(pshard, oshard, None))
+    elif shape.kind == "prefill":
+        prefill_fn, _, model = make_serve_steps(cfg)
+        params_s = jax.eval_shape(model["init_params"], jax.random.PRNGKey(0))
+        # inference cells always FSDP the (read-only) params: gathering per
+        # layer is the standard serving trade and keeps giants under HBM;
+        # it also pins the data axis so GSPMD can't replicate batch rows
+        # around the MoE scatter (6.5x redundant flops observed without it).
+        pshard = param_shardings(cfg, mesh, params_s,
+                                 fsdp=cfg.tensor_parallel)
+        bspecs = batch_specs(cfg, shape)
+        bshard = batch_shardings(cfg, mesh, bspecs, shape.global_batch)
+        args = (with_shardings(params_s, pshard),
+                with_shardings(bspecs, bshard))
+        # pin the emitted decode state to the serving layout (cache sequence
+        # dim sharded over `model`) — otherwise GSPMD materializes the full
+        # KV cache batch-sharded only (8+ GB/device for the big archs).
+        # Ring-cache (SWA) archs skip the pin: the ring roll/slice forces a
+        # resharding transpose that regresses peak memory (measured).
+        if os.environ.get("REPRO_PIN_PREFILL_OUT", "1") == "1" and not cfg.window:
+            state_s = model["decode_state_shape"](shape.global_batch,
+                                                  shape.seq_len)
+            sshard = state_shardings(cfg, mesh, state_s, shape.global_batch)
+            fn = jax.jit(lambda p, b: prefill_fn(p, b, shape.seq_len),
+                         out_shardings=(None, sshard))
+        else:
+            fn = jax.jit(lambda p, b: prefill_fn(p, b, shape.seq_len))
+    else:  # decode
+        _, decode_fn, model = make_serve_steps(cfg)
+        params_s = jax.eval_shape(model["init_params"], jax.random.PRNGKey(0))
+        pshard = param_shardings(cfg, mesh, params_s,
+                                 fsdp=cfg.tensor_parallel)
+        specs = decode_input_specs(cfg, shape)
+        sshard = state_shardings(cfg, mesh, specs["state"], shape.global_batch)
+        tshard = batch_shardings(cfg, mesh, {"t": specs["tokens"]},
+                                 shape.global_batch)["t"]
+        args = [with_shardings(params_s, pshard),
+                with_shardings(specs["state"], sshard),
+                jax.ShapeDtypeStruct(specs["tokens"].shape, specs["tokens"].dtype,
+                                     sharding=tshard),
+                jax.ShapeDtypeStruct((), jnp.int32,
+                                     sharding=jax.NamedSharding(
+                                         mesh, jax.sharding.PartitionSpec()))]
+        if cfg.position_inputs:
+            B = shape.global_batch
+            posn = jax.ShapeDtypeStruct(
+                (B, 3, 1), jnp.int32,
+                sharding=jax.NamedSharding(
+                    mesh, jax.sharding.PartitionSpec(
+                        rec["batch_axes"] or None, None, None)))
+            args.append(posn)
+            fn = jax.jit(lambda p, s, t, pos, posns:
+                         decode_fn(p, s, t, pos, positions=posns),
+                         donate_argnums=(1,))
+        else:
+            fn = jax.jit(decode_fn, donate_argnums=(1,))
+        args = tuple(args)
+
+    rec["param_count"] = _tree_params(params_s)
+    rec["param_bytes_global"] = _tree_bytes(params_s)
+
+    with mesh:
+        lowered = fn.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_bytes_per_device": int(ma.argument_size_in_bytes
+                                         + ma.output_size_in_bytes
+                                         + ma.temp_size_in_bytes
+                                         - ma.alias_size_in_bytes),
+        }
+    except Exception as e:  # pragma: no cover
+        rec["memory"] = {"error": repr(e)}
+    try:
+        ca = compiled.cost_analysis()
+        rec["cost_analysis"] = {k: float(v) for k, v in ca.items()
+                                if k in ("flops", "bytes accessed",
+                                         "transcendentals", "optimal_seconds")}
+    except Exception as e:  # pragma: no cover
+        rec["cost_analysis"] = {"error": repr(e)}
+    t2 = time.time()
+    hlo = compiled.as_text()
+    rec["hlo_chars"] = len(hlo)
+    rec["hlo_analysis"] = analyze_hlo(hlo)
+    rec["analyze_s"] = round(time.time() - t2, 2)
+    del compiled, lowered, hlo
+    gc.collect()
+    return rec
+
+
+def cell_path(arch, shape_name, multi_pod) -> Path:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    return RESULTS_DIR / f"{arch}__{shape_name}__{mesh_name}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--singlepod", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    archs = ARCH_IDS if (args.all or args.arch in (None, "all")) else [args.arch]
+    shapes = (list(SHAPES_BY_NAME) if (args.all or args.shape in (None, "all"))
+              else [args.shape])
+    pods = [False, True]
+    if args.multipod and not args.singlepod:
+        pods = [True]
+    if args.singlepod and not args.multipod:
+        pods = [False]
+
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in pods:
+                out = cell_path(arch, shape_name, mp)
+                if out.exists() and not args.force:
+                    print(f"[cached] {out.name}")
+                    continue
+                print(f"[dryrun] {arch} x {shape_name} x "
+                      f"{'2x16x16' if mp else '16x16'} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape_name, mp)
+                except Exception:
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": "pod2x16x16" if mp else "pod16x16",
+                           "status": "error",
+                           "traceback": traceback.format_exc()}
+                    failures += 1
+                out.write_text(json.dumps(rec, indent=2))
+                print(f"  -> {rec['status']} "
+                      f"(lower {rec.get('lower_s', '-')}s, "
+                      f"compile {rec.get('compile_s', '-')}s)", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

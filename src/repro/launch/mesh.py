@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level constant) so importing this module never touches
+jax device state.  Single pod: (data=16, model=16) = 256 chips (TPU v5e-256);
+multi-pod: (pod=2, data=16, model=16) = 512 chips across 2 pods over DCN.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}; have {len(devices)} — the "
+            "dry-run entrypoint must set XLA_FLAGS=--xla_force_host_platform_"
+            "device_count=512 before any jax import")
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    from jax.sharding import Mesh
+    return Mesh(dev_array, axes)
+
+
+def make_host_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh over however many host devices exist (tests)."""
+    import jax
+
+    n = int(np.prod(shape))
+    devices = jax.devices()[:n]
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devices).reshape(shape), axes)

@@ -1,0 +1,276 @@
+"""Sharding rules: param/batch/state PartitionSpecs per (arch x shape x mesh).
+
+Parallelism scheme
+  * batch dim        -> ("pod","data") [+ "model" for non-TP archs]; axes are
+                        greedily dropped (right-first) until they divide B.
+  * TP (tensor)      -> "model" axis on head/ff/vocab/expert dims for archs
+                        with cfg.tensor_parallel (embedding vocab-sharded,
+                        up-projections column-, down-projections row-sharded,
+                        MoE expert dim sharded => GSPMD emits EP all-to-alls).
+  * SP (sequence)    -> long-context decode (B=1): KV/recurrent state sequence
+                        or feature dims shard over "data" (+"model").
+  * ZeRO             -> optimizer moments inherit the param specs (and are
+                        additionally sharded by GSPMD where profitable).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+# param leaf names whose LAST dim is the parallel (output) dim
+_COL = {"wq", "wk", "wv", "wi_gate", "wi_up", "w_up", "w_x", "w_gate",
+        "wu_g", "wu", "wq_b", "wk_b", "wv_b", "wq_a", "w_rg", "w_ig", "conv"}
+# param leaf names whose FIRST-of-last-two dim is parallel (input/row dim)
+_ROW = {"wo", "w_down", "wd", "w_out"}
+
+
+def has_pod(mesh: Mesh) -> bool:
+    return "pod" in mesh.axis_names
+
+
+def batch_axes(cfg: ModelConfig, mesh: Mesh, global_batch: int) -> Tuple[str, ...]:
+    axes = (("pod",) if has_pod(mesh) else ()) + ("data",)
+    if not cfg.tensor_parallel:
+        axes = axes + ("model",)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    while axes and global_batch % math.prod(sizes[a] for a in axes):
+        axes = axes[:-1]
+    return axes
+
+
+def _spec_for_param(cfg: ModelConfig, path: Tuple[str, ...], shape,
+                    msize: int) -> P:
+    """Divisibility-aware TP rules (the mesh `model` axis has msize ways)."""
+    if not cfg.tensor_parallel:
+        return P()
+    names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+    leaf = names[-1]
+    ndim = len(shape)
+    div = lambda i: shape[i] % msize == 0
+    in_moe = "moe" in names
+    trailing: Tuple = ()
+    if in_moe:
+        if leaf == "router":
+            trailing = ()
+        elif ndim >= 3 and shape[-3] % msize == 0:
+            trailing = ("model", None, None)     # expert-parallel
+        elif leaf in ("wi_gate", "wi_up") and div(ndim - 1):
+            trailing = (None, None, "model")     # few experts: TP the ff dim
+        elif leaf == "wo" and div(ndim - 2):
+            trailing = (None, "model", None)
+        else:
+            trailing = ()
+    elif leaf == "embedding":
+        # prefer vocab-parallel; odd vocab sizes fall back to d_model-parallel
+        trailing = ("model", None) if div(ndim - 2) else \
+            ((None, "model") if div(ndim - 1) else ())
+    elif leaf == "unembed":
+        trailing = (None, "model") if div(ndim - 1) else ()
+    elif leaf == "wkv_a":          # MLA latent projection feeds the shared cache
+        trailing = ()
+    elif leaf in _COL:
+        trailing = (None, "model") if div(ndim - 1) else ()
+    elif leaf in _ROW:
+        trailing = ("model", None) if div(ndim - 2) else ()
+    elif leaf == "lam":
+        trailing = ("model",) if div(ndim - 1) else ()
+    pad = ndim - len(trailing)
+    if pad < 0:
+        return P()
+    return P(*([None] * pad + list(trailing)))
+
+
+def _add_axis(spec: P, shape, axis: str, size: int) -> P:
+    """ZeRO/FSDP: place `axis` on the largest free, divisible dim."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    free = [i for i in range(len(shape))
+            if entries[i] is None and shape[i] % size == 0 and shape[i] >= size]
+    if not free:
+        return P(*entries)
+    i = max(free, key=lambda j: shape[j])
+    entries[i] = axis
+    return P(*entries)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, params_tree,
+                    fsdp: Optional[bool] = None):
+    """TP over `model` + (where cfg.fsdp) FSDP over `data` on a free dim —
+    GSPMD all-gathers weights just-in-time per layer (ZeRO-3 style)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    msize = sizes["model"]
+    use_fsdp = cfg.fsdp if fsdp is None else fsdp
+
+    def spec(path, leaf):
+        s = _spec_for_param(cfg, path, leaf.shape, msize)
+        if use_fsdp and cfg.tensor_parallel and leaf.ndim >= 2:
+            s = _add_axis(s, leaf.shape, "data", sizes["data"])
+        return NamedSharding(mesh, s)
+    return jax.tree_util.tree_map_with_path(spec, params_tree)
+
+
+def grad_shardings(cfg: ModelConfig, mesh: Mesh, params_tree):
+    """f32 gradient-accumulator specs: param specs + ZeRO over data(/model)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    msize = sizes["model"]
+
+    def spec(path, leaf):
+        s = _spec_for_param(cfg, path, leaf.shape, msize)
+        s = _add_axis(s, leaf.shape, "data", sizes["data"])
+        if not cfg.tensor_parallel:
+            s = _add_axis(s, leaf.shape, "model", msize)
+        return NamedSharding(mesh, s)
+    return jax.tree_util.tree_map_with_path(spec, params_tree)
+
+
+def opt_state_shardings(cfg: ModelConfig, mesh: Mesh, params_tree, opt_state_tree):
+    """Moments mirror param specs; adafactor factored moments drop dims."""
+    msize = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    pspecs = {}
+
+    def record(path, leaf):
+        pspecs[tuple(str(p) for p in path)] = (
+            _spec_for_param(cfg, path, leaf.shape, msize), leaf.shape)
+        return None
+    jax.tree_util.tree_map_with_path(record, params_tree)
+    by_shape: Dict[tuple, P] = {}
+    for spec, shape in pspecs.values():
+        by_shape.setdefault(shape, spec)
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def zero(spec: P, shape) -> P:
+        """ZeRO: moments are elementwise -> also shard over data (+model)."""
+        spec = _add_axis(spec, shape, "data", sizes["data"])
+        if not cfg.tensor_parallel:
+            spec = _add_axis(spec, shape, "model", sizes["model"])
+        return spec
+
+    def spec_for(leaf):
+        shape = leaf.shape
+        if shape in by_shape:
+            return NamedSharding(mesh, zero(by_shape[shape], shape))
+        # factored moments: match a param shape with one trailing dim removed
+        for pshape, spec in by_shape.items():
+            if shape == pshape[:-1] and len(pshape) >= 1:
+                return NamedSharding(mesh, zero(P(*list(spec)[:-1]), shape)) \
+                    if len(spec) else NamedSharding(mesh, zero(P(), shape))
+            if shape == pshape[:-2] + pshape[-1:] and len(spec) >= 2:
+                return NamedSharding(
+                    mesh, zero(P(*(list(spec)[:-2] + [list(spec)[-1]])), shape))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(spec_for, opt_state_tree,
+                        is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, specs, global_batch: int):
+    baxes = batch_axes(cfg, mesh, global_batch)
+    bspec = baxes if baxes else None
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    # Sequence parallelism: non-TP attention archs whose batch doesn't cover
+    # the model axis shard the sequence dim over it instead (prefill/train).
+    recurrent = any(k in ("mlstm", "slstm", "rglru") for k in cfg.block_pattern)
+    use_sp = (not cfg.tensor_parallel) and ("model" not in baxes) \
+        and not recurrent
+
+    def spec(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        names = [getattr(p, "key", str(p)) for p in path]
+        entries = [bspec] + [None] * (leaf.ndim - 1)
+        if use_sp:
+            sdim = 2 if names and names[-1] == "positions" else 1
+            if leaf.ndim > sdim and leaf.shape[sdim] % sizes["model"] == 0 \
+                    and leaf.shape[sdim] >= sizes["model"]:
+                entries[sdim] = "model"
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree_util.tree_map_with_path(spec, specs)
+
+
+def state_shardings(cfg: ModelConfig, mesh: Mesh, state_tree, global_batch: int):
+    """Decode-state specs.  Leaves have a leading segment-stack dim R."""
+    baxes = batch_axes(cfg, mesh, global_batch)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def _sanitize(spec: P, shape) -> P:
+        """Drop axis assignments that don't divide the dimension."""
+        out = []
+        for i, entry in enumerate(spec):
+            if entry is None:
+                out.append(None)
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            keep = []
+            for a in axes:
+                if shape[i] % (math.prod(sizes[x] for x in keep) * sizes[a]) == 0:
+                    keep.append(a)
+            out.append(tuple(keep) if len(keep) > 1 else (keep[0] if keep else None))
+        return P(*out)
+
+    # KV caches shard their *sequence* dim over "model" (flash-decode style:
+    # the decode softmax reduces over the sharded axis via GSPMD collectives).
+    # Sharding kv-heads instead would pad 1-8 heads up to 16 (2-16x HBM waste).
+    baxes_nm = tuple(a for a in baxes if a != "model")
+    bspec = baxes_nm if baxes_nm else None
+    tp = "model" if cfg.tensor_parallel else None
+    seq_par = global_batch == 1          # long-context: shard state, not batch
+
+    def raw_spec(path, leaf) -> P:
+        names = [getattr(p, "key", str(p)) for p in path]
+        leaf_name = names[-1]
+        nd = leaf.ndim
+        if leaf_name == "pos":
+            return P()
+        if leaf_name in ("ck", "cv"):                # (R,B,enc,KV,dh) small
+            return P(None, bspec, None, None, None)
+        if leaf_name in ("k", "v"):                  # (R,B,T,KV,dh)
+            if seq_par:
+                return P(None, None, ("data", "model"), None, None)
+            return P(None, bspec, "model", None, None)
+        if leaf_name in ("c_kv", "k_pe"):            # (R,B,T,r) MLA latent
+            if seq_par:
+                return P(None, None, ("data", "model"), None)
+            return P(None, bspec, "model", None)
+        if leaf_name == "C":                          # (R,B,H,dq,dv) mLSTM
+            if seq_par:
+                return P(None, None, None, "data", "model")
+            return P(None, bspec, None, tp, None)
+        if leaf_name == "n" and nd == 4:              # (R,B,H,dq)
+            if seq_par:
+                return P(None, None, None, ("data", "model"))
+            return P(None, bspec, None, tp)
+        if leaf_name == "conv":                       # (R,B,cw-1,ch)
+            if seq_par:
+                return P(None, None, None, ("data", "model"))
+            return P(None, bspec, None, tp)
+        if leaf_name == "h" and nd == 3:              # (R,B,w) rglru
+            if seq_par:
+                return P(None, None, ("data", "model"))
+            return P(None, bspec, tp)
+        if nd == 3:                                   # (R,B,d) slstm c/n/h/m
+            if seq_par:
+                return P(None, None, ("data", "model"))
+            return P(None, bspec, None)
+        if nd >= 2:
+            return P(None, bspec, *([None] * (nd - 2)))
+        return P()
+
+    def spec(path, leaf):
+        return NamedSharding(mesh, _sanitize(raw_spec(path, leaf), leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(spec, state_tree)
+
+
+def with_shardings(struct_tree, sharding_tree):
+    """Attach NamedShardings to ShapeDtypeStructs (dry-run inputs)."""
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        struct_tree, sharding_tree,
+        is_leaf=lambda s: isinstance(s, jax.ShapeDtypeStruct) or hasattr(s, "shape"))

@@ -1,0 +1,4 @@
+from .model import batch_specs, build_model, decode_input_specs, input_specs, make_batch
+
+__all__ = ["build_model", "input_specs", "batch_specs", "decode_input_specs",
+           "make_batch"]

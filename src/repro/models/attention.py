@@ -1,0 +1,355 @@
+"""Attention: GQA/MQA/MHA (full, sliding-window, local) and MLA, with KV caches.
+
+Memory discipline: sequence-level attention is q-chunked (``lax.scan`` over
+query blocks) so the S x S score matrix is never materialized — this is what
+lets prefill_32k fit HBM in the dry-run, and it is the pure-jnp oracle for the
+Pallas flash kernel (``repro.kernels``).  On TPU the kernel path is selected
+by ``repro.kernels.ops``.
+
+Cache layouts
+  full:  k/v (B, S_alloc, KV, D), decode writes at ``pos``.
+  ring:  k/v (B, W, KV, D) + slot->global-position map; used for SWA/local.
+  mla:   c_kv (B, S, kv_rank) + k_pe (B, S, rope_dim)  (latent cache).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import apply_rope, dense_init, pdtype_of, rms_norm_headwise, rope_angles
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+# Chunk size for q-blocked attention; S x S materialization above this.
+_QCHUNK = 512
+_DENSE_LIMIT = 4096  # S_q*S_k <= limit^2 -> single dense block
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def attn_init(cfg: ModelConfig, key):
+    d, h, kv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    pd = pdtype_of(cfg)
+    if cfg.mla is not None:
+        m = cfg.mla
+        ks = jax.random.split(key, 7)
+        qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+        return {
+            "wq_a": dense_init(ks[0], (d, m.q_lora_rank), pd),
+            "q_norm": jnp.ones((m.q_lora_rank,), pd),
+            "wq_b": dense_init(ks[1], (m.q_lora_rank, h * qk_dim), pd),
+            "wkv_a": dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim), pd),
+            "kv_norm": jnp.ones((m.kv_lora_rank,), pd),
+            "wk_b": dense_init(ks[3], (m.kv_lora_rank, h * m.qk_nope_head_dim), pd),
+            "wv_b": dense_init(ks[4], (m.kv_lora_rank, h * m.v_head_dim), pd),
+            "wo": dense_init(ks[5], (h * m.v_head_dim, d), pd),
+        }
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h * dh), pd),
+        "wk": dense_init(ks[1], (d, kv * dh), pd),
+        "wv": dense_init(ks[2], (d, kv * dh), pd),
+        "wo": dense_init(ks[3], (h * dh, d), pd),
+    }
+    if cfg.qk_norm:
+        p["q_scale"] = jnp.ones((dh,), pd)
+        p["k_scale"] = jnp.ones((dh,), pd)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Core masked GQA attention (dense block + q-chunked scan)
+# ---------------------------------------------------------------------------
+
+def _gqa_block(q, k, v, *, scale, q_pos, k_pos, causal, window, cross=False):
+    """q (B,Sq,H,D) k/v (B,Sk,KV,D); q_pos (Sq,), k_pos (Sk,) global indices."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qf = q.reshape(B, Sq, KV, G, D)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qf, k).astype(jnp.float32) * scale
+    if not cross:
+        mask = jnp.ones((Sq, k.shape[1]), bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        mask &= k_pos[None, :] >= 0  # ring-cache empty slots carry pos=-1
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(B, Sq, H, v.shape[-1])
+
+
+def mha(q, k, v, *, scale=None, causal=True, window=0, q_offset=0, cross=False):
+    """Sequence attention, q-chunked when large.  Shapes as in _gqa_block."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    q_pos0 = jnp.arange(Sq) + q_offset
+    k_pos = jnp.arange(Sk)
+    if Sq * Sk <= _DENSE_LIMIT ** 2 or Sq % _QCHUNK or cross:
+        return _gqa_block(q, k, v, scale=scale, q_pos=q_pos0, k_pos=k_pos,
+                          causal=causal, window=window, cross=cross)
+
+    nchunk = Sq // _QCHUNK
+    qc = q.reshape(B, nchunk, _QCHUNK, H, D).transpose(1, 0, 2, 3, 4)
+
+    if window and window + _QCHUNK < Sk:
+        # local attention: each q-chunk only sees the trailing `window` keys.
+        span = window + _QCHUNK
+
+        def body(_, args):
+            i, qi = args
+            start = jnp.maximum(i * _QCHUNK - window, 0)
+            # clamp so the static-size slice stays in bounds
+            start = jnp.minimum(start, Sk - span)
+            ks = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+            kp = start + jnp.arange(span)
+            qp = i * _QCHUNK + jnp.arange(_QCHUNK) + q_offset
+            o = _gqa_block(qi, ks, vs, scale=scale, q_pos=qp, k_pos=kp,
+                           causal=causal, window=window)
+            return (), o
+
+        _, out = jax.lax.scan(body, (), (jnp.arange(nchunk), qc))
+    else:
+        def body(_, args):
+            i, qi = args
+            qp = i * _QCHUNK + jnp.arange(_QCHUNK) + q_offset
+            o = _gqa_block(qi, k, v, scale=scale, q_pos=qp, k_pos=k_pos,
+                           causal=causal, window=window)
+            return (), o
+
+        _, out = jax.lax.scan(body, (), (jnp.arange(nchunk), qc))
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, v.shape[-1])
+
+
+def decode_mha(q, k_cache, v_cache, k_pos, *, scale=None, cur_pos=None, window=0):
+    """One-step decode: q (B,1,H,D) vs cache (B,T,KV,D); k_pos (T,) globals."""
+    D = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    B, T = k_cache.shape[0], k_cache.shape[1]
+    H, KV = q.shape[2], k_cache.shape[2]
+    G = H // KV
+    qf = q.reshape(B, 1, KV, G, D)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qf, k_cache).astype(jnp.float32) * scale
+    mask = (k_pos <= cur_pos) & (k_pos >= 0)
+    if window:
+        mask &= k_pos > cur_pos - window
+    scores = jnp.where(mask[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v_cache)
+    return out.reshape(B, 1, H, v_cache.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# Cache constructors
+# ---------------------------------------------------------------------------
+
+def kv_cache_shape(cfg: ModelConfig, batch: int, max_len: int, window: int = 0):
+    alloc = min(max_len, window) if window else max_len
+    kv, dh = cfg.num_kv_heads, cfg.head_dim
+    dt = jnp.dtype(cfg.act_dtype)
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {
+            "c_kv": jax.ShapeDtypeStruct((batch, alloc, m.kv_lora_rank), dt),
+            "k_pe": jax.ShapeDtypeStruct((batch, alloc, m.qk_rope_head_dim), dt),
+            "pos": jax.ShapeDtypeStruct((alloc,), jnp.int32),
+        }
+    return {
+        "k": jax.ShapeDtypeStruct((batch, alloc, kv, dh), dt),
+        "v": jax.ShapeDtypeStruct((batch, alloc, kv, dh), dt),
+        "pos": jax.ShapeDtypeStruct((alloc,), jnp.int32),
+    }
+
+
+def empty_kv_cache(cfg: ModelConfig, batch: int, max_len: int, window: int = 0):
+    return jax.tree.map(lambda s: jnp.full(s.shape, -1, s.dtype)
+                        if s.dtype == jnp.int32 else jnp.zeros(s.shape, s.dtype),
+                        kv_cache_shape(cfg, batch, max_len, window),
+                        is_leaf=lambda s: isinstance(s, jax.ShapeDtypeStruct))
+
+
+def _ring_write(buf, val, pos, alloc):
+    """Write val (B,1,...) into ring buffer at slot pos % alloc."""
+    slot = jnp.mod(pos, alloc)
+    return jax.lax.dynamic_update_slice_in_dim(buf, val.astype(buf.dtype), slot, axis=1)
+
+
+def _ring_fill_prefill(buf, vals, alloc):
+    """Store the trailing `alloc` positions of vals (B,S,...) ring-aligned."""
+    S = vals.shape[1]
+    if S <= alloc:
+        pad = [(0, 0)] * vals.ndim
+        pad[1] = (0, alloc - S)
+        return jnp.pad(vals, pad).astype(buf.dtype)
+    tail = vals[:, S - alloc:]
+    # global position p lives at slot p % alloc: roll so slots line up
+    shift = (S - alloc) % alloc
+    return jnp.roll(tail, shift, axis=1).astype(buf.dtype)
+
+
+def _ring_positions(S, alloc):
+    """Global positions per slot after prefilling S tokens."""
+    if S <= alloc:
+        return jnp.where(jnp.arange(alloc) < S, jnp.arange(alloc), -1)
+    base = jnp.arange(alloc)
+    # slot s holds the largest p < S with p % alloc == s
+    last = S - 1
+    off = jnp.mod(last - base, alloc)
+    return last - off
+
+
+# ---------------------------------------------------------------------------
+# Full attention block apply (standard / GQA path)
+# ---------------------------------------------------------------------------
+
+def apply_attention(cfg: ModelConfig, params, x, *, mode: str,
+                    window: int = 0, cache=None, pos=None,
+                    positions=None, max_len: int = 0,
+                    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+                    causal: bool = True):
+    """Returns (out, new_cache).  mode in {train, prefill, decode}.
+
+    positions: (B, 3, S) M-RoPE ids when cfg.mrope_sections, else None
+    (positions default to arange).  pos: int32 scalar current index (decode).
+    """
+    if cfg.mla is not None:
+        return _apply_mla(cfg, params, x, mode=mode, cache=cache, pos=pos,
+                          max_len=max_len)
+    B, S, d = x.shape
+    h, kv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(B, S, h, dh)
+    if cross_kv is None:
+        k = (x @ params["wk"]).reshape(B, S, kv, dh)
+        v = (x @ params["wv"]).reshape(B, S, kv, dh)
+    else:
+        xk, xv = cross_kv
+        k = (xk @ params["wk"]).reshape(B, xk.shape[1], kv, dh)
+        v = (xv @ params["wv"]).reshape(B, xv.shape[1], kv, dh)
+    if cfg.qk_norm:
+        q = rms_norm_headwise(q, params["q_scale"])
+        k = rms_norm_headwise(k, params["k_scale"])
+
+    if cfg.rope_theta and cross_kv is None:
+        if cfg.mrope_sections:
+            from .layers import mrope_angles
+            if positions is None:
+                base = (jnp.arange(S) if mode != "decode" else pos + jnp.arange(1))
+                positions = jnp.broadcast_to(base[None, None, :], (B, 3, S))
+            cos, sin = mrope_angles(positions, dh, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            p = (jnp.arange(S) if mode != "decode" else pos + jnp.arange(1))
+            cos, sin = rope_angles(p, dh, cfg.rope_theta)
+            cos, sin = cos[None], sin[None]
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    if mode == "decode":
+        assert cache is not None
+        alloc = cache["k"].shape[1]
+        new_cache = {
+            "k": _ring_write(cache["k"], k, pos, alloc) if window else
+                 jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, axis=1),
+            "v": _ring_write(cache["v"], v, pos, alloc) if window else
+                 jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, axis=1),
+            "pos": cache["pos"].at[jnp.mod(pos, alloc) if window else pos].set(pos),
+        }
+        out = decode_mha(q, new_cache["k"], new_cache["v"], new_cache["pos"],
+                         cur_pos=pos, window=window)
+    else:
+        out = mha(q, k, v, causal=causal and cross_kv is None, window=window,
+                  cross=cross_kv is not None)
+        new_cache = None
+        if mode == "prefill" and cross_kv is None:
+            alloc = min(max_len, window) if window else max_len
+            new_cache = {
+                "k": _ring_fill_prefill(jnp.zeros((B, alloc, kv, dh), k.dtype), k, alloc)
+                     if window else _pad_to(k, alloc),
+                "v": _ring_fill_prefill(jnp.zeros((B, alloc, kv, dh), v.dtype), v, alloc)
+                     if window else _pad_to(v, alloc),
+                "pos": _ring_positions(S, alloc) if window else
+                       jnp.where(jnp.arange(alloc) < S, jnp.arange(alloc), -1),
+            }
+    return out.reshape(B, S, h * dh) @ params["wo"], new_cache
+
+
+def _pad_to(arr, alloc):
+    pad = [(0, 0)] * arr.ndim
+    pad[1] = (0, alloc - arr.shape[1])
+    return jnp.pad(arr, pad)
+
+
+# ---------------------------------------------------------------------------
+# MLA (Multi-head Latent Attention) — absorbed decode path
+# ---------------------------------------------------------------------------
+
+def _apply_mla(cfg: ModelConfig, params, x, *, mode, cache, pos, max_len):
+    m = cfg.mla
+    B, S, d = x.shape
+    h = cfg.num_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    scale = 1.0 / math.sqrt(qk_dim)
+
+    cq = rms_norm_headwise(x @ params["wq_a"], params["q_norm"])
+    q = (cq @ params["wq_b"]).reshape(B, S, h, qk_dim)
+    q_nope, q_pe = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+
+    ckv_full = x @ params["wkv_a"]
+    c_kv = rms_norm_headwise(ckv_full[..., : m.kv_lora_rank], params["kv_norm"])
+    k_pe = ckv_full[..., m.kv_lora_rank:]
+
+    if mode == "decode":
+        p = pos + jnp.arange(1)
+    else:
+        p = jnp.arange(S)
+    cos, sin = rope_angles(p, m.qk_rope_head_dim, cfg.rope_theta)
+    q_pe = apply_rope(q_pe, cos[None], sin[None])
+    k_pe = apply_rope(k_pe[:, :, None, :], cos[None], sin[None])[:, :, 0, :]
+
+    if mode == "decode":
+        alloc = cache["c_kv"].shape[1]
+        new_cache = {
+            "c_kv": jax.lax.dynamic_update_slice_in_dim(
+                cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), pos, axis=1),
+            "k_pe": jax.lax.dynamic_update_slice_in_dim(
+                cache["k_pe"], k_pe.astype(cache["k_pe"].dtype), pos, axis=1),
+            "pos": cache["pos"].at[pos].set(pos),
+        }
+        # absorbed: q_nope' = q_nope @ Wk_b^T  -> score against latent cache
+        wk = params["wk_b"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+        q_lat = jnp.einsum("bqhd,chd->bqhc", q_nope, wk)      # (B,1,h,rank)
+        scores = (jnp.einsum("bqhc,btc->bhqt", q_lat, new_cache["c_kv"])
+                  + jnp.einsum("bqhd,btd->bhqt", q_pe, new_cache["k_pe"]))
+        scores = scores.astype(jnp.float32) * scale
+        mask = (new_cache["pos"] <= pos) & (new_cache["pos"] >= 0)
+        scores = jnp.where(mask[None, None, None, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        o_lat = jnp.einsum("bhqt,btc->bqhc", probs, new_cache["c_kv"])
+        wv = params["wv_b"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+        out = jnp.einsum("bqhc,chv->bqhv", o_lat, wv)
+    else:
+        k_nope = (c_kv @ params["wk_b"]).reshape(B, S, h, m.qk_nope_head_dim)
+        v = (c_kv @ params["wv_b"]).reshape(B, S, h, m.v_head_dim)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (B, S, h, m.qk_rope_head_dim))],
+            axis=-1)
+        qf = jnp.concatenate([q_nope, q_pe], axis=-1)
+        out = mha(qf, k, v, scale=scale, causal=True)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {
+                "c_kv": _pad_to(c_kv, max_len),
+                "k_pe": _pad_to(k_pe, max_len),
+                "pos": jnp.where(jnp.arange(max_len) < S, jnp.arange(max_len), -1),
+            }
+    out = out.reshape(B, S, h * m.v_head_dim) @ params["wo"]
+    return out, new_cache

@@ -1,0 +1,78 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+``input_specs`` supplies precomputed frame embeddings (B, enc_seq, d_model);
+the conv/mel frontend is out of scope per the assignment.  Sinusoidal
+positions on both stacks (deviation: original whisper uses learned decoder
+positions; sinusoidal keeps parameter shapes independent of seq_len).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import (apply_norm, cross_entropy, dtype_of, embed_init,
+                     embed_tokens, norm_init, sinusoidal_positions, unembed)
+from .transformer import segments_apply, segments_init, segments_state_shape
+
+
+def build_encdec(cfg: ModelConfig):
+    enc_cfg = cfg.replace(num_layers=cfg.enc_layers, is_encoder_decoder=False)
+
+    def init_params(rng):
+        k1, k2, k3 = jax.random.split(rng, 3)
+        return {
+            "embed": embed_init(cfg, k1),
+            "encoder": segments_init(enc_cfg, k2, causal=False),
+            "enc_ln": norm_init(cfg),
+            "decoder": segments_init(cfg, k3, cross=True),
+            "ln_f": norm_init(cfg),
+        }
+
+    def _encode(params, audio_embeds):
+        x = audio_embeds.astype(dtype_of(cfg))
+        x = x + sinusoidal_positions(jnp.arange(x.shape[1]), cfg.d_model
+                                     ).astype(x.dtype)[None]
+        x, _, _ = segments_apply(enc_cfg, params["encoder"], x, mode="train",
+                                 causal=False)
+        return apply_norm(cfg, params["enc_ln"], x)
+
+    def _embed_dec(params, tokens, offset=0):
+        x = embed_tokens(cfg, params["embed"], tokens)
+        pos = jnp.arange(tokens.shape[1]) + offset
+        return x + sinusoidal_positions(pos, cfg.d_model).astype(x.dtype)[None]
+
+    def loss_fn(params, batch):
+        enc = _encode(params, batch["audio_embeds"])
+        x = _embed_dec(params, batch["tokens"])
+        x, _, aux = segments_apply(cfg, params["decoder"], x, mode="train",
+                                   enc_out=enc)
+        x = apply_norm(cfg, params["ln_f"], x)
+        logits = unembed(cfg, params["embed"], x)
+        loss = cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+        return loss, {"loss": loss, "aux_loss": aux,
+                      "tokens": jnp.asarray(batch["labels"].size, jnp.float32)}
+
+    def prefill(params, batch, max_len: int):
+        enc = _encode(params, batch["audio_embeds"])
+        x = _embed_dec(params, batch["tokens"])
+        x, states, _ = segments_apply(cfg, params["decoder"], x, mode="prefill",
+                                      enc_out=enc, max_len=max_len)
+        x = apply_norm(cfg, params["ln_f"], x)
+        logits = unembed(cfg, params["embed"], x[:, -1:])
+        return logits[:, 0], states
+
+    def decode_step(params, states, tokens, pos, positions=None):
+        x = _embed_dec(params, tokens[:, None], offset=pos)
+        x, states, _ = segments_apply(cfg, params["decoder"], x, mode="decode",
+                                      states=states, pos=pos)
+        x = apply_norm(cfg, params["ln_f"], x)
+        logits = unembed(cfg, params["embed"], x)
+        return logits[:, 0], states
+
+    def decode_state_shape(batch: int, max_len: int):
+        return segments_state_shape(cfg, batch, max_len, cross=True)
+
+    return dict(config=cfg, init_params=init_params, loss_fn=loss_fn,
+                prefill=prefill, decode_step=decode_step,
+                decode_state_shape=decode_state_shape)

@@ -1,0 +1,185 @@
+"""Shared layers: norms, RoPE/M-RoPE, MLPs, embeddings, cross-entropy.
+
+Pure-functional JAX: params are nested dicts of arrays; every apply function
+is shape-polymorphic over batch/sequence so the same code serves train_4k,
+prefill_32k, decode and the reduced smoke configs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def dtype_of(cfg: ModelConfig) -> jnp.dtype:
+    return jnp.dtype(cfg.act_dtype)
+
+
+def pdtype_of(cfg: ModelConfig) -> jnp.dtype:
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init (std = scale or 1/sqrt(fan_in))."""
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms (f32 internal accumulation)
+# ---------------------------------------------------------------------------
+
+def norm_init(cfg: ModelConfig, width: Optional[int] = None):
+    width = width or cfg.d_model
+    p = {"scale": jnp.ones((width,), pdtype_of(cfg))}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((width,), pdtype_of(cfg))
+    return p
+
+
+def apply_norm(cfg: ModelConfig, params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * params["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_norm_headwise(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Per-head q/k norm (qwen3)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (plain + multimodal M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions: jax.Array, dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin of shape positions.shape + (dim//2,)."""
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., S, H, D); cos/sin: (..., S, D//2) broadcast over heads."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    c = cos[..., None, :].astype(jnp.float32)
+    s = sin[..., None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope_angles(pos_thw: jax.Array, dim: int, theta: float,
+                 sections: Tuple[int, ...]) -> Tuple[jax.Array, jax.Array]:
+    """M-RoPE (qwen2-vl): pos_thw (B, 3, S); sections sum to dim//2.
+
+    Frequency slot f uses the (t|h|w) position row of its section.
+    Returns cos/sin of shape (B, S, dim//2).
+    """
+    assert sum(sections) == dim // 2, (sections, dim)
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    # section id per frequency slot
+    sec_id = jnp.repeat(jnp.arange(len(sections)), jnp.array(sections),
+                        total_repeat_length=dim // 2)          # (dim//2,)
+    pos = jnp.take_along_axis(
+        pos_thw.astype(jnp.float32),                            # (B, 3, S)
+        jnp.broadcast_to(sec_id[None, :, None], (pos_thw.shape[0], dim // 2, pos_thw.shape[2])).astype(jnp.int32),
+        axis=1)                                                 # (B, dim//2, S)
+    ang = jnp.swapaxes(pos, 1, 2) * inv_freq                    # (B, S, dim//2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def sinusoidal_positions(positions: jax.Array, dim: int) -> jax.Array:
+    """Whisper-style sinusoidal embeddings; positions (...,) -> (..., dim)."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / (half - 1))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Feed-forward blocks
+# ---------------------------------------------------------------------------
+
+def mlp_init(cfg: ModelConfig, key, d_ff: Optional[int] = None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    pd = pdtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    if cfg.mlp in ("swiglu", "gelu_glu"):
+        return {"wi_gate": dense_init(ks[0], (d, ff), pd),
+                "wi_up": dense_init(ks[1], (d, ff), pd),
+                "wo": dense_init(ks[2], (ff, d), pd)}
+    return {"wi_up": dense_init(ks[1], (d, ff), pd),
+            "wo": dense_init(ks[2], (ff, d), pd)}
+
+
+def apply_mlp(cfg: ModelConfig, params, x: jax.Array) -> jax.Array:
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(x @ params["wi_gate"]) * (x @ params["wi_up"])
+    elif cfg.mlp == "gelu_glu":
+        h = jax.nn.gelu(x @ params["wi_gate"]) * (x @ params["wi_up"])
+    elif cfg.mlp == "relu2":
+        h = jnp.square(jax.nn.relu(x @ params["wi_up"]))
+    elif cfg.mlp == "gelu":
+        h = jax.nn.gelu(x @ params["wi_up"])
+    else:
+        raise ValueError(cfg.mlp)
+    return h @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding / loss
+# ---------------------------------------------------------------------------
+
+def embed_init(cfg: ModelConfig, key):
+    pd = pdtype_of(cfg)
+    k1, k2 = jax.random.split(key)
+    p = {"embedding": dense_init(k1, (cfg.vocab_size, cfg.d_model), pd, scale=0.02)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(k2, (cfg.d_model, cfg.vocab_size), pd)
+    return p
+
+
+def embed_tokens(cfg: ModelConfig, params, tokens: jax.Array) -> jax.Array:
+    emb = jnp.take(params["embedding"], tokens, axis=0).astype(dtype_of(cfg))
+    if cfg.scale_embeddings:
+        emb = emb * math.sqrt(cfg.d_model)
+    return emb
+
+
+def unembed(cfg: ModelConfig, params, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        return x @ params["embedding"].T.astype(x.dtype)
+    return x @ params["unembed"].astype(x.dtype)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token CE in f32.  logits (..., V); labels (...) int32."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,80 @@
+"""Public model facade: ``build_model(cfg)`` + per-shape ``input_specs``.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every model
+input of that cell (weak-type-correct, shardable, no device allocation) — the
+dry-run lowers against these; ``make_batch`` materializes small concrete
+batches for smoke tests.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from .transformer import build_lm
+
+build_model = build_lm
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Specs for the *batch* argument of loss_fn/prefill (not decode)."""
+    B = shape.global_batch
+    S = shape.seq_len
+    d = cfg.d_model
+    act = cfg.act_dtype
+    specs: Dict[str, Any] = {}
+    if cfg.is_encoder_decoder:
+        specs["audio_embeds"] = _sds((B, cfg.enc_seq, d), act)
+        specs["tokens"] = _sds((B, S), "int32")
+    elif cfg.embeds_input:
+        specs["embeds"] = _sds((B, S, d), act)
+        if cfg.position_inputs:
+            specs["positions"] = _sds((B, 3, S), "int32")
+    else:
+        specs["tokens"] = _sds((B, S), "int32")
+    if shape.kind == "train":
+        specs["labels"] = _sds((B, S), "int32")
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Specs for serve_step(params, state, tokens, pos)."""
+    model = build_model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.embeds_input and not cfg.is_encoder_decoder:
+        tok = _sds((B, cfg.d_model), cfg.act_dtype)
+    else:
+        tok = _sds((B,), "int32")
+    return {
+        "state": model["decode_state_shape"](B, S),
+        "tokens": tok,
+        "pos": _sds((), "int32"),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    if shape.kind == "decode":
+        return decode_input_specs(cfg, shape)
+    return batch_specs(cfg, shape)
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, rng: np.random.Generator):
+    """Concrete random batch (smoke tests; CPU-sized shapes only)."""
+    out = {}
+    for name, s in batch_specs(cfg, shape).items():
+        if s.dtype == jnp.int32:
+            if name == "positions":
+                base = np.arange(s.shape[-1], dtype=np.int32)
+                out[name] = np.broadcast_to(base, s.shape).copy()
+            else:
+                out[name] = rng.integers(0, cfg.vocab_size, s.shape).astype(np.int32)
+        else:
+            out[name] = rng.standard_normal(s.shape).astype(np.dtype(s.dtype))
+    return jax.tree.map(jnp.asarray, out)

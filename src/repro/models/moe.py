@@ -1,0 +1,114 @@
+"""Mixture-of-Experts: top-k router + capacity-bounded scatter dispatch.
+
+Dispatch strategy (EP-friendly, no S x S x E x C one-hot einsums):
+  1. route each token to top-k experts (router in f32),
+  2. rank slots per (sequence row, expert) via a one-hot cumsum,
+  3. scatter tokens into a (B, E, C, d) buffer (capacity overflow -> drop),
+  4. batched expert FFN einsum over the E axis (sharded over `model` => the
+     resharding from batch-sharded scatter output to expert-sharded matmul is
+     where GSPMD inserts the all-to-alls),
+  5. gather back + weighted combine.
+
+Returns a switch-style load-balancing aux loss alongside the output.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import dense_init, pdtype_of
+
+
+def moe_init(cfg: ModelConfig, key):
+    assert cfg.moe is not None
+    e, d, ff = cfg.moe.num_experts, cfg.d_model, cfg.d_ff
+    pd = pdtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / math.sqrt(d)
+    return {
+        "router": dense_init(ks[0], (d, e), jnp.float32, scale=scale),
+        "wi_gate": (jax.random.truncated_normal(ks[1], -2, 2, (e, d, ff)) * scale).astype(pd),
+        "wi_up": (jax.random.truncated_normal(ks[2], -2, 2, (e, d, ff)) * scale).astype(pd),
+        "wo": (jax.random.truncated_normal(ks[3], -2, 2, (e, ff, d)) / math.sqrt(ff)).astype(pd),
+    }
+
+
+_RANK_CHUNK = 8192
+
+
+def _slot_ranks(slot_e: jax.Array, E: int) -> jax.Array:
+    """Rank of each slot within its (row, expert) group.
+
+    Chunked over the slot axis: the naive one-hot cumsum materializes
+    (B, S*K, E) int32 — 67 GB for mixtral prefill_32k — so we scan
+    _RANK_CHUNK-slot blocks carrying per-expert counts.
+    """
+    B, SK = slot_e.shape
+    if SK <= _RANK_CHUNK:
+        onehot = jax.nn.one_hot(slot_e, E, dtype=jnp.int32)
+        return jnp.take_along_axis(jnp.cumsum(onehot, axis=1),
+                                   slot_e[..., None], axis=2)[..., 0] - 1
+    pad = (-SK) % _RANK_CHUNK
+    se = jnp.pad(slot_e, ((0, 0), (0, pad)))
+    nch = se.shape[1] // _RANK_CHUNK
+    se = se.reshape(B, nch, _RANK_CHUNK).transpose(1, 0, 2)
+
+    def body(counts, se_c):                     # counts (B, E)
+        oh = jax.nn.one_hot(se_c, E, dtype=jnp.int32)
+        cs = jnp.cumsum(oh, axis=1) + counts[:, None, :]
+        p = jnp.take_along_axis(cs, se_c[..., None], axis=2)[..., 0] - 1
+        return counts + oh.sum(axis=1), p
+
+    _, ps = jax.lax.scan(body, jnp.zeros((B, E), jnp.int32), se)
+    return ps.transpose(1, 0, 2).reshape(B, -1)[:, :SK]
+
+
+def apply_moe(cfg: ModelConfig, params, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    E, K = m.num_experts, m.experts_per_token
+    C = max(1, int(math.ceil(S * K * m.capacity_factor / E)))
+
+    logits = (x.astype(jnp.float32) @ params["router"])            # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, K)                          # (B,S,K)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    # aux loss: E * mean_e( frac_tokens_e * mean_prob_e )
+    frac = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_e, E, dtype=jnp.float32), axis=2), axis=(0, 1)) / K
+    pmean = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac * pmean)
+
+    # --- slot ranking per sequence row ------------------------------------
+    slot_e = top_e.reshape(B, S * K)                                # (B,SK)
+    slot_w = top_w.reshape(B, S * K)
+    pos = _slot_ranks(slot_e, E)                                    # (B,SK)
+    keep = pos < C
+    pos_safe = jnp.where(keep, pos, C)                              # C -> dropped
+
+    # --- scatter into expert buffers ---------------------------------------
+    xs = jnp.repeat(x, K, axis=1)                                   # (B,SK,d)
+    bidx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, S * K))
+    buf = jnp.zeros((B, E, C, d), x.dtype)
+    buf = buf.at[bidx, slot_e, pos_safe].add(
+        jnp.where(keep[..., None], xs, 0), mode="drop")
+
+    # --- expert FFN (E axis sharded over `model`) ---------------------------
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, params["wi_gate"])) \
+            * jnp.einsum("becd,edf->becf", buf, params["wi_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("becd,edf->becf", buf, params["wi_up"]))
+    out_buf = jnp.einsum("becf,efd->becd", h, params["wo"])
+
+    # --- gather + combine ----------------------------------------------------
+    y = out_buf[bidx, slot_e, jnp.minimum(pos_safe, C - 1)]         # (B,SK,d)
+    y = jnp.where(keep[..., None], y, 0) * slot_w[..., None].astype(y.dtype)
+    y = y.reshape(B, S, K, d).sum(axis=2)
+    return y.astype(x.dtype), aux

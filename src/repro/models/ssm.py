@@ -1,0 +1,292 @@
+"""Recurrent blocks: xLSTM (mLSTM + sLSTM) and RG-LRU (Griffin/RecurrentGemma).
+
+Sequence processing uses the chunk-parallel / associative-scan forms (the
+Pallas kernels' oracles in ``repro.kernels``); decode uses O(1) recurrent
+state — this is what makes ``long_500k`` tractable for these families.
+
+Adaptations vs the source papers (documented in DESIGN.md): mLSTM i/f gates
+are computed from the conv branch (not the stacked qkv), and RG-LRU gates use
+dense instead of block-diagonal projections.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from .layers import dense_init, pdtype_of, rms_norm_headwise
+
+_RG_C = 8.0  # RG-LRU decay sharpness constant
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d
+# ---------------------------------------------------------------------------
+
+def causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x (B,S,ch), w (cw,ch) -> (B,S,ch)."""
+    cw = w.shape[0]
+    xp = jnp.pad(x, [(0, 0), (cw - 1, 0), (0, 0)])
+    out = sum(xp[:, j: j + x.shape[1]] * w[j] for j in range(cw))
+    return out.astype(x.dtype)
+
+
+def conv_step(x1: jax.Array, w: jax.Array, state: jax.Array):
+    """x1 (B,1,ch); state (B,cw-1,ch) -> (out (B,1,ch), new_state)."""
+    win = jnp.concatenate([state, x1.astype(state.dtype)], axis=1)  # (B,cw,ch)
+    out = jnp.einsum("bcw,cw->bw", win.astype(jnp.float32),
+                     w.astype(jnp.float32))[:, None]
+    return out.astype(x1.dtype), win[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM matrix memory)
+# ---------------------------------------------------------------------------
+
+def mlstm_inner(cfg: ModelConfig) -> int:
+    return int(cfg.proj_factor * cfg.d_model)
+
+
+def mlstm_init(cfg: ModelConfig, key):
+    d, H = cfg.d_model, cfg.num_heads
+    inner = mlstm_inner(cfg)
+    pd = pdtype_of(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * inner), pd),
+        "conv": dense_init(ks[1], (cfg.conv_width, inner), pd, scale=0.3),
+        "wq": dense_init(ks[2], (inner, inner), pd),
+        "wk": dense_init(ks[3], (inner, inner), pd),
+        "wv": dense_init(ks[4], (inner, inner), pd),
+        "w_i": dense_init(ks[5], (inner, H), jnp.float32),
+        "w_f": dense_init(ks[6], (inner, H), jnp.float32),
+        "b_f": jnp.full((H,), 3.0, jnp.float32),   # bias toward remembering
+        "b_i": jnp.zeros((H,), jnp.float32),
+        "skip": jnp.ones((inner,), pd),
+        "out_scale": jnp.ones((inner,), pd),
+        "w_down": dense_init(ks[7], (inner, d), pd),
+    }
+
+
+def mlstm_state_shape(cfg: ModelConfig, batch: int):
+    H = cfg.num_heads
+    inner = mlstm_inner(cfg)
+    dh = inner // H
+    return {
+        "C": jax.ShapeDtypeStruct((batch, H, dh, dh), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, H, dh), jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, H), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, inner),
+                                     jnp.dtype(cfg.act_dtype)),
+    }
+
+
+def _mlstm_qkv_gates(cfg, params, c_in, c_act):
+    B, S, inner = c_in.shape
+    H = cfg.num_heads
+    dh = inner // H
+    heads = lambda a: a.reshape(B, S, H, dh).transpose(0, 2, 1, 3)  # (B,H,S,dh)
+    q = heads(c_act @ params["wq"])
+    k = heads(c_act @ params["wk"])
+    v = heads(c_in @ params["wv"])
+    gf = c_act.astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(gf @ params["w_f"] + params["b_f"])  # (B,S,H)
+    log_i = gf @ params["w_i"] + params["b_i"]
+    return q, k, v, log_f.transpose(0, 2, 1), log_i.transpose(0, 2, 1)
+
+
+def _mlstm_out(cfg, params, h, c_act, g):
+    """h (B,H,S,dh) -> block output (B,S,d)."""
+    B, H, S, dh = h.shape
+    hs = h.transpose(0, 2, 1, 3)                                    # (B,S,H,dh)
+    hn = rms_norm_headwise(hs, jnp.ones((dh,), jnp.float32)).reshape(B, S, H * dh)
+    hn = hn * params["out_scale"] + c_act * params["skip"]
+    return ((hn * jax.nn.silu(g)) @ params["w_down"])
+
+
+def apply_mlstm(cfg: ModelConfig, params, x, *, mode: str, state=None):
+    B, S, d = x.shape
+    inner = mlstm_inner(cfg)
+    up = x @ params["w_up"]
+    c_in, g = up[..., :inner], up[..., inner:]
+
+    if mode == "decode":
+        c_out, conv_state = conv_step(c_in, params["conv"], state["conv"])
+        c_act = jax.nn.silu(c_out)
+        q, k, v, log_f, log_i = _mlstm_qkv_gates(cfg, params, c_in, c_act)
+        h1, (C, n, m) = ops.mlstm_step(
+            q[:, :, 0], k[:, :, 0], v[:, :, 0], log_f[:, :, 0], log_i[:, :, 0],
+            (state["C"], state["n"], state["m"]))
+        h = h1[:, :, None, :]                                       # (B,H,1,dh)
+        new_state = {"C": C, "n": n, "m": m, "conv": conv_state}
+    else:
+        c_act = jax.nn.silu(causal_conv(c_in, params["conv"]))
+        q, k, v, log_f, log_i = _mlstm_qkv_gates(cfg, params, c_in, c_act)
+        h, (C, n, m) = ops.mlstm_chunkwise(q, k, v, log_f, log_i)
+        new_state = None
+        if mode == "prefill":
+            tail = c_in[:, max(S - (cfg.conv_width - 1), 0):]
+            if tail.shape[1] < cfg.conv_width - 1:
+                tail = jnp.pad(tail, [(0, 0), (cfg.conv_width - 1 - tail.shape[1], 0), (0, 0)])
+            new_state = {"C": C, "n": n, "m": m,
+                         "conv": tail.astype(jnp.dtype(cfg.act_dtype))}
+    return _mlstm_out(cfg, params, h, c_act, g), new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (scalar memory, strictly sequential)
+# ---------------------------------------------------------------------------
+
+def slstm_init(cfg: ModelConfig, key):
+    d, H = cfg.d_model, cfg.num_heads
+    dh = d // H
+    ff = int(4 * d / 3)
+    pd = pdtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "conv": dense_init(ks[0], (cfg.conv_width, d), pd, scale=0.3),
+        "w": dense_init(ks[1], (d, 4 * d), jnp.float32),
+        "r": (jax.random.truncated_normal(ks[2], -2, 2, (H, dh, 4 * dh))
+              / math.sqrt(dh)).astype(jnp.float32),
+        "b": jnp.concatenate([jnp.zeros((d,)), jnp.full((d,), 3.0),
+                              jnp.zeros((2 * d,))]).astype(jnp.float32),
+        "wu_g": dense_init(ks[3], (d, ff), pd),
+        "wu": dense_init(ks[4], (d, ff), pd),
+        "wd": dense_init(ks[5], (ff, d), pd),
+    }
+
+
+def slstm_state_shape(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    return {
+        "c": jax.ShapeDtypeStruct((batch, d), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, d), jnp.float32),
+        "h": jax.ShapeDtypeStruct((batch, d), jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, d), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, d),
+                                     jnp.dtype(cfg.act_dtype)),
+    }
+
+
+def _slstm_cell(cfg, params, xc_t, carry):
+    """xc_t (B,d) conv'd input; carry (c,n,h,m) each (B,d) f32."""
+    c, n, h, m = carry
+    B, d = xc_t.shape
+    H = cfg.num_heads
+    dh = d // H
+    gx = xc_t.astype(jnp.float32) @ params["w"] + params["b"]       # (B,4d)
+    hr = h.reshape(B, H, dh)
+    gr = jnp.einsum("bhd,hde->bhe", hr, params["r"]).reshape(B, 4 * d)
+    g = gx + gr
+    gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+    z = jnp.tanh(gz)
+    o = jax.nn.sigmoid(go)
+    lf = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(lf + m, gi)
+    ip = jnp.exp(gi - m_new)
+    fp = jnp.exp(lf + m - m_new)
+    c_new = fp * c + ip * z
+    n_new = fp * n + ip
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new)
+
+
+def _slstm_ffn(params, h, dtype):
+    hn = rms_norm_headwise(h.astype(jnp.float32), jnp.ones((h.shape[-1],))).astype(dtype)
+    return (jax.nn.gelu(hn @ params["wu_g"]) * (hn @ params["wu"])) @ params["wd"]
+
+
+def apply_slstm(cfg: ModelConfig, params, x, *, mode: str, state=None):
+    B, S, d = x.shape
+    if mode == "decode":
+        xc, conv_state = conv_step(x, params["conv"], state["conv"])
+        carry = (state["c"], state["n"], state["h"], state["m"])
+        carry = _slstm_cell(cfg, params, xc[:, 0], carry)
+        h = carry[2][:, None]
+        new_state = {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3],
+                     "conv": conv_state}
+    else:
+        xc = causal_conv(x, params["conv"])
+
+        def step(carry, xt):
+            carry = _slstm_cell(cfg, params, xt, carry)
+            return carry, carry[2]
+
+        z = jnp.zeros((B, d), jnp.float32)
+        init = (z, z, z, jnp.full((B, d), -1e30, jnp.float32))
+        carry, hs = jax.lax.scan(step, init, xc.swapaxes(0, 1))
+        h = hs.swapaxes(0, 1)                                       # (B,S,d)
+        new_state = None
+        if mode == "prefill":
+            tail = x[:, max(S - (cfg.conv_width - 1), 0):]
+            if tail.shape[1] < cfg.conv_width - 1:
+                tail = jnp.pad(tail, [(0, 0), (cfg.conv_width - 1 - tail.shape[1], 0), (0, 0)])
+            new_state = {"c": carry[0], "n": carry[1], "h": carry[2],
+                         "m": carry[3], "conv": tail.astype(jnp.dtype(cfg.act_dtype))}
+    return _slstm_ffn(params, h, x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU block (Griffin recurrent block)
+# ---------------------------------------------------------------------------
+
+def rglru_init(cfg: ModelConfig, key):
+    d, w = cfg.d_model, cfg.lru_width
+    pd = pdtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a = exp(-8*softplus(L)*r) lands in ~[0.9, 0.999]
+    u = jax.random.uniform(ks[5], (w,), jnp.float32, 0.1, 0.9)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _RG_C))
+    return {
+        "w_x": dense_init(ks[0], (d, w), pd),
+        "w_gate": dense_init(ks[1], (d, w), pd),
+        "conv": dense_init(ks[2], (cfg.conv_width, w), pd, scale=0.3),
+        "w_rg": dense_init(ks[3], (w, w), jnp.float32),
+        "w_ig": dense_init(ks[4], (w, w), jnp.float32),
+        "lam": lam,
+        "w_out": dense_init(jax.random.fold_in(key, 7), (w, d), pd),
+    }
+
+
+def rglru_state_shape(cfg: ModelConfig, batch: int):
+    w = cfg.lru_width
+    return {
+        "h": jax.ShapeDtypeStruct((batch, w), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, w),
+                                     jnp.dtype(cfg.act_dtype)),
+    }
+
+
+def apply_rglru(cfg: ModelConfig, params, x, *, mode: str, state=None):
+    B, S, d = x.shape
+    u = x @ params["w_x"]
+    g = jax.nn.gelu(x @ params["w_gate"])
+
+    if mode == "decode":
+        uc, conv_state = conv_step(u, params["conv"], state["conv"])
+        ucf = uc[:, 0].astype(jnp.float32)
+        r = jax.nn.sigmoid(ucf @ params["w_rg"])
+        i = jax.nn.sigmoid(ucf @ params["w_ig"])
+        log_a = -_RG_C * jax.nn.softplus(params["lam"]) * r
+        h = ops.rglru_step(i * ucf, log_a, state["h"])
+        y = h[:, None].astype(x.dtype)
+        new_state = {"h": h, "conv": conv_state}
+    else:
+        uc = causal_conv(u, params["conv"])
+        ucf = uc.astype(jnp.float32)
+        r = jax.nn.sigmoid(ucf @ params["w_rg"])
+        i = jax.nn.sigmoid(ucf @ params["w_ig"])
+        log_a = -_RG_C * jax.nn.softplus(params["lam"]) * r
+        h = ops.rglru_scan(i * ucf, log_a)                          # (B,S,w) f32
+        y = h.astype(x.dtype)
+        new_state = None
+        if mode == "prefill":
+            tail = u[:, max(S - (cfg.conv_width - 1), 0):]
+            if tail.shape[1] < cfg.conv_width - 1:
+                tail = jnp.pad(tail, [(0, 0), (cfg.conv_width - 1 - tail.shape[1], 0), (0, 0)])
+            new_state = {"h": h[:, -1], "conv": tail.astype(jnp.dtype(cfg.act_dtype))}
+    return (y * g) @ params["w_out"], new_state

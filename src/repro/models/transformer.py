@@ -1,0 +1,296 @@
+"""Model assembly: block zoo -> scanned segments -> decoder-only LM.
+
+Layers are grouped into segments of (pattern, repeats); parameters/states are
+stacked along a leading repeats axis and the segment body runs under
+``lax.scan`` (keeps HLO size O(pattern), critical for 94-96 layer configs),
+with ``jax.checkpoint`` rematerialization in training.
+
+Entry points produced by ``build_lm``:
+  init_params(rng)                     -> params pytree
+  loss_fn(params, batch)               -> (loss, metrics)
+  prefill(params, batch, max_len)      -> (last_logits, decode_state)
+  decode_step(params, state, tok, pos) -> (logits, decode_state)
+  decode_state_shape(batch, max_len)   -> ShapeDtypeStruct pytree (dry-run)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, LOCAL_ATTN, MLSTM, RGLRU, SLSTM, ModelConfig
+from . import attention as attn
+from . import ssm
+from .layers import (apply_mlp, apply_norm, cross_entropy, dtype_of,
+                     embed_init, embed_tokens, mlp_init, norm_init,
+                     sinusoidal_positions, unembed)
+from .moe import apply_moe, moe_init
+
+
+# ---------------------------------------------------------------------------
+# Single block: init / state-shape / apply
+# ---------------------------------------------------------------------------
+
+def block_init(cfg: ModelConfig, kind: str, key, *, causal: bool = True,
+               cross: bool = False):
+    ks = jax.random.split(key, 4)
+    if kind in (ATTN, LOCAL_ATTN):
+        p = {"ln1": norm_init(cfg), "attn": attn.attn_init(cfg, ks[0])}
+        if cross:
+            p["ln_x"] = norm_init(cfg)
+            p["xattn"] = attn.attn_init(cfg, ks[3])
+        if cfg.moe is not None:
+            p["ln2"] = norm_init(cfg)
+            p["moe"] = moe_init(cfg, ks[1])
+        elif cfg.d_ff:
+            p["ln2"] = norm_init(cfg)
+            p["mlp"] = mlp_init(cfg, ks[1])
+        return p
+    if kind == MLSTM:
+        return {"ln": norm_init(cfg), "cell": ssm.mlstm_init(cfg, ks[0])}
+    if kind == SLSTM:
+        return {"ln": norm_init(cfg), "cell": ssm.slstm_init(cfg, ks[0])}
+    if kind == RGLRU:
+        return {"ln1": norm_init(cfg), "cell": ssm.rglru_init(cfg, ks[0]),
+                "ln2": norm_init(cfg), "mlp": mlp_init(cfg, ks[1])}
+    raise ValueError(kind)
+
+
+def block_state_shape(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                      cross: bool = False):
+    if kind in (ATTN, LOCAL_ATTN):
+        window = cfg.window if kind == ATTN else cfg.local_window
+        st = {"kv": attn.kv_cache_shape(cfg, batch, max_len, window)}
+        if cross:
+            dt = jnp.dtype(cfg.act_dtype)
+            kvd = (batch, cfg.enc_seq, cfg.num_kv_heads, cfg.head_dim)
+            st["ck"] = jax.ShapeDtypeStruct(kvd, dt)
+            st["cv"] = jax.ShapeDtypeStruct(kvd, dt)
+        return st
+    if kind == MLSTM:
+        return {"cell": ssm.mlstm_state_shape(cfg, batch)}
+    if kind == SLSTM:
+        return {"cell": ssm.slstm_state_shape(cfg, batch)}
+    if kind == RGLRU:
+        return {"cell": ssm.rglru_state_shape(cfg, batch)}
+    raise ValueError(kind)
+
+
+def block_apply(cfg: ModelConfig, kind: str, params, x, *, mode: str,
+                state=None, pos=None, positions=None, max_len: int = 0,
+                enc_out=None, causal: bool = True):
+    """Returns (x, new_state, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in (ATTN, LOCAL_ATTN):
+        window = cfg.window if kind == ATTN else cfg.local_window
+        h, kv = attn.apply_attention(
+            cfg, params["attn"], apply_norm(cfg, params["ln1"], x), mode=mode,
+            window=window, cache=None if state is None else state["kv"],
+            pos=pos, positions=positions, max_len=max_len, causal=causal)
+        x = x + h
+        new_state = None if kv is None else {"kv": kv}
+        if "xattn" in params:
+            if mode == "decode":
+                ck, cv = state["ck"], state["cv"]
+                xh = _cross_decode(cfg, params["xattn"],
+                                   apply_norm(cfg, params["ln_x"], x), ck, cv)
+            else:
+                xh, _ = attn.apply_attention(
+                    cfg, params["xattn"], apply_norm(cfg, params["ln_x"], x),
+                    mode="train", cross_kv=(enc_out, enc_out), causal=False)
+                if mode == "prefill":
+                    ck = (enc_out @ params["xattn"]["wk"]).reshape(
+                        enc_out.shape[0], enc_out.shape[1], cfg.num_kv_heads, cfg.head_dim)
+                    cv = (enc_out @ params["xattn"]["wv"]).reshape(
+                        enc_out.shape[0], enc_out.shape[1], cfg.num_kv_heads, cfg.head_dim)
+                    new_state = dict(new_state or {}, ck=ck.astype(dtype_of(cfg)),
+                                     cv=cv.astype(dtype_of(cfg)))
+            x = x + xh
+            if mode == "decode":
+                new_state = dict(new_state or {}, ck=state["ck"], cv=state["cv"])
+        if "moe" in params:
+            h, aux = apply_moe(cfg, params["moe"], apply_norm(cfg, params["ln2"], x))
+            x = x + h
+        elif "mlp" in params:
+            x = x + apply_mlp(cfg, params["mlp"], apply_norm(cfg, params["ln2"], x))
+        return x, new_state, aux
+
+    if kind in (MLSTM, SLSTM):
+        fn = ssm.apply_mlstm if kind == MLSTM else ssm.apply_slstm
+        h, st = fn(cfg, params["cell"], apply_norm(cfg, params["ln"], x),
+                   mode=mode, state=None if state is None else state["cell"])
+        return x + h, None if st is None else {"cell": st}, aux
+
+    if kind == RGLRU:
+        h, st = ssm.apply_rglru(cfg, params["cell"],
+                                apply_norm(cfg, params["ln1"], x), mode=mode,
+                                state=None if state is None else state["cell"])
+        x = x + h
+        x = x + apply_mlp(cfg, params["mlp"], apply_norm(cfg, params["ln2"], x))
+        return x, None if st is None else {"cell": st}, aux
+    raise ValueError(kind)
+
+
+def _cross_decode(cfg, params, x, ck, cv):
+    B, S, d = x.shape
+    q = (x @ params["wq"]).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    pos = jnp.arange(ck.shape[1])
+    out = attn.decode_mha(q, ck, cv, pos, cur_pos=jnp.int32(ck.shape[1] - 1))
+    return out.reshape(B, S, cfg.num_heads * cfg.head_dim) @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Segments: stacked params + lax.scan over repeats
+# ---------------------------------------------------------------------------
+
+def segments_init(cfg: ModelConfig, key, *, causal: bool = True,
+                  cross: bool = False):
+    segs = []
+    for si, (pattern, repeats) in enumerate(cfg.layout):
+        kseg = jax.random.fold_in(key, si)
+        stacked = []
+        for bi, kind in enumerate(pattern):
+            kk = jax.random.fold_in(kseg, bi)
+            init_one = lambda k, kind=kind: block_init(cfg, kind, k,
+                                                       causal=causal, cross=cross)
+            stacked.append(jax.vmap(init_one)(jax.random.split(kk, repeats)))
+        segs.append(tuple(stacked))
+    return tuple(segs)
+
+
+def segments_state_shape(cfg: ModelConfig, batch: int, max_len: int,
+                         cross: bool = False):
+    segs = []
+    for pattern, repeats in cfg.layout:
+        st = tuple(
+            jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((repeats,) + s.shape, s.dtype),
+                block_state_shape(cfg, kind, batch, max_len, cross),
+                is_leaf=lambda s: isinstance(s, jax.ShapeDtypeStruct))
+            for kind in pattern)
+        segs.append(st)
+    return tuple(segs)
+
+
+def segments_apply(cfg: ModelConfig, seg_params, x, *, mode: str,
+                   states=None, pos=None, positions=None, max_len: int = 0,
+                   enc_out=None, causal: bool = True):
+    """Run all segments.  Returns (x, new_states, aux)."""
+    total_aux = jnp.zeros((), jnp.float32)
+    new_states = []
+    for si, (pattern, repeats) in enumerate(cfg.layout):
+        params = seg_params[si]
+        st = None if states is None else states[si]
+        # remat grouping (train): scan over repeats/g steps of g pattern
+        # instances each — g x fewer stored checkpoints, g x recompute depth.
+        group = cfg.remat_group if (mode == "train" and cfg.remat
+                                    and repeats % max(cfg.remat_group, 1) == 0) \
+            else 1
+
+        def apply_one(xx, aux, p_i, s_i):
+            outs = []
+            for bi, kind in enumerate(pattern):
+                xx, ns, a = block_apply(cfg, kind, p_i[bi], xx, mode=mode,
+                                        state=None if s_i is None else s_i[bi],
+                                        pos=pos, positions=positions,
+                                        max_len=max_len, enc_out=enc_out,
+                                        causal=causal)
+                outs.append(ns)
+                aux = aux + a
+            return xx, aux, tuple(outs)
+
+        def body(carry, xs):
+            xx, aux = carry
+            if group > 1:
+                for j in range(group):
+                    p_j = jax.tree.map(lambda a: a[j], xs)
+                    xx, aux, _ = apply_one(xx, aux, p_j, None)
+                return (xx, aux), None
+            p_i = xs[: len(pattern)]
+            s_i = None if st is None else xs[len(pattern):]
+            xx, aux, outs = apply_one(xx, aux, p_i, s_i)
+            return (xx, aux), outs if mode != "train" else None
+
+        if cfg.remat and mode == "train":
+            body = jax.checkpoint(body, prevent_cse=False)
+        if group > 1:
+            xs = jax.tree.map(
+                lambda a: a.reshape((repeats // group, group) + a.shape[1:]),
+                params)
+        else:
+            xs = params if st is None else params + st
+        (x, total_aux), seg_out = jax.lax.scan(
+            body, (x, total_aux), xs)
+        new_states.append(seg_out)
+    return x, (tuple(new_states) if mode != "train" else None), total_aux
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only LM
+# ---------------------------------------------------------------------------
+
+def build_lm(cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        from .encdec import build_encdec
+        return build_encdec(cfg)
+
+    def init_params(rng):
+        k1, k2, k3 = jax.random.split(rng, 3)
+        return {
+            "embed": embed_init(cfg, k1),
+            "blocks": segments_init(cfg, k2),
+            "ln_f": norm_init(cfg),
+        }
+
+    def _inputs_to_x(params, batch, mode):
+        positions = batch.get("positions") if cfg.position_inputs else None
+        if cfg.embeds_input:
+            x = batch["embeds"].astype(dtype_of(cfg))
+        else:
+            x = embed_tokens(cfg, params["embed"], batch["tokens"])
+        return x, positions
+
+    def _backbone(params, x, *, mode, states=None, pos=None, positions=None,
+                  max_len=0):
+        x, new_states, aux = segments_apply(
+            cfg, params["blocks"], x, mode=mode, states=states, pos=pos,
+            positions=positions, max_len=max_len)
+        x = apply_norm(cfg, params["ln_f"], x)
+        return x, new_states, aux
+
+    def loss_fn(params, batch):
+        x, positions = _inputs_to_x(params, batch, "train")
+        x, _, aux = _backbone(params, x, mode="train", positions=positions)
+        logits = unembed(cfg, params["embed"], x)
+        mask = batch.get("loss_mask")
+        loss = cross_entropy(logits, batch["labels"], mask)
+        total = loss + 0.01 * aux
+        return total, {"loss": loss, "aux_loss": aux,
+                       "tokens": jnp.asarray(batch["labels"].size, jnp.float32)}
+
+    def prefill(params, batch, max_len: int):
+        x, positions = _inputs_to_x(params, batch, "prefill")
+        x, states, _ = _backbone(params, x, mode="prefill", positions=positions,
+                                 max_len=max_len)
+        logits = unembed(cfg, params["embed"], x[:, -1:])
+        return logits[:, 0], states
+
+    def decode_step(params, states, tokens, pos, positions=None):
+        """tokens (B,) int32 (or embeds (B,d) for stub frontends); pos scalar."""
+        if cfg.embeds_input:
+            x = tokens.astype(dtype_of(cfg))[:, None, :]
+        else:
+            x = embed_tokens(cfg, params["embed"], tokens[:, None])
+        x, states, _ = _backbone(params, x, mode="decode", states=states,
+                                 pos=pos, positions=positions)
+        logits = unembed(cfg, params["embed"], x)
+        return logits[:, 0], states
+
+    def decode_state_shape(batch: int, max_len: int):
+        return segments_state_shape(cfg, batch, max_len)
+
+    return dict(config=cfg, init_params=init_params, loss_fn=loss_fn,
+                prefill=prefill, decode_step=decode_step,
+                decode_state_shape=decode_state_shape)

@@ -1,0 +1,4 @@
+from .optimizer import adafactor, adamw, clip_by_global_norm, make_optimizer, warmup_cosine
+
+__all__ = ["adamw", "adafactor", "make_optimizer", "warmup_cosine",
+           "clip_by_global_norm"]

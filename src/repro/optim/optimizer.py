@@ -1,0 +1,156 @@
+"""Optimizers (no external deps): AdamW and Adafactor, schedules, clipping.
+
+Interface mirrors optax: ``opt.init(params) -> state``,
+``opt.update(grads, state, params) -> (updates, state)`` where updates are
+*added* to params.  Moment dtypes are configurable so big-model configs
+(nemotron-340b, qwen3-235b) fit the 16 GB/chip HBM budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, new_state)
+
+
+def warmup_cosine(peak_lr: float, warmup: int = 100, total: int = 10_000,
+                  floor: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+        warm = peak_lr * (step + 1) / warmup
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+def adamw(lr: Callable, *, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          moment_dtype="float32") -> Optimizer:
+    mdt = jnp.dtype(moment_dtype)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, mdt)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        cf = c.astype(jnp.float32)
+        bc1 = 1 - b1 ** cf
+        bc2 = 1 - b2 ** cf
+        step_lr = lr(c)
+
+        treedef = jax.tree.structure(params)
+        flat_p = jax.tree.leaves(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        us, ms, vs = [], [], []
+        for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+            gf = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+            u = -step_lr * (m_new / bc1 / (jnp.sqrt(v_new / bc2) + eps)
+                            + weight_decay * p.astype(jnp.float32))
+            us.append(u.astype(p.dtype))
+            ms.append(m_new.astype(mdt))
+            vs.append(v_new.astype(mdt))
+        unf = lambda leaves: jax.tree.unflatten(treedef, leaves)
+        return unf(us), {"m": unf(ms), "v": unf(vs), "count": c}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr: Callable, *, eps=1e-30, clip_threshold=1.0, decay=0.8,
+              momentum: Optional[float] = 0.9, momentum_dtype="bfloat16",
+              weight_decay=0.0) -> Optimizer:
+    """Factored second moments for >=2D params; optional bf16 momentum.
+
+    Second-moment factors are stored as a flat list aligned with
+    ``jax.tree.leaves(params)`` (leaf-aligned lists avoid tree-structure
+    mismatches between params and the ragged factored state).
+    """
+    mdt = jnp.dtype(momentum_dtype)
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        vs = []
+        for p in jax.tree.leaves(params):
+            if _factored(p):
+                vs.append({"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                           "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)})
+            else:
+                vs.append({"v": jnp.zeros(p.shape, jnp.float32)})
+        st = {"v": vs, "count": jnp.zeros((), jnp.int32)}
+        if momentum is not None:
+            st["m"] = jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params)
+        return st
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        cf = c.astype(jnp.float32)
+        beta2 = 1.0 - cf ** (-decay)
+        step_lr = lr(c)
+
+        treedef = jax.tree.structure(params)
+        flat_p = jax.tree.leaves(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = (treedef.flatten_up_to(state["m"]) if momentum is not None
+                  else [None] * len(flat_p))
+
+        new_u, new_v, new_m = [], [], []
+        for g, v, p, m in zip(flat_g, state["v"], flat_p, flat_m):
+            gf = jnp.square(g.astype(jnp.float32)) + eps
+            if _factored(p):
+                vr = beta2 * v["vr"] + (1 - beta2) * jnp.mean(gf, axis=-1)
+                vc = beta2 * v["vc"] + (1 - beta2) * jnp.mean(gf, axis=-2)
+                rfac = jax.lax.rsqrt(vr / jnp.maximum(
+                    jnp.mean(vr, axis=-1, keepdims=True), eps))[..., None]
+                cfac = jax.lax.rsqrt(vc)[..., None, :]   # (..., 1, last)
+                u = g.astype(jnp.float32) * rfac * cfac
+                v_out = {"vr": vr, "vc": vc}
+            else:
+                vv = beta2 * v["v"] + (1 - beta2) * gf
+                u = g.astype(jnp.float32) * jax.lax.rsqrt(vv)
+                v_out = {"v": vv}
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            if momentum is not None:
+                mf = momentum * m.astype(jnp.float32) + (1 - momentum) * u
+                u = mf
+                new_m.append(mf.astype(mdt))
+            u = -step_lr * (u + weight_decay * p.astype(jnp.float32))
+            new_u.append(u.astype(p.dtype))
+            new_v.append(v_out)
+
+        new = {"v": new_v, "count": c}
+        if momentum is not None:
+            new["m"] = jax.tree.unflatten(treedef, new_m)
+        return jax.tree.unflatten(treedef, new_u), new
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, peak_lr: float = 3e-4, **kw) -> Optimizer:
+    lr = warmup_cosine(peak_lr)
+    if name == "adamw":
+        return adamw(lr, **kw)
+    if name == "adafactor":
+        return adafactor(lr, **kw)
+    raise ValueError(name)

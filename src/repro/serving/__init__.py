@@ -1,0 +1,4 @@
+from .kv_session import LarkSessionStore
+from .serve_loop import ServeLoop
+
+__all__ = ["LarkSessionStore", "ServeLoop"]

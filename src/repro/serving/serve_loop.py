@@ -1,0 +1,61 @@
+"""Batched serving driver: prefill + decode with session checkpointing."""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import build_model
+from .kv_session import LarkSessionStore
+
+
+class ServeLoop:
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 256,
+                 session_store: Optional[LarkSessionStore] = None,
+                 checkpoint_every: int = 8):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params
+        self.max_len = max_len
+        self.sessions = session_store
+        self.checkpoint_every = checkpoint_every
+        self._prefill = jax.jit(self.model["prefill"],
+                                static_argnames="max_len")
+        self._decode = jax.jit(self.model["decode_step"])
+
+    def generate(self, batch: Dict, steps: int, session_id: str = "s0",
+                 greedy: bool = True) -> np.ndarray:
+        logits, state = self._prefill(self.params, batch, max_len=self.max_len)
+        prompt_len = (batch["tokens"].shape[1] if "tokens" in batch
+                      else batch["embeds"].shape[1])
+        toks: List[np.ndarray] = []
+        cur = jnp.argmax(logits, -1).astype(jnp.int32)
+        for i in range(steps):
+            pos = jnp.int32(prompt_len + i)
+            logits, state = self._decode(self.params, state, cur, pos)
+            cur = jnp.argmax(logits, -1).astype(jnp.int32)
+            toks.append(np.asarray(cur))
+            if self.sessions is not None and (i + 1) % self.checkpoint_every == 0:
+                self.sessions.save_session(session_id, state,
+                                           np.stack(toks, 1), prompt_len + i + 1)
+        return np.stack(toks, axis=1)
+
+    def resume(self, session_id: str, steps: int) -> Optional[np.ndarray]:
+        """Continue a session from its last committed decode state."""
+        if self.sessions is None:
+            return None
+        ok, blob = self.sessions.load_session(session_id)
+        if not ok or blob is None:
+            return None
+        state = jax.tree.map(jnp.asarray, blob["state"])
+        toks = [blob["tokens"][:, i] for i in range(blob["tokens"].shape[1])]
+        cur = jnp.asarray(toks[-1])
+        for i in range(steps):
+            pos = jnp.int32(blob["pos"] + i)
+            logits, state = self._decode(self.params, state, cur, pos)
+            cur = jnp.argmax(logits, -1).astype(jnp.int32)
+            toks.append(np.asarray(cur))
+        return np.stack(toks, axis=1)

@@ -1,0 +1,3 @@
+from .train_loop import make_train_step, make_serve_steps
+
+__all__ = ["make_train_step", "make_serve_steps"]

@@ -1,0 +1,7 @@
+import os
+import sys
+from pathlib import Path
+
+# Tests see the single real CPU device (the 512-device override is reserved
+# for the dry-run entrypoint, per the assignment).
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))

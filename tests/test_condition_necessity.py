@@ -1,0 +1,152 @@
+"""Appendix A: each Replica-Write guard condition is necessary.
+
+Each example replays the paper's schedule twice: with the full protocol the
+delayed/stale write is rejected; with exactly one condition disabled it is
+accepted — producing the safety violation the paper describes (a version
+the serving leader never observed becomes durable/'replicated').
+"""
+import pytest
+
+from repro.core.messages import DupResReply, DupResReq, ReplicaWrite
+from repro.core.simulator import LarkSim
+
+
+def _deliver_dupres(sim, rounds=3):
+    for _ in range(rounds):
+        for m in sim.net.pop_matching(
+                lambda m: isinstance(m, (DupResReq, DupResReply))):
+            sim.deliver(m)
+
+
+def example1(disable=()):
+    """RF=2, N1..N3 (here 0..2): delayed write accepted unless
+    LeaderInCluster."""
+    sim = LarkSim(num_nodes=3, rf=2, num_partitions=1,
+                  disable_conditions=disable)
+    sim.set_succession(0, [0, 1, 2])
+    sim.recluster(); sim.settle(); sim.run_migrations()
+    sim.fail_node(1); sim.settle()      # cluster {0 (full), 2}
+    sim.client_write(0, "k", "V")
+    held = sim.net.pop_matching(
+        lambda m: isinstance(m, ReplicaWrite) and m.dst == 2)
+    assert held
+    sim.settle()
+    sim.recover_node(1, recluster=False)
+    sim.fail_node(0, recluster=False)
+    sim.recluster(); sim.settle()       # cluster {1, 2}; 1 becomes leader
+    assert sim.leader_of(0) == 1
+    sim.client_write(0, "k", "VP")      # dup-res first
+    _deliver_dupres(sim)
+    for m in held:                      # delayed write for V arrives
+        sim.deliver(m)
+    sim.settle()
+    return [e for e in sim.nodes[2].accept_log if e[2] == "V"]
+
+
+def test_example1_leader_in_cluster():
+    assert example1() == []
+    bad = example1(disable=("LeaderInCluster",))
+    assert bad and bad[0][3] == "replicated"
+
+
+def example2(disable=()):
+    """Example 2 (LeaderNotTooOld), condition-matrix form.
+
+    Note (also DESIGN.md §9): replaying the paper's Example-2 schedule
+    literally, the delayed write is *accepted via SameLeaderRegime* — the
+    stale replica's LR still carries the old leader's election regime
+    because leader retention propagates LR unchanged, so LRM == LR.
+    LeaderNotTooOld binds when the leader's election era HAS advanced in the
+    replica's view (e.g. an acting-leader re-election bumps LR to the new
+    PR) while the replica itself lags one regime.  We construct exactly that
+    state and check the condition matrix of Algorithm 3.
+    """
+    from repro.core.node import LarkNode
+    from repro.core.succession import succession_list
+    succ = {0: [0, 1, 2, 3, 4]}
+    n2 = LarkNode(2, [0, 1, 2, 3, 4], succ, rf=3,
+                  disable_conditions=disable)
+    # node2's durable state: rebalanced at regime 2 where node0 was
+    # *re-elected* (acting leader after slipping out of the replica set),
+    # so LR was set to the new PR (= 2).  node2 has since seen ER = 3
+    # (clustering updated the exchange number, rebalance deferred).
+    st = n2.p[0]
+    st.pr = 2
+    st.lr = 2
+    st.leader = 0
+    st.nodes_in_cluster = frozenset({0, 1, 2, 3, 4})
+    st.is_replica = True
+    st.available = True
+    n2.er = 3
+    # delayed write from node0's FIRST leadership era: RR = 1, LRM = 1
+    msg = ReplicaWrite(src=0, dst=2, op_id=99, partition=0, key="k",
+                       leader=0, rr=1, lc=(1, 0), lrm=1, value="V")
+    n2.handle(msg)
+    return [e for e in n2.accept_log if e[2] == "V"]
+
+
+def test_example2_leader_not_too_old():
+    # all conditions on: RR+1 = 2 < ER = 3 and LRM(1) != LR(2) -> rejected
+    assert example2() == []
+    # disabling LeaderNotTooOld lets the two-regime-old write through
+    bad = example2(disable=("LeaderNotTooOld",))
+    assert bad
+
+
+def example3(disable=()):
+    """RF=3: a node that lags regimes (LeaderNotTooNew) must not accept."""
+    sim = LarkSim(num_nodes=5, rf=3, num_partitions=1,
+                  disable_conditions=disable)
+    sim.set_succession(0, [0, 1, 2, 3, 4])
+    sim.recluster(); sim.settle(); sim.run_migrations()    # regime 1
+    # regime 2: {1, 2, 3}: N0, N4 down; node2 defers rebalance (PR stays 1)
+    sim.fail_node(0, recluster=False)
+    sim.fail_node(4, recluster=False)
+    sim.recluster(defer_rebalance=[2]); sim.settle()
+    assert sim.leader_of(0) == 1
+    sim.client_write(0, "k", "V")       # node1's write; to node2 delayed
+    held = sim.net.pop_matching(
+        lambda m: isinstance(m, ReplicaWrite) and m.dst == 2)
+    sim.settle()
+    # regime 3: {0, 2, 4}: node2 still not rebalanced (PR=1, ER=3)
+    sim.recover_node(0, recluster=False)
+    sim.recover_node(4, recluster=False)
+    sim.fail_node(1, recluster=False)
+    sim.fail_node(3, recluster=False)
+    sim.recluster(defer_rebalance=[2]); sim.settle()
+    assert sim.leader_of(0) == 0
+    sim.client_write(0, "k", "VP")
+    _deliver_dupres(sim)
+    for m in held:
+        sim.deliver(m)
+    sim.settle()
+    return [e for e in sim.nodes[2].accept_log if e[2] == "V"]
+
+
+def test_example3_leader_not_too_new():
+    assert example3() == []
+    bad = example3(disable=("LeaderNotTooNew",))
+    assert bad
+
+
+def example4(disable=()):
+    """RF=2, N1..N4 (0..3): a non-replica must not accept (NodeInReplicaSet),
+    else it silently holds data nobody will dup-res."""
+    sim = LarkSim(num_nodes=4, rf=2, num_partitions=1,
+                  disable_conditions=disable)
+    sim.set_succession(0, [0, 1, 2, 3])
+    sim.recluster(); sim.settle(); sim.run_migrations()    # regime 1: {0,1} reps
+    # regime 2: {0, 3}: node3 defers rebalance (PR=1, ER=2): NOT a replica
+    # in its own regime-1 view ({0,1,2,3} -> replicas {0,1})
+    sim.fail_node(1, recluster=False)
+    sim.fail_node(2, recluster=False)
+    sim.recluster(defer_rebalance=[3]); sim.settle()
+    sim.client_write(0, "k", "V")
+    sim.settle()
+    return [e for e in sim.nodes[3].accept_log if e[2] == "V"]
+
+
+def test_example4_node_in_replica_set():
+    assert example4() == []
+    bad = example4(disable=("NodeInReplicaSet",))
+    assert bad

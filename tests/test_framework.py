@@ -1,0 +1,99 @@
+"""Framework substrate: data determinism, optimizers, elastic, serving."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import reduced_config
+from repro.data import SyntheticLMData
+from repro.optim import adafactor, adamw, clip_by_global_norm, warmup_cosine
+from repro.serving import LarkSessionStore, ServeLoop
+from repro.training.elastic import ElasticTrainer
+
+
+def test_data_deterministic_and_sharded():
+    cfg = reduced_config("smollm_360m")
+    d = SyntheticLMData(cfg, batch=8, seq=16)
+    b1 = d.batch_at(3)
+    b2 = d.batch_at(3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # host shards tile the global batch
+    h0 = d.batch_at(3, host_id=0, num_hosts=2)
+    h1 = d.batch_at(3, host_id=1, num_hosts=2)
+    np.testing.assert_array_equal(
+        np.concatenate([h0["tokens"], h1["tokens"]]), b1["tokens"])
+    assert b1["labels"][0, 0] == b1["tokens"][0, 1]  # next-token labels
+
+
+@pytest.mark.parametrize("opt_name", ["adamw", "adafactor"])
+def test_optimizers_minimize_quadratic(opt_name):
+    lr = warmup_cosine(0.1, warmup=5, total=200)
+    opt = adamw(lr) if opt_name == "adamw" else adafactor(lr)
+    params = {"w": jnp.asarray([[3.0, -2.0], [1.0, 4.0]])}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"]))
+
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        updates, state = opt.update(g, state, params)
+        params = jax.tree.map(lambda p, u: p + u, params, updates)
+    assert float(loss(params)) < 0.05
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert float(gn) == pytest.approx(20.0)
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0, rel=1e-3)
+
+
+def test_elastic_trainer_remesh_and_restore():
+    calls = []
+
+    def make_step(workers):
+        calls.append(tuple(workers))
+        return lambda x: x + len(workers)
+
+    et = ElasticTrainer(4, make_step)
+    state = {"x": np.float32(1.0)}
+    assert et.checkpoint(state)
+    assert et.run_step(1) == 5
+    restored = et.on_membership_change([0, 1, 2], state, state)
+    assert et.state.regime == 2
+    assert calls[-1] == (0, 1, 2)
+    assert float(restored["x"]) == 1.0          # restored from LARK store
+    assert et.run_step(1) == 4                  # remeshed to 3 workers
+
+
+def test_serve_resume_matches_uninterrupted():
+    cfg = reduced_config("smollm_360m")
+    from repro.models import build_model
+    model = build_model(cfg)
+    params = model["init_params"](jax.random.PRNGKey(0))
+    sess = LarkSessionStore(num_nodes=4, rf=2)
+    loop = ServeLoop(cfg, params, max_len=48, session_store=sess,
+                     checkpoint_every=4)
+    batch = {"tokens": jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 8)),
+        jnp.int32)}
+    full = loop.generate(batch, steps=8, session_id="s")
+    # session checkpointed at step 8: resume must match continued generation
+    sess.fail_server(0)                         # failover
+    resumed = loop.resume("s", steps=4)
+    assert resumed is not None
+    np.testing.assert_array_equal(resumed[:, :8], full)
+
+
+def test_compression_error_feedback_identity():
+    """int8 EF quantization: single-pod mesh means passthrough."""
+    import jax
+    from jax.sharding import Mesh
+    from repro.training.compression import (compressed_pod_psum,
+                                            init_error_state)
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    g = {"w": jnp.asarray([1.0, -2.0, 3.0])}
+    e = init_error_state(g)
+    out, e2 = compressed_pod_psum(g, e, mesh)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(g["w"]))

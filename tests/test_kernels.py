@@ -1,0 +1,140 @@
+"""Per-kernel interpret-mode validation vs pure-jnp oracles: shape/dtype
+sweeps + hypothesis properties (assignment deliverable c)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mlstm_chunk import mlstm_chunkwise as mlstm_kernel
+from repro.kernels.pac_eval import pac_eval as pac_kernel
+from repro.kernels.rglru_scan import rglru_scan as rglru_kernel
+
+RNG = np.random.default_rng(0)
+
+
+def randn(shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.standard_normal(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,S,D", [(1, 1, 128, 32), (2, 3, 256, 64),
+                                     (1, 2, 512, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64), (False, 0)])
+def test_flash_attention_sweep(B, H, S, D, dtype, causal, window):
+    q, k, v = randn((B, H, S, D), dtype), randn((B, H, S, D), dtype), \
+        randn((B, H, S, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          interpret=True, block_q=64, block_k=64)
+    t = lambda x: x.transpose(0, 2, 1, 3)
+    want = t(ref.attention_ref(t(q), t(k), t(v), causal=causal, window=window))
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_uneven_blocks():
+    q, k, v = (randn((1, 1, 192, 32)) for _ in range(3))
+    out = flash_attention(q, k, v, interpret=True, block_q=64, block_k=64)
+    t = lambda x: x.transpose(0, 2, 1, 3)
+    want = t(ref.attention_ref(t(q), t(k), t(v)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM chunkwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,S,D,chunk", [(1, 1, 128, 16, 32),
+                                           (2, 2, 256, 32, 64),
+                                           (1, 2, 256, 64, 128)])
+def test_mlstm_kernel_vs_ref(B, H, S, D, chunk):
+    q, k, v = (randn((B, H, S, D)) for _ in range(3))
+    lf = jnp.asarray(jax.nn.log_sigmoid(randn((B, H, S)) * 2 + 2))
+    li = randn((B, H, S))
+    hk, _ = mlstm_kernel(q, k, v, lf, li, chunk=chunk, interpret=True)
+    hr, _ = ref.mlstm_chunkwise(q, k, v, lf, li, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(hk), np.asarray(hr),
+                               atol=5e-5, rtol=5e-4)
+
+
+def test_mlstm_chunkwise_matches_stepwise():
+    B, H, S, D = 1, 2, 96, 16
+    q, k, v = (randn((B, H, S, D)) for _ in range(3))
+    lf = jnp.asarray(jax.nn.log_sigmoid(randn((B, H, S)) + 1))
+    li = randn((B, H, S))
+    hr, (C, n, m) = ref.mlstm_chunkwise(q, k, v, lf, li, chunk=32)
+    state = (jnp.zeros((B, H, D, D)), jnp.zeros((B, H, D)),
+             jnp.full((B, H), -1e30))
+    hs = []
+    for t in range(S):
+        h1, state = ref.mlstm_step(q[:, :, t], k[:, :, t], v[:, :, t],
+                                   lf[:, :, t], li[:, :, t], state)
+        hs.append(h1)
+    np.testing.assert_allclose(np.asarray(hr), np.asarray(jnp.stack(hs, 2)),
+                               atol=2e-4, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(C), np.asarray(state[0]),
+                               atol=2e-4, rtol=2e-3)
+
+
+def test_mlstm_chunk_size_invariance():
+    B, H, S, D = 1, 1, 128, 16
+    q, k, v = (randn((B, H, S, D)) for _ in range(3))
+    lf = jnp.asarray(jax.nn.log_sigmoid(randn((B, H, S))))
+    li = randn((B, H, S))
+    h32, _ = ref.mlstm_chunkwise(q, k, v, lf, li, chunk=32)
+    h128, _ = ref.mlstm_chunkwise(q, k, v, lf, li, chunk=128)
+    np.testing.assert_allclose(np.asarray(h32), np.asarray(h128),
+                               atol=5e-5, rtol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,W,bs,bw", [(1, 256, 128, 64, 128),
+                                         (2, 512, 256, 128, 128)])
+def test_rglru_kernel_vs_ref(B, S, W, bs, bw):
+    x = randn((B, S, W))
+    la = -jnp.asarray(RNG.uniform(0.01, 2.0, (B, S, W)), jnp.float32)
+    hk = rglru_kernel(x, la, block_s=bs, block_w=bw, interpret=True)
+    hr = ref.rglru_scan_ref(x, la)
+    np.testing.assert_allclose(np.asarray(hk), np.asarray(hr),
+                               atol=1e-5, rtol=1e-4)
+
+
+def test_rglru_scan_matches_stepwise():
+    B, S, W = 2, 64, 8
+    x = randn((B, S, W))
+    la = -jnp.asarray(RNG.uniform(0.01, 1.0, (B, S, W)), jnp.float32)
+    hr = ref.rglru_scan_ref(x, la)
+    h = jnp.zeros((B, W))
+    for t in range(S):
+        h = ref.rglru_step(x[:, t], la[:, t], h)
+    np.testing.assert_allclose(np.asarray(hr[:, -1]), np.asarray(h),
+                               atol=1e-5, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# PAC kernel
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 4))
+@settings(max_examples=20, deadline=None)
+def test_pac_kernel_vs_ref_random(seed, rf):
+    rng = np.random.default_rng(seed)
+    P, n, npad = 256, 155, 256
+    up = jnp.asarray(rng.random((P, npad)) < rng.uniform(0.5, 0.99))
+    full = jnp.asarray(rng.random((P, npad)) < 0.4)
+    voters = 2 * (rf - 1) + 1
+    outs_k = pac_kernel(up, full, rf=rf, voters=voters, n_real=n,
+                        block_p=128, interpret=True)
+    outs_r = ref.pac_eval_rank_ref(up, full, rf=rf, voters=voters, n_real=n)
+    for a, b in zip(outs_k, outs_r):
+        assert bool(jnp.all(a == b))

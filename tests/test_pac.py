@@ -1,0 +1,111 @@
+"""PAC conditions (§3) and safety lemmas 3.1-3.4 as hypothesis properties."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pac import (ALL_CONDITIONS, evaluate_pac,
+                            majority_quorum_available)
+from repro.core.succession import succession_list
+
+N = 9
+RF = 3
+ROSTER = list(range(N))
+
+
+def pac(cluster, pid=0, full=frozenset(), conditions=ALL_CONDITIONS, rf=RF):
+    succ = succession_list(pid, ROSTER)
+    return evaluate_pac(cluster=set(cluster), roster=ROSTER, succession=succ,
+                        rf=rf, full_nodes=set(full), conditions=conditions)
+
+
+def test_super_majority():
+    succ = succession_list(0, ROSTER)
+    missing2 = set(ROSTER) - set(succ[:2])      # 7 nodes, 2 roster reps gone
+    assert pac(missing2).available
+    assert pac(missing2).condition == "super_majority"
+    missing3 = set(ROSTER) - set(succ[:3])      # RF nodes missing
+    assert pac(missing3, full=set()).available is False
+
+
+def test_all_roster_replicas():
+    succ = succession_list(0, ROSTER)
+    just_reps = set(succ[:RF])                  # minority but all roster reps
+    res = pac(just_reps)
+    assert res.available and res.condition == "all_roster_replicas"
+
+
+def test_simple_majority_needs_full_and_roster_rep():
+    succ = succession_list(0, ROSTER)
+    # majority present, only the LAST roster replica present, spare is full
+    cluster = set(succ[2:3]) | set(succ[RF:RF + 4])
+    assert len(cluster) == 5
+    assert not pac(cluster, conditions=("simple_majority",)).available
+    assert pac(cluster, full={succ[RF]},
+               conditions=("simple_majority",)).available
+
+
+def test_half_roster_requires_leader():
+    succ = succession_list(0, ROSTER[:8])
+    roster8 = ROSTER[:8]
+
+    def pac8(cluster, full=frozenset(), conditions=ALL_CONDITIONS):
+        return evaluate_pac(cluster=set(cluster), roster=roster8,
+                            succession=succ, rf=RF, full_nodes=set(full),
+                            conditions=conditions)
+    half_with_leader = set(succ[:1]) | set(succ[5:8])
+    assert len(half_with_leader) == 4
+    assert pac8(half_with_leader, full={succ[0]},
+                conditions=("half_roster",)).available
+    half_no_leader = set(succ[4:8])
+    assert not pac8(half_no_leader, full={succ[4]},
+                    conditions=("half_roster",)).available
+
+
+subsets = st.sets(st.sampled_from(ROSTER), min_size=0, max_size=N)
+
+
+@given(subsets, subsets)
+@settings(max_examples=300, deadline=None)
+def test_lemma_31_roster_replica_included(cluster, full):
+    """Lemma 3.1: any PAC-satisfying cluster includes a roster replica."""
+    res = pac(cluster, full=full)
+    if res.available:
+        succ = succession_list(0, ROSTER)
+        assert any(n in cluster for n in succ[:RF]), res
+
+
+@given(subsets, subsets, subsets, subsets)
+@settings(max_examples=300, deadline=None)
+def test_lemma_32_33_intersection(c1, c2, f1, f2):
+    """Lemmas 3.2/3.3: two disjoint clusters can't both satisfy PAC."""
+    if c1 & c2:
+        return
+    r1, r2 = pac(c1, full=f1), pac(c2, full=f2)
+    assert not (r1.available and r2.available), (c1, c2, r1, r2)
+
+
+@given(subsets, st.sets(st.sampled_from(ROSTER), min_size=0, max_size=N))
+@settings(max_examples=200, deadline=None)
+def test_lemma_34_successor_includes_c1_replica(c1, c2):
+    """Lemma 3.4 (structural form): if C1 was available with cluster replicas
+    R1 (all full after its regime), and C2 is available with full set ⊆ R1,
+    then C2 contains a member of R1."""
+    succ = succession_list(0, ROSTER)
+    r1 = pac(c1, full=set(succ[:RF]))
+    if not r1.available:
+        return
+    from repro.core.succession import cluster_replicas
+    creps1 = set(cluster_replicas(succ, set(c1), RF))
+    r2 = pac(c2, full=creps1)
+    if r2.available:
+        if r2.condition in ("simple_majority", "half_roster"):
+            assert creps1 & set(c2)
+        elif r2.condition in ("super_majority", "all_roster_replicas"):
+            # both clusters contain >= n-RF+1 or all roster reps: intersect
+            assert (set(c1) & set(c2)) or not c1
+
+
+def test_majority_baseline():
+    succ = succession_list(0, ROSTER)
+    voters = succ[:2 * (RF - 1) + 1]
+    assert majority_quorum_available(set(voters[:3]), succ, RF)
+    assert not majority_quorum_available(set(voters[:2]), succ, RF)

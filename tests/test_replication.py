@@ -1,0 +1,134 @@
+"""Algorithms 1-4 behaviour: write/read paths, dup-res, rollback, regimes."""
+import pytest
+
+from repro.core.messages import ReplicaWrite
+from repro.core.node import REPLICATED, UNREPLICATED
+from repro.core.simulator import LarkSim
+
+
+def fresh(n=5, rf=2, parts=2, **kw):
+    sim = LarkSim(num_nodes=n, rf=rf, num_partitions=parts, **kw)
+    sim.recluster()
+    sim.settle()
+    sim.run_migrations()
+    return sim
+
+
+def test_write_then_read():
+    sim = fresh()
+    w = sim.client_write(0, "k", "v1")
+    sim.settle()
+    assert sim.result(w).ok
+    r = sim.client_read(0, "k")
+    sim.settle()
+    assert sim.result(r).ok and sim.result(r).value == "v1"
+
+
+def test_write_replicates_to_rf_nodes():
+    sim = fresh()
+    sim.client_write(0, "k", "v")
+    sim.settle()
+    holders = [n for n in sim.nodes.values()
+               if n.records[0].get("k") is not None]
+    assert len(holders) == 2
+    assert all(h.records[0]["k"].status == REPLICATED for h in holders)
+
+
+def test_rf3_mark_replicated_advice():
+    sim = fresh(n=5, rf=3)
+    sim.client_write(0, "k", "v")
+    sim.settle()
+    holders = [n for n in sim.nodes.values()
+               if n.records[0].get("k") is not None]
+    assert len(holders) == 3
+    # after MarkReplicated advice settles, every copy is replicated
+    assert all(h.records[0]["k"].status == REPLICATED for h in holders)
+
+
+def test_non_leader_write_rejected():
+    sim = fresh()
+    leader = sim.leader_of(0)
+    other = next(n for n in sim.alive if n != leader)
+    op, msgs = sim.nodes[other].client_write(0, "k", "v")
+    assert sim.nodes[other].results[op].ok is False
+    assert sim.nodes[other].results[op].reason == "not-leader"
+
+
+def test_failed_replica_write_rolls_back_leader():
+    sim = LarkSim(num_nodes=3, rf=2, num_partitions=1)
+    sim.set_succession(0, [0, 1, 2])
+    sim.recluster()
+    sim.settle()
+    sim.run_migrations()
+    w0 = sim.client_write(0, "k", "v0")
+    sim.settle()
+    assert sim.result(w0).ok
+    # second write: replica rejects (simulate by making node1 believe a new
+    # regime that excludes node0) -> leader must roll back to v0
+    w = sim.client_write(0, "k", "v1")
+    held = sim.net.pop_matching(lambda m: isinstance(m, ReplicaWrite))
+    sim.nodes[1].p[0].nodes_in_cluster = frozenset({1, 2})  # kick leader out
+    for m in held:
+        sim.deliver(m)
+    sim.settle()
+    assert sim.result(w).ok is False
+    rec = sim.nodes[0].records[0]["k"]
+    assert rec.value == "v0" and rec.status == REPLICATED
+
+
+def test_leader_failover_with_dupres():
+    sim = fresh(n=5, rf=2, parts=1)
+    w1 = sim.client_write(0, "k", "v1")
+    sim.settle()
+    leader = sim.leader_of(0)
+    sim.fail_node(leader)
+    sim.settle()          # no migrations: new leader must dup-res per key
+    w2 = sim.client_write(0, "k", "v2")
+    sim.settle()
+    assert sim.result(w2).ok
+    r = sim.client_read(0, "k")
+    sim.settle()
+    assert sim.result(r).value == "v2"
+
+
+def test_regime_increases_monotonically():
+    sim = fresh(n=4, rf=2, parts=1)
+    ers = [sim.er_counter]
+    for victim in (0, 1):
+        sim.fail_node(victim)
+        sim.settle()
+        ers.append(sim.er_counter)
+        sim.recover_node(victim)
+        sim.settle()
+        ers.append(sim.er_counter)
+    assert ers == sorted(ers) and len(set(ers)) == len(ers)
+
+
+def test_read_after_unavailable_partition_fails():
+    sim = fresh(n=4, rf=2, parts=1)
+    succ = sim.successions[0]
+    # kill a majority: PAC cannot hold
+    for v in succ[:3]:
+        sim.fail_node(v, recluster=False)
+    sim.recluster()
+    sim.settle()
+    assert sim.leader_of(0) is None
+    op = sim.client_read(0, "k")
+    assert op == -1 or sim.result(op).ok is False
+
+
+def test_lc_ordering_regime_then_vn():
+    sim = fresh(n=3, rf=2, parts=1)
+    sim.client_write(0, "k", "a")
+    sim.settle()
+    sim.client_write(0, "k", "b")
+    sim.settle()
+    leader = sim.leader_of(0)
+    lc1 = sim.nodes[leader].records[0]["k"].lc
+    sim.fail_node(next(n for n in sim.alive if n != leader))
+    sim.settle()
+    sim.run_migrations()
+    sim.client_write(0, "k", "c")
+    sim.settle()
+    lc2 = sim.nodes[sim.leader_of(0)].records[0]["k"].lc
+    assert lc2 > lc1 and lc2[0] > lc1[0]

@@ -1,0 +1,62 @@
+"""§5.1 availability sim + §5.2 microsim reproduce the paper's numbers."""
+import numpy as np
+import pytest
+
+from repro.core.analytical import (improvement_factor, lark_unavailability,
+                                   node_unavailability, raft_unavailability)
+from repro.core.availability import simulate_availability
+from repro.core.microsim import MicroConfig, run_table, table_configs
+
+
+def test_analytical_factors():
+    assert improvement_factor(1) == 3
+    assert improvement_factor(2) == 10
+    assert improvement_factor(3) == 35
+    u = node_unavailability(1e-3, 10)
+    assert abs(u - 0.00990) < 1e-4
+    assert raft_unavailability(u, 1) / lark_unavailability(u, 1) \
+        == pytest.approx(3.0)
+
+
+@pytest.mark.slow
+def test_availability_rf2_matches_analytic():
+    r = simulate_availability(rf=2, p=1e-3, partitions=512,
+                              max_ticks=300_000, seed=3)
+    u = node_unavailability(1e-3)
+    assert r.u_lark == pytest.approx(lark_unavailability(u, 1), rel=0.5)
+    assert r.improvement == pytest.approx(3.0, rel=0.25)
+
+
+def test_availability_small_fast():
+    r = simulate_availability(n=31, partitions=128, rf=2, p=5e-3,
+                              min_ticks=20_000, max_ticks=60_000, seed=1)
+    assert 0 < r.u_lark < r.u_maj
+    assert 1.5 < r.improvement < 6.0
+
+
+def test_microsim_row1_matches_table3():
+    cfg = MicroConfig(rs=1e3, ps=0.1e9, bw=5e6, u=0.5, lf=0.5)
+    r = run_table([cfg], ticks=400_000)[0]
+    assert r["lark"]["throughput"] == pytest.approx(2500, rel=0.02)
+    assert r["base"]["throughput"] == pytest.approx(2364, rel=0.03)
+    assert r["lark_backfill_s"] == pytest.approx(66, abs=5)
+    assert r["base_down_s"] == pytest.approx(20, abs=1)
+
+
+def test_microsim_downtime_model():
+    # BASE downtime = min(ps/bw, 300): rows 2, 5 of table 3
+    cfgs = [MicroConfig(rs=1e3, ps=0.1e9, bw=50e6, u=0.5, lf=0.5),
+            MicroConfig(rs=1e3, ps=10e9, bw=5e6, u=0.5, lf=0.5)]
+    rs = run_table(cfgs, ticks=320_000)
+    assert rs[0]["base_down_s"] == pytest.approx(2, abs=0.5)
+    assert rs[1]["base_down_s"] == pytest.approx(300, abs=1)
+
+
+def test_microsim_throughput_formula():
+    # lambda = u*bw / (0.8 rs + 0.2*2*lf*rs): exact cells from the paper
+    assert MicroConfig(rs=1e3, ps=1e9, bw=5e6, u=0.5, lf=0.5).arrival_rate \
+        == pytest.approx(2500)
+    assert MicroConfig(rs=1e3, ps=1e9, bw=5e6, u=0.8, lf=1.0).arrival_rate \
+        == pytest.approx(3333.3, rel=1e-3)
+    assert MicroConfig(rs=10e3, ps=1e9, bw=50e6, u=0.8, lf=1.0).arrival_rate \
+        == pytest.approx(3333.3, rel=1e-3)

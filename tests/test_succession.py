@@ -1,0 +1,64 @@
+"""Placement properties (paper §2.1-2.2): determinism, uniformity, minimal
+disruption under membership change."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.succession import (cluster_replicas, key_partition,
+                                   succession_list, succession_matrix_fast)
+
+
+def test_deterministic():
+    assert succession_list(7, range(10)) == succession_list(7, range(10))
+    assert key_partition("abc") == key_partition("abc")
+
+
+def test_uniform_partition_distribution():
+    counts = np.zeros(64)
+    for i in range(20000):
+        counts[key_partition(f"key-{i}", 64)] += 1
+    # chi-square-ish: no partition more than 2x the mean
+    assert counts.max() < 2 * counts.mean()
+    assert counts.min() > 0.5 * counts.mean()
+
+
+def test_uniform_leader_load():
+    n, P = 10, 512
+    leaders = np.zeros(n)
+    for p in range(P):
+        leaders[succession_list(p, range(n))[0]] += 1
+    assert leaders.max() < 2.5 * P / n
+
+
+@given(st.integers(0, 1000), st.integers(3, 12))
+@settings(max_examples=30, deadline=None)
+def test_left_shift_on_removal(pid, n):
+    """Removing a node only left-shifts lists where it appears (fig 3b)."""
+    roster = list(range(n))
+    full = succession_list(pid, roster)
+    removed = full[2] if n > 2 else full[0]
+    without = succession_list(pid, [x for x in roster if x != removed])
+    assert without == [x for x in full if x != removed]
+
+
+@given(st.integers(0, 1000), st.integers(3, 12))
+@settings(max_examples=30, deadline=None)
+def test_insertion_preserves_relative_order(pid, n):
+    """Adding a node right-shifts lower-ranked nodes only (fig 3c/§2.2)."""
+    roster = list(range(n))
+    with_new = succession_list(pid, roster + [n + 100])
+    assert [x for x in with_new if x != n + 100] == succession_list(pid, roster)
+
+
+def test_cluster_replicas_first_rf_present():
+    succ = [3, 1, 4, 0, 2]
+    assert cluster_replicas(succ, {0, 1, 2}, 2) == [1, 0]
+    assert cluster_replicas(succ, {2}, 2) == [2]
+    assert cluster_replicas(succ, set(), 2) == []
+
+
+def test_matrix_fast_shape_and_permutation():
+    m = succession_matrix_fast(32, range(9))
+    assert m.shape == (32, 9)
+    for row in m:
+        assert sorted(row.tolist()) == list(range(9))
