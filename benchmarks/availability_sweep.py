@@ -3,39 +3,81 @@
 Reduced grid by default (CPU budget); --full sweeps the paper's p range with
 n=155, P=4096 and CI early-stopping.  Emits CSV rows:
   availability,<rf>,<p>,u_lark,u_maj,ratio,analytic_ratio,ticks
+
+Backends (--backend):
+  event    scalar heapq event engine (core/availability.py); --trials N runs
+           N sequential seeds and averages — the seed repo's behavior
+  numpy    batched engine (core/availability_batched.py), vectorized numpy
+           PAC, python chunk loop
+  jax      batched engine, jit + lax.scan, pure-jnp PAC oracle
+  pallas   batched engine, PAC through kernels/pac_eval.py (compiled on
+           TPU, interpret mode on CPU — slow there; use for validation)
+
+For the batched backends --trials N advances N independent trajectories in
+one device program instead of N sequential runs.
+
+--scenarios appends a dual-failure / rolling-restart grid (rf in {2,3,4}:
+correlated rack-pair failures and staggered node restarts) on top of the
+i.i.d. rows; scenario rows always use the batched engine ("event" maps to
+"numpy" — the scalar engine has no correlated/scheduled failure model).
 """
 from __future__ import annotations
 
+import argparse
 import sys
 
 from repro.core.analytical import (improvement_factor, lark_unavailability,
                                    node_unavailability, raft_unavailability)
 from repro.core.availability import simulate_availability
+from repro.core.availability_batched import simulate_availability_batched
 
 REDUCED_GRID = [(2, 1e-3), (2, 3e-3), (2, 1e-2), (3, 1e-2), (4, 3e-2)]
 FULL_GRID = [(2, 1e-4), (2, 1e-3), (2, 1e-2),
              (3, 2e-4), (3, 1e-3), (3, 1e-2),
              (4, 5e-4), (4, 1e-3), (4, 1e-2)]
 
+# (tag, rf, p, batched-engine kwargs): correlated rack pairs fail together
+# half the time; rolling restart cycles one node down every `period` ticks.
+SCENARIO_GRID = [
+    ("dualfail", 2, 3e-3, {"pair_fail_prob": 0.5}),
+    ("dualfail", 3, 1e-2, {"pair_fail_prob": 0.5}),
+    ("dualfail", 4, 1e-2, {"pair_fail_prob": 0.5}),
+    ("rolling", 2, 1e-3, {"restart_period": 2_000}),
+    ("rolling", 3, 3e-3, {"restart_period": 2_000}),
+    ("rolling", 4, 3e-3, {"restart_period": 2_000}),
+]
 
-def run(full: bool = False, seeds=(0,)):
+
+def _grid_scale(full: bool):
+    """(n, partitions) — one place, so i.i.d. and scenario rows always run
+    at the same cluster scale and their u columns stay comparable."""
+    return (155, 4096) if full else (63, 512)
+
+
+def run(full: bool = False, seeds=(0,), backend: str = "event"):
     grid = FULL_GRID if full else REDUCED_GRID
-    n = 155 if full else 63
-    parts = 4096 if full else 512
+    n, parts = _grid_scale(full)
     max_ticks = 3_000_000 if full else 250_000
     rows = []
     for rf, p in grid:
-        us_l, us_m = [], []
-        ticks = 0
-        for s in seeds:
-            r = simulate_availability(n=n, partitions=parts, rf=rf, p=p,
-                                      max_ticks=max_ticks,
-                                      min_ticks=30_000, seed=s)
-            us_l.append(r.u_lark)
-            us_m.append(r.u_maj)
-            ticks = r.ticks
-        u_l = sum(us_l) / len(us_l)
-        u_m = sum(us_m) / len(us_m)
+        if backend == "event":
+            us_l, us_m = [], []
+            ticks = 0
+            for s in seeds:
+                r = simulate_availability(n=n, partitions=parts, rf=rf, p=p,
+                                          max_ticks=max_ticks,
+                                          min_ticks=30_000, seed=s)
+                us_l.append(r.u_lark)
+                us_m.append(r.u_maj)
+                ticks = r.ticks
+            u_l = sum(us_l) / len(us_l)
+            u_m = sum(us_m) / len(us_m)
+        else:
+            r = simulate_availability_batched(
+                n=n, partitions=parts, rf=rf, p=p, trials=len(seeds),
+                max_ticks=max_ticks, min_ticks=30_000, seed=min(seeds),
+                backend=backend)
+            u_l, u_m, ticks = r.u_lark, r.u_maj, r.ticks
         f = rf - 1
         rows.append({
             "rf": rf, "p": p, "u_lark": u_l, "u_maj": u_m,
@@ -47,12 +89,56 @@ def run(full: bool = False, seeds=(0,)):
     return rows
 
 
+def run_scenarios(full: bool = False, trials: int = 4,
+                  backend: str = "jax", seed: int = 0):
+    backend = "numpy" if backend == "event" else backend
+    n, parts = _grid_scale(full)
+    max_ticks = 1_000_000 if full else 120_000
+    rows = []
+    for tag, rf, p, kw in SCENARIO_GRID:
+        r = simulate_availability_batched(
+            n=n, partitions=parts, rf=rf, p=p, trials=trials,
+            max_ticks=max_ticks, min_ticks=20_000, seed=seed,
+            backend=backend, **kw)
+        rows.append({
+            "tag": tag, "rf": rf, "p": p, "u_lark": r.u_lark,
+            "u_maj": r.u_maj,
+            "ratio": r.u_maj / r.u_lark if r.u_lark else float("inf"),
+            "ticks": r.ticks, **kw,
+        })
+    return rows
+
+
 def main(argv=None):
-    full = "--full" in (argv or sys.argv[1:])
-    for r in run(full=full):
-        print(f"availability,rf{r['rf']}_p{r['p']:g},0,"
-              f"u_lark={r['u_lark']:.3e};u_maj={r['u_maj']:.3e};"
-              f"ratio={r['ratio']:.2f};analytic={r['analytic_ratio']}")
+    # allow_abbrev off: a prefix typo like --ful must fail loudly, not
+    # silently launch the hours-long paper-scale grid
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0],
+                                 allow_abbrev=False)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--backend", default="event",
+                    choices=("event", "numpy", "jax", "pallas"))
+    ap.add_argument("--trials", type=int, default=1,
+                    help="seeds (event) or batch size (batched backends)")
+    ap.add_argument("--scenarios", action="store_true",
+                    help="append the dual-failure / rolling-restart grid")
+    ap.add_argument("--scenarios-only", action="store_true",
+                    help="skip the i.i.d. grid (scenario rows only)")
+    args = ap.parse_args(argv if argv is not None else sys.argv[1:])
+    if args.trials < 1:
+        ap.error("--trials must be >= 1")
+
+    if not args.scenarios_only:
+        for r in run(full=args.full, seeds=tuple(range(args.trials)),
+                     backend=args.backend):
+            print(f"availability,rf{r['rf']}_p{r['p']:g},0,"
+                  f"u_lark={r['u_lark']:.3e};u_maj={r['u_maj']:.3e};"
+                  f"ratio={r['ratio']:.2f};analytic={r['analytic_ratio']}")
+    if args.scenarios or args.scenarios_only:
+        for r in run_scenarios(full=args.full, trials=args.trials,
+                               backend=args.backend):
+            print(f"availability_scenario,{r['tag']}_rf{r['rf']}_"
+                  f"p{r['p']:g},0,u_lark={r['u_lark']:.3e};"
+                  f"u_maj={r['u_maj']:.3e};ratio={r['ratio']:.2f}")
     return 0
 
 

@@ -10,12 +10,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
+from repro.kernels.ops import pac_eval_batch
 
 
 def _time(fn, *args, iters=5) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else None
-    out = fn(*args)
-    jax.block_until_ready(out)
+    jax.block_until_ready(fn(*args))        # warmup (and compile, if jitted)
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
@@ -48,6 +47,21 @@ def main(argv=None):
     pc = jax.jit(lambda u, f: ref.pac_eval_rank_ref(u, f, rf=3, voters=5,
                                                     n_real=155))
     print(f"kernel_pac_ref,p4096n155,{_time(pc, up, full):.0f},per_tick_eval")
+
+    # batched Monte Carlo tile: trials*partitions rows through the unified
+    # PAC backend layer (the availability_batched.py hot loop)
+    R = 8 * 4096
+    up_b = rng.random((R, 256)) < 0.95
+    full_b = rng.random((R, 256)) < 0.3
+    pac_np = lambda u, f: pac_eval_batch(u, f, rf=3, voters=5, n_real=155,
+                                         backend="numpy")
+    print(f"kernel_pac_batch_numpy,r{R}n155,"
+          f"{_time(pac_np, up_b, full_b):.0f},trials=8xp4096")
+    upj, fullj = jnp.asarray(up_b), jnp.asarray(full_b)
+    pac_j = jax.jit(lambda u, f: pac_eval_batch(u, f, rf=3, voters=5,
+                                                n_real=155, backend="jax"))
+    print(f"kernel_pac_batch_jax,r{R}n155,"
+          f"{_time(pac_j, upj, fullj):.0f},trials=8xp4096")
     return 0
 
 

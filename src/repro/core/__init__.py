@@ -1,3 +1,24 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+
+_LAZY = {
+    "simulate_availability": ("availability", "simulate_availability"),
+    "AvailabilityResult": ("availability", "AvailabilityResult"),
+    "simulate_availability_batched": (
+        "availability_batched", "simulate_availability_batched"),
+    "BatchedAvailabilityResult": (
+        "availability_batched", "BatchedAvailabilityResult"),
+}
+
+__all__ = list(_LAZY)
+
+
+def __getattr__(name):
+    # lazy: the availability engines pull in jax; keep `import repro.core`
+    # cheap for protocol-only users (pac, succession, simulator)
+    if name in _LAZY:
+        import importlib
+        mod, attr = _LAZY[name]
+        return getattr(importlib.import_module(f".{mod}", __name__), attr)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

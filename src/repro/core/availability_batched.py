@@ -1,0 +1,355 @@
+"""Batched device-resident availability Monte Carlo — paper §5.1 at scale.
+
+Advances B independent failure trajectories x P partitions per device step.
+Instead of a scalar heapq event loop (core/availability.py), every trial
+keeps vectorized state — up mask (B, n), next-event times (B, n), frozen
+holder masks (B, P, n) — and each step jumps every trial to its own next
+event (``jax.lax.scan`` over event steps, chunked), evaluating PAC /
+majority / current-replica conditions as one (B*P, n) rank-space tile
+through the unified backend layer in kernels/ops.py:
+
+  backend="numpy"   python chunk loop, vectorized numpy PAC (the event
+                    engine's evaluate() math, shared code)
+  backend="jax"     jit + lax.scan with the pure-jnp PAC oracle
+  backend="pallas"  same scan, PAC via the Pallas kernel (compiled on TPU,
+                    interpret mode on CPU)
+
+All backends draw randomness from the same counter-based hash (splitmix-
+style, implemented identically in numpy and jnp), so for a given seed the
+three produce bit-identical trajectories — the cross-backend agreement
+tests rely on this.
+
+Model semantics match the event engine: geometric inter-failure gaps per
+node, fixed downtime, whole-cluster SimpleMajority PAC with frozen holders
+while unavailable, majority-of-2f+1 baseline, CI early stopping.  The one
+intentional difference: simultaneous same-tick events are applied together
+before re-evaluating (the scalar engine interleaves evaluations between
+same-tick events), which can freeze a marginally different holder set on
+coincident failures — a zero-measure-in-time difference that is invisible
+at the CI tolerances used here.
+
+Scenario knobs beyond the paper's i.i.d. grid:
+  pair_fail_prob  correlated dual failures: when a node fails, its pair
+                  partner (2i <-> 2i+1) fails at the same tick with this
+                  probability (shared rack / power domain).
+  restart_period  rolling restart: every `restart_period` ticks the next
+                  node in id order is taken down for `downtime` ticks
+                  (§5.3's zero-downtime rolling-restart claim, as a
+                  Monte Carlo scenario).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+from ..kernels.ops import PAC_BACKENDS, pac_eval_batch
+from .availability import t975
+from .succession import succession_matrix_fast
+
+_GEO_SALT = 0x9E3779B9
+_PAIR_SALT = 0x85EBCA6B
+
+
+# ---------------------------------------------------------------------------
+# Counter-based RNG, identical under numpy and jax.numpy (uint32 ops wrap).
+# ---------------------------------------------------------------------------
+
+def _mix32(x, xp):
+    """lowbias32-style avalanche on uint32 arrays."""
+    x = x ^ (x >> 16)
+    x = x * xp.uint32(0x21F0AAAD)
+    x = x ^ (x >> 15)
+    x = x * xp.uint32(0xD35A2D97)
+    x = x ^ (x >> 15)
+    return x
+
+
+def _uniforms(seed_mix, step_u32, salt: int, count: int, xp):
+    """count uniforms in [0, 1) from (seed, step, lane) — no carried state.
+
+    The step is hashed into a per-step *key* rather than multiplied into a
+    flat counter: a `step * count + lane` counter wraps mod 2^32 and would
+    replay the exact variate stream every 2^32/count steps (reachable on
+    full-scale grids); keyed lane hashing has no such period.  Scalars are
+    kept as 1-element arrays: numpy warns on wrapping *scalar* uint32
+    arithmetic but wraps array arithmetic silently (and wrapping is exactly
+    what a counter hash wants).
+    """
+    step_u32 = xp.reshape(step_u32, (1,)).astype(xp.uint32)
+    key = _mix32(step_u32 ^ seed_mix ^ xp.uint32(salt), xp)
+    lanes = xp.arange(count, dtype=xp.uint32) * xp.uint32(0x9E3779B9)
+    h = _mix32(_mix32(lanes ^ key, xp) ^ seed_mix, xp)
+    return (h >> 8).astype(xp.float32) * xp.float32(1.0 / (1 << 24))
+
+
+def _geometric_breaks(p: float, gap_cap: int) -> np.ndarray:
+    """CDF breakpoints for Geom(p) inversion by searchsorted.
+
+    A log-based inverse (floor(log1p(-u)/log1p(-p))) is NOT bit-stable
+    across numpy and XLA (libm log1p differs by ulps, and a flipped floor
+    forks the whole trajectory).  searchsorted is pure comparisons against
+    a shared constant table, so every backend draws identical variates.
+
+    The table covers every value a 24-bit uniform can reach OR stops at
+    `gap_cap` entries, whichever is smaller.  The caller passes gap_cap >
+    horizon + downtime: a clamped draw schedules its event past the
+    horizon where it can never fire, so the truncation is behaviorally
+    invisible while keeping the table O(horizon) instead of O(1/p)
+    (p=1e-7 would otherwise build a multi-GB table).
+    """
+    k_max = int(math.ceil(math.log(2.0 ** -25) / math.log1p(-p))) + 2
+    k_max = min(k_max, gap_cap)
+    k = np.arange(1, k_max + 1, dtype=np.float64)
+    return (-np.expm1(k * math.log1p(-p))).astype(np.float32)  # 1-(1-p)^k
+
+
+def _geometric(u, breaks, xp):
+    """Geom(p) on {1, 2, ...}: g = #{k : cdf(k) <= u} + 1."""
+    return (xp.searchsorted(breaks, u, side="right") + 1).astype(xp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Result
+# ---------------------------------------------------------------------------
+
+@dataclass
+class BatchedAvailabilityResult:
+    p: float
+    rf: int
+    n: int
+    partitions: int
+    trials: int
+    backend: str
+    ticks: int                    # mean elapsed ticks per trial
+    u_lark: float                 # pooled over trials
+    u_maj: float
+    lark_events: int
+    maj_events: int
+    ci_lark: float
+    ci_maj: float
+    stopped_early: bool
+    u_lark_trials: np.ndarray = field(repr=False, default=None)
+    u_maj_trials: np.ndarray = field(repr=False, default=None)
+    trajectory: Optional[Dict[str, np.ndarray]] = field(repr=False,
+                                                        default=None)
+
+    @property
+    def improvement(self) -> float:
+        return self.u_maj / self.u_lark if self.u_lark > 0 else math.inf
+
+
+# ---------------------------------------------------------------------------
+# The per-event step, written once for both array namespaces.
+# ---------------------------------------------------------------------------
+
+def _make_step(xp, pac_fn, succ, *, B: int, n: int, P: int, horizon: int,
+               downtime: int, geo_breaks, seed_mix, pair_fail_prob: float,
+               pair_perm, restart_period: int):
+    def step(carry, s):
+        (now, up, ev_t, full, unl, unm, lpt, mpt, le, me, rr_t,
+         rr_idx) = carry
+        node_next = xp.min(ev_t, axis=1)                     # (B,)
+        t_next = node_next if not restart_period else \
+            xp.minimum(node_next, rr_t)
+        active = t_next < horizon
+        t_clamp = xp.minimum(t_next, xp.int32(horizon))
+        dt = (t_clamp - now).astype(xp.float32)
+        lpt = lpt + unl.astype(xp.float32) * dt
+        mpt = mpt + unm.astype(xp.float32) * dt
+        now = t_clamp
+
+        hit = (ev_t == t_next[:, None]) & active[:, None]
+        fail_hit = hit & up
+        rec_hit = hit & ~up
+        if restart_period:
+            rr_hit = active & (rr_t == t_next)
+            tgt = xp.arange(n, dtype=xp.int32)[None, :] == rr_idx[:, None]
+            fail_hit = fail_hit | (tgt & up & rr_hit[:, None])
+            rr_idx = xp.where(rr_hit, (rr_idx + 1) % n, rr_idx)
+            rr_t = xp.where(rr_hit, rr_t + restart_period, rr_t)
+        s_u32 = xp.asarray(s).astype(xp.uint32)
+        if pair_fail_prob > 0.0:
+            u2 = _uniforms(seed_mix, s_u32, _PAIR_SALT, B * n,
+                           xp).reshape(B, n)
+            pf = fail_hit[:, pair_perm] & up & ~fail_hit & ~rec_hit & \
+                (u2 < pair_fail_prob)
+            fail_hit = fail_hit | pf
+        up = (up & ~fail_hit) | rec_hit
+        geo = _geometric(
+            _uniforms(seed_mix, s_u32, _GEO_SALT, B * n, xp).reshape(B, n),
+            geo_breaks, xp)
+        ev_t = xp.where(fail_hit, t_clamp[:, None] + downtime,
+                        xp.where(rec_hit, t_clamp[:, None] + geo, ev_t))
+
+        lark, maj, creps = pac_fn(up[:, succ].reshape(B * P, n),
+                                  full.reshape(B * P, n))
+        lark = lark.reshape(B, P)
+        full = xp.where(lark[:, :, None], creps.reshape(B, P, n), full)
+        new_unl = xp.sum(~lark, axis=1).astype(xp.int32)
+        new_unm = xp.sum(~maj.reshape(B, P), axis=1).astype(xp.int32)
+        le = le + xp.maximum(new_unl - unl, 0)
+        me = me + xp.maximum(new_unm - unm, 0)
+        carry = (now, up, ev_t, full, new_unl, new_unm, lpt, mpt, le, me,
+                 rr_t, rr_idx)
+        return carry, (t_clamp, new_unl, new_unm)
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def simulate_availability_batched(
+        *, n: int = 155, partitions: int = 4096, rf: int = 2,
+        p: float = 1e-3, downtime: int = 10, trials: int = 8,
+        min_ticks: int = 50_000, max_ticks: int = 3_000_000,
+        eps_abs: float = 5e-6, eps_rel: float = 0.05,
+        min_events: int = 200, seed: int = 0, backend: str = "jax",
+        pair_fail_prob: float = 0.0, restart_period: int = 0,
+        chunk_steps: int = 512, max_steps: Optional[int] = None,
+        trajectory: bool = False) -> BatchedAvailabilityResult:
+    """Batched Monte Carlo over `trials` trajectories sharing one succession
+    matrix (seeded); failure randomness is independent per trial."""
+    if backend not in PAC_BACKENDS:
+        raise ValueError(f"backend must be one of {PAC_BACKENDS} "
+                         f"(the sweep handles 'event' separately)")
+    B, P, horizon = trials, partitions, max_ticks
+    succ_np = succession_matrix_fast(P, range(n), seed=seed)
+    voters = 2 * (rf - 1) + 1
+    pair_perm = np.arange(n)
+    pair_perm[:n - n % 2] ^= 1
+
+    if backend == "numpy":
+        xp, succ = np, succ_np
+    else:
+        import jax
+        import jax.numpy as jnp
+        xp, succ = jnp, jnp.asarray(succ_np)
+
+    seed_mix = _mix32(xp.asarray([(seed & 0xFFFFFFFF) ^ 0x6A09E667],
+                                 dtype=xp.uint32), xp)
+    geo_breaks = xp.asarray(_geometric_breaks(p, max_ticks + downtime + 2))
+    pac_fn = lambda u, f: pac_eval_batch(u, f, rf=rf, voters=voters,
+                                         n_real=n, backend=backend)
+    step = _make_step(xp, pac_fn, succ, B=B, n=n, P=P, horizon=horizon,
+                      downtime=downtime, geo_breaks=geo_breaks,
+                      seed_mix=seed_mix, pair_fail_prob=pair_fail_prob,
+                      pair_perm=pair_perm, restart_period=restart_period)
+
+    # initial state: everyone up, roster replicas full, first failures at
+    # geometric gaps (step counter 0; scan steps start at 1)
+    up0 = xp.ones((B, n), dtype=bool)
+    ev0 = _geometric(
+        _uniforms(seed_mix, xp.asarray(0, dtype=xp.uint32), _GEO_SALT,
+                  B * n, xp).reshape(B, n),
+        geo_breaks, xp)
+    full0 = xp.zeros((B, P, n), dtype=bool)
+    if backend == "numpy":
+        full0[:, :, :rf] = True
+    else:
+        full0 = full0.at[:, :, :rf].set(True)
+    lark0, maj0, creps0 = pac_fn(up0[:, succ].reshape(B * P, n),
+                                 full0.reshape(B * P, n))
+    full0 = xp.where(lark0.reshape(B, P)[:, :, None],
+                     creps0.reshape(B, P, n), full0)
+    zi = xp.zeros((B,), dtype=xp.int32)
+    zf = xp.zeros((B,), dtype=xp.float32)
+    rr_t0 = xp.full((B,), restart_period if restart_period else horizon + 1,
+                    dtype=xp.int32)
+    carry = (zi, up0, ev0, full0,
+             xp.sum(~lark0.reshape(B, P), axis=1).astype(xp.int32),
+             xp.sum(~maj0.reshape(B, P), axis=1).astype(xp.int32),
+             zf, zf, zi, zi, rr_t0, zi)
+
+    if backend != "numpy":
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def run_chunk(carry, s0):
+            return jax.lax.scan(
+                step, carry, s0 + jnp.arange(chunk_steps, dtype=jnp.int32))
+
+    if max_steps is None:
+        per_trial = 2.0 * n * horizon / (1.0 / p + downtime)
+        if restart_period:
+            per_trial += 2.0 * horizon / restart_period
+        max_steps = int(3 * per_trial) + 2000
+
+    lpt_tot = np.zeros(B)
+    mpt_tot = np.zeros(B)
+    le_tot = me_tot = 0
+    traj = [] if trajectory else None
+    stopped = False
+    s0 = 1
+    while s0 < max_steps:
+        if backend == "numpy":
+            ys = []
+            for s in range(s0, s0 + chunk_steps):
+                carry, y = step(carry, np.int32(s))
+                ys.append(y)
+            ys = tuple(np.stack(col) for col in zip(*ys))
+        else:
+            carry, ys = run_chunk(carry, jnp.int32(s0))
+        s0 += chunk_steps
+        if trajectory:
+            traj.append(tuple(np.asarray(c) for c in ys))
+        # drain per-chunk accumulators into float64/int totals
+        now = np.asarray(carry[0], dtype=np.int64)
+        lpt_tot += np.asarray(carry[6], dtype=np.float64)
+        mpt_tot += np.asarray(carry[7], dtype=np.float64)
+        le_tot += int(np.asarray(carry[8]).sum())
+        me_tot += int(np.asarray(carry[9]).sum())
+        carry = carry[:6] + (zf, zf, zi, zi) + carry[10:]
+        if (now >= horizon).all():
+            break
+        # pooled CI early stop, mirroring the event engine's rule.  This is
+        # deliberately the NOMINAL binomial width — the same stopping
+        # semantics (and therefore comparable tick counts / wall-clock) as
+        # the scalar engine — while the *reported* ci_lark/ci_maj use the
+        # honest across-trial spread, which is typically wider.
+        if now.mean() >= min_ticks and le_tot >= min_events \
+                and me_tot >= min_events:
+            pt = float(P) * float(now.sum())
+            u_l, u_m = lpt_tot.sum() / pt, mpt_tot.sum() / pt
+            hw_l = 1.96 * math.sqrt(max(u_l * (1 - u_l), 1e-30) / pt)
+            hw_m = 1.96 * math.sqrt(max(u_m * (1 - u_m), 1e-30) / pt)
+            if hw_l <= max(eps_abs, eps_rel * u_l) and \
+                    hw_m <= max(eps_abs, eps_rel * u_m):
+                stopped = True
+                break
+
+    now = np.maximum(np.asarray(carry[0], dtype=np.int64), 1)
+    pt_b = P * now.astype(np.float64)
+    pt = float(pt_b.sum())
+    u_l = float(lpt_tot.sum()) / pt
+    u_m = float(mpt_tot.sum()) / pt
+    u_l_trials = lpt_tot / pt_b
+    u_m_trials = mpt_tot / pt_b
+    # honest CI from the spread of independent trials (captures the
+    # node-failure correlation across partitions that the binomial width
+    # misses), floored by the pooled binomial width for tiny batches
+    hw_l = hw_m = 0.0
+    if B >= 3:
+        t = t975(B - 1) / math.sqrt(B)
+        hw_l = t * float(u_l_trials.std(ddof=1))
+        hw_m = t * float(u_m_trials.std(ddof=1))
+    traj_out = None
+    if trajectory:
+        cols = [np.concatenate([c[i] for c in traj]) for i in range(3)]
+        traj_out = {"times": cols[0], "unavail_lark": cols[1],
+                    "unavail_maj": cols[2]}
+    return BatchedAvailabilityResult(
+        p=p, rf=rf, n=n, partitions=P, trials=B, backend=backend,
+        ticks=int(now.mean()), u_lark=u_l, u_maj=u_m,
+        lark_events=le_tot, maj_events=me_tot,
+        ci_lark=max(hw_l,
+                    1.96 * math.sqrt(max(u_l * (1 - u_l), 1e-30) / pt)),
+        ci_maj=max(hw_m,
+                   1.96 * math.sqrt(max(u_m * (1 - u_m), 1e-30) / pt)),
+        stopped_early=stopped,
+        u_lark_trials=u_l_trials, u_maj_trials=u_m_trials,
+        trajectory=traj_out)

@@ -75,7 +75,8 @@ class LarkSim:
         self.time = 0
         self.history: List[HistEvent] = []
         self.alive: Set[int] = set(self.roster)
-        self._pending_rebalance: List[Tuple[int, int, frozenset, dict]] = []
+        self._pending_rebalance: List[Tuple[int, int, int, frozenset,
+                                            dict]] = []
         self._last_exchange: Dict[int, dict] = {}
         self._last_members: frozenset = frozenset()
 
@@ -121,21 +122,30 @@ class LarkSim:
         for n in members:
             for pid in self.successions:
                 if n in defer_rebalance:
-                    self._pending_rebalance.append((n, pid, members, exchange))
+                    self._pending_rebalance.append((n, pid, er, members,
+                                                    exchange))
                 else:
                     self.net.send_all(self.nodes[n].rebalance(pid, members,
                                                               exchange))
         return er
 
     def run_deferred_rebalance(self, node_id: int, pid: Optional[int] = None):
+        """Release rebalances queued by recluster(defer_rebalance=...).
+
+        A deferred rebalance is only valid within the regime that queued it:
+        if the node has since observed a newer exchange round (its er moved
+        past the one captured at defer time), replaying the old rebalance
+        would roll protocol state back to a dead regime — stale entries are
+        dropped instead of released.
+        """
         keep = []
-        for (n, p, members, exchange) in self._pending_rebalance:
+        for (n, p, er, members, exchange) in self._pending_rebalance:
             if n == node_id and (pid is None or p == pid):
-                if self.nodes[n].er == self.nodes[n].er:  # still same regime?
+                if self.nodes[n].er == er:        # still the same regime?
                     self.net.send_all(self.nodes[n].rebalance(p, members,
                                                               exchange))
             else:
-                keep.append((n, p, members, exchange))
+                keep.append((n, p, er, members, exchange))
         self._pending_rebalance = keep
 
     # ------------------------------------------------------------------

@@ -20,6 +20,8 @@ from . import ref
 
 _FORCE = os.environ.get("REPRO_FORCE_PALLAS", "")
 
+PAC_BACKENDS = ("numpy", "jax", "pallas")
+
 
 def _mode() -> str:
     """'kernel' | 'interpret' | 'ref'."""
@@ -72,12 +74,57 @@ def pac_eval(up, succ, full, rf: int, *, voters=None,
                             conditions=conditions)
 
 
-def pac_eval_rank(up_succ, full_succ, *, rf: int, voters: int, n_real: int):
-    """Rank-space PAC (availability Monte Carlo hot loop)."""
-    mode = _mode()
-    if mode != "ref":
+# ---------------------------------------------------------------------------
+# Unified PAC backend layer (§5.1 availability Monte Carlo).
+#
+# All three backends evaluate the same rank-space tile contract as
+# ref.pac_eval_rank_ref: inputs (R, n_pad) bool where R is any flattened
+# batch (e.g. trials * partitions) and columns >= n_real are padding;
+# outputs (lark (R,), maj (R,), creps (R, n_pad)).  "numpy" is the
+# vectorized refactor of the event engine's evaluate() and is shared with
+# core/availability.py, so the scalar event loop and the batched device
+# loop literally run the same availability math.  It lives in pac_np.py
+# (numpy-only) so the event engine never pays the jax import.
+# ---------------------------------------------------------------------------
+
+from .pac_np import pac_eval_rank_np  # noqa: E402  (re-export)
+
+
+def _pallas_block_p(R: int) -> int:
+    """Largest power-of-two block size <= 256 that divides the row count."""
+    bp = 1
+    while bp < 256 and R % (bp * 2) == 0:
+        bp *= 2
+    return bp
+
+
+def pac_eval_batch(up_succ, full_succ, *, rf: int, voters: int, n_real: int,
+                   backend: str = "jax"):
+    """Dispatch a (R, n_pad) rank-space PAC tile to the chosen backend.
+
+    backend:
+      numpy   vectorized numpy (the event engine's evaluate logic)
+      jax     pure-jnp oracle (jit-friendly; use inside lax.scan)
+      pallas  kernels/pac_eval.py — compiled on TPU, interpret mode on CPU
+    """
+    if backend == "numpy":
+        return pac_eval_rank_np(up_succ, full_succ, rf=rf, voters=voters,
+                                n_real=n_real)
+    if backend == "jax":
+        return ref.pac_eval_rank_ref(up_succ, full_succ, rf=rf,
+                                     voters=voters, n_real=n_real)
+    if backend == "pallas":
         from . import pac_eval as pk
-        return pk.pac_eval(up_succ, full_succ, rf=rf, voters=voters,
-                           n_real=n_real, interpret=(mode == "interpret"))
-    return ref.pac_eval_rank_ref(up_succ, full_succ, rf=rf, voters=voters,
-                                 n_real=n_real)
+        R, n_pad = up_succ.shape
+        lanes = -n_pad % 128                      # pad node axis to a lane
+        if lanes:                                 # multiple for the VPU tile
+            up_succ = jnp.pad(up_succ, ((0, 0), (0, lanes)))
+            full_succ = jnp.pad(full_succ, ((0, 0), (0, lanes)))
+        interpret = jax.default_backend() != "tpu"
+        lark, maj, creps = pk.pac_eval(up_succ, full_succ, rf=rf,
+                                       voters=voters, n_real=n_real,
+                                       block_p=_pallas_block_p(R),
+                                       interpret=interpret)
+        return lark, maj, creps[:, :n_pad]
+    raise ValueError(f"unknown PAC backend {backend!r}; "
+                     f"expected one of {PAC_BACKENDS}")

