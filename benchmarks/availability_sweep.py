@@ -1,7 +1,8 @@
 """Paper §5.1 / Figure 6 / Table 2: availability vs node-failure probability.
 
 Reduced grid by default (CPU budget); --full sweeps the paper's p range with
-n=155, P=4096 and CI early-stopping.  Emits CSV rows:
+n=155, P=4096 and CI early-stopping; --smoke shrinks everything for the CI
+pallas-interpret lane.  Emits CSV rows:
   availability,<rf>,<p>,u_lark,u_maj,ratio,analytic_ratio,ticks
 
 Backends (--backend):
@@ -14,73 +15,99 @@ Backends (--backend):
            TPU, interpret mode on CPU — slow there; use for validation)
 
 For the batched backends --trials N advances N independent trajectories in
-one device program instead of N sequential runs.
+one device program; --devices D shards them over a 1-D "trials" mesh
+(bit-identical to --devices 1 for the same seed; on CPU set
+XLA_FLAGS=--xla_force_host_platform_device_count=D).  --autotune (pallas)
+races kernel block_p candidates before the sweep and runs the grid at the
+winner.
 
---scenarios appends a dual-failure / rolling-restart grid (rf in {2,3,4}:
-correlated rack-pair failures and staggered node restarts) on top of the
-i.i.d. rows; scenario rows always use the batched engine ("event" maps to
-"numpy" — the scalar engine has no correlated/scheduled failure model).
+Failure models come from the scenario registry (core/scenarios.py):
+--scenario NAME appends that scenario's (rf, p) grid on top of the i.i.d.
+rows ('all' = every registered name; repeatable / comma-separated).
+--scenarios is the legacy alias for --scenario all; --scenarios-only skips
+the i.i.d. grid.  Scenario rows always use the batched engine ("event"
+maps to "numpy" — the scalar engine has no correlated/scheduled failure
+model).  --json PATH additionally dumps all rows with CI half-widths, the
+schema benchmarks/check_regression.py consumes.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import math
 import sys
 
 from repro.core.analytical import (improvement_factor, lark_unavailability,
-                                   node_unavailability, raft_unavailability)
+                                   node_unavailability)
 from repro.core.availability import simulate_availability
 from repro.core.availability_batched import simulate_availability_batched
+from repro.core.scenarios import get_scenario, scenario_names
 
 REDUCED_GRID = [(2, 1e-3), (2, 3e-3), (2, 1e-2), (3, 1e-2), (4, 3e-2)]
 FULL_GRID = [(2, 1e-4), (2, 1e-3), (2, 1e-2),
              (3, 2e-4), (3, 1e-3), (3, 1e-2),
              (4, 5e-4), (4, 1e-3), (4, 1e-2)]
-
-# (tag, rf, p, batched-engine kwargs): correlated rack pairs fail together
-# half the time; rolling restart cycles one node down every `period` ticks.
-SCENARIO_GRID = [
-    ("dualfail", 2, 3e-3, {"pair_fail_prob": 0.5}),
-    ("dualfail", 3, 1e-2, {"pair_fail_prob": 0.5}),
-    ("dualfail", 4, 1e-2, {"pair_fail_prob": 0.5}),
-    ("rolling", 2, 1e-3, {"restart_period": 2_000}),
-    ("rolling", 3, 3e-3, {"restart_period": 2_000}),
-    ("rolling", 4, 3e-3, {"restart_period": 2_000}),
-]
+SMOKE_GRID = [(2, 3e-3), (3, 1e-2)]
 
 
-def _grid_scale(full: bool):
+def _grid_scale(full: bool, smoke: bool = False):
     """(n, partitions) — one place, so i.i.d. and scenario rows always run
     at the same cluster scale and their u columns stay comparable."""
+    if smoke:
+        return (31, 128)
     return (155, 4096) if full else (63, 512)
 
 
-def run(full: bool = False, seeds=(0,), backend: str = "event"):
-    grid = FULL_GRID if full else REDUCED_GRID
-    n, parts = _grid_scale(full)
-    max_ticks = 3_000_000 if full else 250_000
+def _autotune_row(n: int, parts: int, trials: int, devices: int):
+    """Race PAC block_p candidates on the per-device sweep tile shape."""
+    from repro.kernels.ops import autotune_block_p
+    R = (trials // devices) * parts
+    res = autotune_block_p(R, n, rf=2, voters=3, n_real=n)
+    row = {"kind": "autotune", "block_p": res.block_p, "source": res.source,
+           "timings_us": {str(k): v for k, v in res.timings_us.items()}}
+    print(f"autotune,block_p,0,choice={res.block_p};source={res.source};"
+          f"candidates={len(res.timings_us)}")
+    return res.block_p, row
+
+
+def run(full: bool = False, seeds=(0,), backend: str = "event",
+        devices: int = 1, smoke: bool = False, pac_block_p=None):
+    grid = SMOKE_GRID if smoke else (FULL_GRID if full else REDUCED_GRID)
+    n, parts = _grid_scale(full, smoke)
+    max_ticks = 40_000 if smoke else (3_000_000 if full else 250_000)
+    min_ticks = 10_000 if smoke else 30_000
     rows = []
     for rf, p in grid:
         if backend == "event":
-            us_l, us_m = [], []
+            us_l, us_m, cis_l, cis_m = [], [], [], []
             ticks = 0
             for s in seeds:
                 r = simulate_availability(n=n, partitions=parts, rf=rf, p=p,
                                           max_ticks=max_ticks,
-                                          min_ticks=30_000, seed=s)
+                                          min_ticks=min_ticks, seed=s)
                 us_l.append(r.u_lark)
                 us_m.append(r.u_maj)
+                cis_l.append(r.ci_lark)
+                cis_m.append(r.ci_maj)
                 ticks = r.ticks
-            u_l = sum(us_l) / len(us_l)
-            u_m = sum(us_m) / len(us_m)
+            N = len(seeds)
+            u_l = sum(us_l) / N
+            u_m = sum(us_m) / N
+            # half-width of the across-seed mean: independent runs, so
+            # se_mean = sqrt(sum se_i^2) / N
+            ci_l = math.sqrt(sum(c * c for c in cis_l)) / N
+            ci_m = math.sqrt(sum(c * c for c in cis_m)) / N
         else:
             r = simulate_availability_batched(
                 n=n, partitions=parts, rf=rf, p=p, trials=len(seeds),
-                max_ticks=max_ticks, min_ticks=30_000, seed=min(seeds),
-                backend=backend)
+                max_ticks=max_ticks, min_ticks=min_ticks, seed=min(seeds),
+                backend=backend, devices=devices, pac_block_p=pac_block_p)
             u_l, u_m, ticks = r.u_lark, r.u_maj, r.ticks
+            ci_l, ci_m = r.ci_lark, r.ci_maj
         f = rf - 1
         rows.append({
-            "rf": rf, "p": p, "u_lark": u_l, "u_maj": u_m,
+            "kind": "iid", "rf": rf, "p": p, "u_lark": u_l, "u_maj": u_m,
+            "ci_lark": ci_l, "ci_maj": ci_m,
             "ratio": u_m / u_l if u_l else float("inf"),
             "analytic_ratio": improvement_factor(f),
             "analytic_u_lark": lark_unavailability(node_unavailability(p), f),
@@ -89,56 +116,121 @@ def run(full: bool = False, seeds=(0,), backend: str = "event"):
     return rows
 
 
-def run_scenarios(full: bool = False, trials: int = 4,
-                  backend: str = "jax", seed: int = 0):
+def run_scenarios(names, full: bool = False, trials: int = 4,
+                  backend: str = "jax", seed: int = 0, devices: int = 1,
+                  smoke: bool = False, pac_block_p=None):
     backend = "numpy" if backend == "event" else backend
-    n, parts = _grid_scale(full)
-    max_ticks = 1_000_000 if full else 120_000
+    devices = 1 if backend == "numpy" else devices
+    n, parts = _grid_scale(full, smoke)
+    max_ticks = 30_000 if smoke else (1_000_000 if full else 120_000)
+    min_ticks = 8_000 if smoke else 20_000
     rows = []
-    for tag, rf, p, kw in SCENARIO_GRID:
-        r = simulate_availability_batched(
-            n=n, partitions=parts, rf=rf, p=p, trials=trials,
-            max_ticks=max_ticks, min_ticks=20_000, seed=seed,
-            backend=backend, **kw)
-        rows.append({
-            "tag": tag, "rf": rf, "p": p, "u_lark": r.u_lark,
-            "u_maj": r.u_maj,
-            "ratio": r.u_maj / r.u_lark if r.u_lark else float("inf"),
-            "ticks": r.ticks, **kw,
-        })
+    for name in names:
+        sc = get_scenario(name)
+        for rf, p in sc.grid:
+            r = simulate_availability_batched(
+                n=n, partitions=parts, rf=rf, p=p, trials=trials,
+                max_ticks=max_ticks, min_ticks=min_ticks, seed=seed,
+                backend=backend, devices=devices, pac_block_p=pac_block_p,
+                **sc.kwargs(n=n, rf=rf, p=p))
+            rows.append({
+                "kind": "scenario", "scenario": name, "rf": rf, "p": p,
+                "u_lark": r.u_lark, "u_maj": r.u_maj,
+                "ci_lark": r.ci_lark, "ci_maj": r.ci_maj,
+                "ratio": r.u_maj / r.u_lark if r.u_lark else float("inf"),
+                "ticks": r.ticks,
+            })
     return rows
 
 
-def main(argv=None):
+def _resolve_scenarios(args, ap):
+    names = []
+    for sel in args.scenario or []:
+        names.extend(s for s in sel.split(",") if s)
+    if (args.scenarios or args.scenarios_only) and not names:
+        names = ["all"]
+    for name in names:
+        if name != "all" and name not in scenario_names():
+            ap.error(f"unknown scenario {name!r}; registered: "
+                     f"{', '.join(scenario_names())} (or 'all')")
+    if "all" in names:
+        return list(scenario_names())
+    return names
+
+
+def main(argv=None, *, strict: bool = True):
     # allow_abbrev off: a prefix typo like --ful must fail loudly, not
     # silently launch the hours-long paper-scale grid
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0],
                                  allow_abbrev=False)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid/scale (CI pallas-interpret lane)")
     ap.add_argument("--backend", default="event",
                     choices=("event", "numpy", "jax", "pallas"))
     ap.add_argument("--trials", type=int, default=1,
                     help="seeds (event) or batch size (batched backends)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="shard trials over this many devices (jax/pallas)")
+    ap.add_argument("--scenario", action="append", metavar="NAME",
+                    help="append a registered scenario's grid (repeatable, "
+                         "comma-separated, or 'all')")
     ap.add_argument("--scenarios", action="store_true",
-                    help="append the dual-failure / rolling-restart grid")
+                    help="legacy alias for --scenario all")
     ap.add_argument("--scenarios-only", action="store_true",
                     help="skip the i.i.d. grid (scenario rows only)")
-    args = ap.parse_args(argv if argv is not None else sys.argv[1:])
+    ap.add_argument("--autotune", action="store_true",
+                    help="race pallas block_p candidates before the sweep")
+    ap.add_argument("--json", metavar="PATH",
+                    help="also dump rows + CI half-widths as JSON")
+    args, extra = ap.parse_known_args(argv if argv is not None
+                                      else sys.argv[1:])
+    if strict and extra:
+        ap.error(f"unrecognized arguments: {' '.join(extra)}")
     if args.trials < 1:
         ap.error("--trials must be >= 1")
+    if args.devices < 1:
+        ap.error("--devices must be >= 1")
+    if args.devices > 1:
+        if args.backend in ("event", "numpy"):
+            ap.error("--devices > 1 needs --backend jax or pallas")
+        if args.trials % args.devices:
+            ap.error("--trials must be a multiple of --devices")
+    if args.autotune and args.backend != "pallas":
+        ap.error("--autotune tunes the pallas kernel block size; "
+                 "use --backend pallas")
+
+    names = _resolve_scenarios(args, ap)
+    rows = []
+    pac_block_p = None
+    if args.autotune:
+        n, parts = _grid_scale(args.full, args.smoke)
+        pac_block_p, row = _autotune_row(n, parts, args.trials, args.devices)
+        rows.append(row)
 
     if not args.scenarios_only:
         for r in run(full=args.full, seeds=tuple(range(args.trials)),
-                     backend=args.backend):
+                     backend=args.backend, devices=args.devices,
+                     smoke=args.smoke, pac_block_p=pac_block_p):
+            rows.append(r)
             print(f"availability,rf{r['rf']}_p{r['p']:g},0,"
                   f"u_lark={r['u_lark']:.3e};u_maj={r['u_maj']:.3e};"
                   f"ratio={r['ratio']:.2f};analytic={r['analytic_ratio']}")
-    if args.scenarios or args.scenarios_only:
-        for r in run_scenarios(full=args.full, trials=args.trials,
-                               backend=args.backend):
-            print(f"availability_scenario,{r['tag']}_rf{r['rf']}_"
+    if names:
+        for r in run_scenarios(names, full=args.full, trials=args.trials,
+                               backend=args.backend, devices=args.devices,
+                               smoke=args.smoke, pac_block_p=pac_block_p):
+            rows.append(r)
+            print(f"availability_scenario,{r['scenario']}_rf{r['rf']}_"
                   f"p{r['p']:g},0,u_lark={r['u_lark']:.3e};"
                   f"u_maj={r['u_maj']:.3e};ratio={r['ratio']:.2f}")
+    if args.json:
+        doc = {"meta": {"backend": args.backend, "trials": args.trials,
+                        "devices": args.devices, "full": args.full,
+                        "smoke": args.smoke, "scenarios": names},
+               "rows": rows}
+        with open(args.json, "w") as fh:
+            json.dump(doc, fh, indent=1, sort_keys=True)
     return 0
 
 

@@ -1,0 +1,90 @@
+"""Gate a sweep run against a committed baseline (nightly CI regression).
+
+Compares an ``availability_sweep.py --json`` dump row-by-row with a
+baseline produced by the same command (benchmarks/BENCH_sweep.json) and
+exits 1 when any shared row's u_lark/u_maj drifts more than --sigma
+combined standard errors (CI half-widths are 95% → se = ci/1.96).
+
+The Monte Carlo draws counter-based randomness, so an unchanged tree
+reproduces the baseline *exactly*; drift within sigma allows for
+intentional stopping-rule or scenario retunes, anything beyond it means a
+semantic change that should come with a refreshed baseline:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python benchmarks/availability_sweep.py --backend jax --trials 8 \
+        --devices 8 --scenario all --json benchmarks/BENCH_sweep.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+_SE_FLOOR = 1e-12   # deterministic RNG: identical runs pass at se == 0
+
+
+def row_key(r: dict):
+    if r.get("kind") == "scenario":
+        return ("scenario", r["scenario"], r["rf"], r["p"])
+    if r.get("kind") == "iid":
+        return ("iid", r["rf"], r["p"])
+    return None                      # autotune/meta rows are not gated
+
+
+def compare(new: dict, base: dict, sigma: float):
+    base_rows = {row_key(r): r for r in base["rows"]
+                 if row_key(r) is not None}
+    failures, notes, checked = [], [], 0
+    seen = set()
+    for r in new["rows"]:
+        k = row_key(r)
+        if k is None:
+            continue
+        seen.add(k)
+        b = base_rows.get(k)
+        if b is None:
+            notes.append(f"new row (not in baseline, skipped): {k}")
+            continue
+        checked += 1
+        for col, ci_col in (("u_lark", "ci_lark"), ("u_maj", "ci_maj")):
+            se = max(math.hypot(r[ci_col] / 1.96, b[ci_col] / 1.96),
+                     _SE_FLOOR)
+            drift = abs(r[col] - b[col])
+            if drift > sigma * se:
+                failures.append(
+                    f"{k} {col}: {b[col]:.4e} -> {r[col]:.4e} "
+                    f"(drift {drift:.2e} > {sigma:g}*se {sigma * se:.2e})")
+    for k in base_rows:
+        if k not in seen:
+            failures.append(f"baseline row missing from run: {k}")
+    return failures, notes, checked
+
+
+def main(argv=None, *, strict: bool = True) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("results", help="sweep --json output to check")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("--sigma", type=float, default=2.0,
+                    help="allowed drift in combined standard errors")
+    args = ap.parse_args(argv if argv is not None else sys.argv[1:])
+
+    with open(args.results) as fh:
+        new = json.load(fh)
+    with open(args.baseline) as fh:
+        base = json.load(fh)
+    failures, notes, checked = compare(new, base, args.sigma)
+    for s in notes:
+        print(f"note: {s}")
+    if failures:
+        print(f"REGRESSION: {len(failures)} of {checked} gated rows "
+              f"outside {args.sigma:g} sigma")
+        for s in failures:
+            print(f"  {s}")
+        return 1
+    print(f"ok: {checked} rows within {args.sigma:g} sigma of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

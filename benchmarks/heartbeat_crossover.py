@@ -20,7 +20,7 @@ def crossover(P: int = 4096, rf: int = 3) -> float:
     return math.sqrt(P * rf * (rf - 1))
 
 
-def main(argv=None):
+def main(argv=None, *, strict: bool = True):  # noqa: ARG001 - run.py contract
     P, rf = 4096, 3
     n_star = crossover(P, rf)
     below = lark_heartbeats(150) < quorum_heartbeats(P, rf)

@@ -1,8 +1,14 @@
 """Kernel micro-benchmarks: µs/call of the jnp oracle paths on CPU (the
 Pallas kernels themselves target TPU; interpret mode is not a timing proxy).
+
+--autotune additionally races the Pallas PAC block_p candidates on the
+Monte Carlo tile shape (measured on TPU; deterministic heuristic fallback
+on CPU, where interpret-mode timings would measure the interpreter).
 """
 from __future__ import annotations
 
+import argparse
+import sys
 import time
 
 import jax
@@ -10,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
-from repro.kernels.ops import pac_eval_batch
+from repro.kernels.ops import autotune_block_p, pac_eval_batch
 
 
 def _time(fn, *args, iters=5) -> float:
@@ -22,7 +28,15 @@ def _time(fn, *args, iters=5) -> float:
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def main(argv=None):
+def main(argv=None, *, strict: bool = True):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0],
+                                 allow_abbrev=False)
+    ap.add_argument("--autotune", action="store_true",
+                    help="race pallas PAC block_p candidates")
+    args, extra = ap.parse_known_args(argv if argv is not None
+                                      else sys.argv[1:])
+    if strict and extra:
+        ap.error(f"unrecognized arguments: {' '.join(extra)}")
     rng = np.random.default_rng(0)
     B, H, S, D = 1, 4, 1024, 64
     q, k, v = (jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
@@ -62,6 +76,13 @@ def main(argv=None):
                                                 n_real=155, backend="jax"))
     print(f"kernel_pac_batch_jax,r{R}n155,"
           f"{_time(pac_j, upj, fullj):.0f},trials=8xp4096")
+    if args.autotune:
+        res = autotune_block_p(R, 155, rf=3, voters=5, n_real=155)
+        print(f"kernel_pac_autotune,r{R}n155,0,"
+              f"choice={res.block_p};source={res.source}")
+        for bp in sorted(res.timings_us):
+            print(f"kernel_pac_block,bp{bp},{res.timings_us[bp]:.0f},"
+                  f"autotune_candidate")
     return 0
 
 

@@ -33,7 +33,7 @@ def run(ticks: int = 520_000):
     return out
 
 
-def main(argv=None):
+def main(argv=None, *, strict: bool = True):  # noqa: ARG001 - run.py contract
     ticks = 520_000
     results = run(ticks=ticks)
     paper = {"t3": PAPER_T3, "t4": PAPER_T4}

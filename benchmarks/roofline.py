@@ -112,7 +112,7 @@ def load_cells(mesh: str = "pod16x16") -> List[Dict]:
     return rows
 
 
-def main(argv=None):
+def main(argv=None, *, strict: bool = True):  # noqa: ARG001 - run.py contract
     rows = load_cells()
     for r in rows:
         if r["status"] != "ok":

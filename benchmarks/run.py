@@ -7,6 +7,12 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * microsim_t3/t4       — §5.2 Tables 3 and 4 (all 24 cells)
   * kernel_*             — Pallas-oracle micro-timings
   * roofline             — per (arch x shape) terms from the dry-run
+
+The same argv goes to every suite, but each suite parses it with
+``strict=False`` (parse_known_args), so suite-specific flags like the
+sweep's --backend/--trials/--devices pass harmlessly through the suites
+that don't know them.  Run a suite standalone to get strict parsing back
+(unknown flags fail loudly there).
 """
 from __future__ import annotations
 
@@ -20,11 +26,9 @@ def main() -> None:
                             kernel_bench, microsim_tables, roofline)
 
     t0 = time.time()
-    heartbeat_crossover.main(argv)
-    kernel_bench.main(argv)
-    availability_sweep.main(argv)
-    microsim_tables.main(argv)
-    roofline.main(argv)
+    for suite in (heartbeat_crossover, kernel_bench, availability_sweep,
+                  microsim_tables, roofline):
+        suite.main(argv, strict=False)
     print(f"benchmarks_total,all,{(time.time()-t0)*1e6:.0f},seconds="
           f"{time.time()-t0:.1f}")
 

@@ -15,9 +15,16 @@ through the unified backend layer in kernels/ops.py:
                     interpret mode on CPU)
 
 All backends draw randomness from the same counter-based hash (splitmix-
-style, implemented identically in numpy and jnp), so for a given seed the
-three produce bit-identical trajectories — the cross-backend agreement
-tests rely on this.
+style, implemented identically in numpy and jnp) keyed by the *global*
+(trial, node) lane index, so for a given seed the three produce
+bit-identical trajectories — and so do sharded runs: with ``devices=D``
+the trials axis is split across a 1-D "trials" mesh (shard_map over
+launch/mesh.make_trials_mesh), each shard scanning its B/D trials with its
+own slice of the carried lane-offset vector.  Because no step computation
+crosses trials and every variate is a pure function of (seed, step, global
+lane), a D-device run is bit-identical to the single-device run — the
+cross-device agreement tests hold it to that (validate on CPU with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
 
 Model semantics match the event engine: geometric inter-failure gaps per
 node, fixed downtime, whole-cluster SimpleMajority PAC with frozen holders
@@ -28,14 +35,20 @@ same-tick events), which can freeze a marginally different holder set on
 coincident failures — a zero-measure-in-time difference that is invisible
 at the CI tolerances used here.
 
-Scenario knobs beyond the paper's i.i.d. grid:
+Scenario knobs beyond the paper's i.i.d. grid (named policies over these
+live in core/scenarios.py):
   pair_fail_prob  correlated dual failures: when a node fails, its pair
                   partner (2i <-> 2i+1) fails at the same tick with this
                   probability (shared rack / power domain).
   restart_period  rolling restart: every `restart_period` ticks the next
-                  node in id order is taken down for `downtime` ticks
-                  (§5.3's zero-downtime rolling-restart claim, as a
-                  Monte Carlo scenario).
+                  `wave_width` nodes in id order are taken down for their
+                  downtime (§5.3's zero-downtime rolling-restart claim,
+                  as a Monte Carlo scenario).
+  wave_width      nodes per restart wave (1 = serial rolling restart).
+  p_node          per-node failure probability (heterogeneous MTTF);
+                  overrides the scalar `p` for gap scheduling.
+  downtime_node   per-node downtime ticks (flapping nodes recover fast);
+                  overrides the scalar `downtime`.
 """
 from __future__ import annotations
 
@@ -67,8 +80,13 @@ def _mix32(x, xp):
     return x
 
 
-def _uniforms(seed_mix, step_u32, salt: int, count: int, xp):
-    """count uniforms in [0, 1) from (seed, step, lane) — no carried state.
+def _uniforms(seed_mix, step_u32, salt: int, lane0, n: int, xp):
+    """(B, n) uniforms in [0, 1) from (seed, step, global lane) — stateless.
+
+    ``lane0[b]`` is trial b's first *global* lane id (global_trial * n), so
+    the variate a (trial, node) pair sees depends only on its global index,
+    never on how the trials axis is sharded — this is what makes a
+    shard_map'd run bit-identical to the single-device run.
 
     The step is hashed into a per-step *key* rather than multiplied into a
     flat counter: a `step * count + lane` counter wraps mod 2^32 and would
@@ -80,7 +98,8 @@ def _uniforms(seed_mix, step_u32, salt: int, count: int, xp):
     """
     step_u32 = xp.reshape(step_u32, (1,)).astype(xp.uint32)
     key = _mix32(step_u32 ^ seed_mix ^ xp.uint32(salt), xp)
-    lanes = xp.arange(count, dtype=xp.uint32) * xp.uint32(0x9E3779B9)
+    lanes = (lane0[:, None] + xp.arange(n, dtype=xp.uint32)[None, :]) \
+        * xp.uint32(0x9E3779B9)
     h = _mix32(_mix32(lanes ^ key, xp) ^ seed_mix, xp)
     return (h >> 8).astype(xp.float32) * xp.float32(1.0 / (1 << 24))
 
@@ -111,6 +130,28 @@ def _geometric(u, breaks, xp):
     return (xp.searchsorted(breaks, u, side="right") + 1).astype(xp.int32)
 
 
+def _geo_tables(p_arr: np.ndarray, gap_cap: int, xp):
+    """Per-node-class Geom(p) tables: (node masks, CDF tables) per unique p.
+
+    Heterogeneous MTTF keeps one table per distinct failure probability
+    (scenarios use a handful of tiers, never n distinct values) and selects
+    per node with a mask — all comparisons, so cross-backend bit-identity
+    is preserved.
+    """
+    uniq, inv = np.unique(p_arr, return_inverse=True)
+    masks = [xp.asarray(inv == k) for k in range(len(uniq))]
+    tables = [xp.asarray(_geometric_breaks(float(pv), gap_cap))
+              for pv in uniq]
+    return masks, tables
+
+
+def _geometric_multi(u, geo_masks, geo_tables, xp):
+    geo = _geometric(u, geo_tables[0], xp)
+    for m, tbl in zip(geo_masks[1:], geo_tables[1:]):
+        geo = xp.where(m[None, :], _geometric(u, tbl, xp), geo)
+    return geo
+
+
 # ---------------------------------------------------------------------------
 # Result
 # ---------------------------------------------------------------------------
@@ -131,6 +172,7 @@ class BatchedAvailabilityResult:
     ci_lark: float
     ci_maj: float
     stopped_early: bool
+    devices: int = 1
     u_lark_trials: np.ndarray = field(repr=False, default=None)
     u_maj_trials: np.ndarray = field(repr=False, default=None)
     trajectory: Optional[Dict[str, np.ndarray]] = field(repr=False,
@@ -145,12 +187,14 @@ class BatchedAvailabilityResult:
 # The per-event step, written once for both array namespaces.
 # ---------------------------------------------------------------------------
 
-def _make_step(xp, pac_fn, succ, *, B: int, n: int, P: int, horizon: int,
-               downtime: int, geo_breaks, seed_mix, pair_fail_prob: float,
-               pair_perm, restart_period: int):
+def _make_step(xp, pac_fn, succ, *, n: int, P: int, horizon: int,
+               dt_vec, geo_masks, geo_tables, seed_mix,
+               pair_fail_prob: float, pair_perm, restart_period: int,
+               wave_width: int):
     def step(carry, s):
-        (now, up, ev_t, full, unl, unm, lpt, mpt, le, me, rr_t,
-         rr_idx) = carry
+        (now, up, ev_t, full, unl, unm, lpt, mpt, le, me, rr_t, rr_idx,
+         lane0) = carry
+        B = up.shape[0]               # local trials (a shard of the batch)
         node_next = xp.min(ev_t, axis=1)                     # (B,)
         t_next = node_next if not restart_period else \
             xp.minimum(node_next, rr_t)
@@ -166,22 +210,23 @@ def _make_step(xp, pac_fn, succ, *, B: int, n: int, P: int, horizon: int,
         rec_hit = hit & ~up
         if restart_period:
             rr_hit = active & (rr_t == t_next)
-            tgt = xp.arange(n, dtype=xp.int32)[None, :] == rr_idx[:, None]
+            offs = (xp.arange(n, dtype=xp.int32)[None, :]
+                    - rr_idx[:, None]) % n
+            tgt = offs < wave_width
             fail_hit = fail_hit | (tgt & up & rr_hit[:, None])
-            rr_idx = xp.where(rr_hit, (rr_idx + 1) % n, rr_idx)
+            rr_idx = xp.where(rr_hit, (rr_idx + wave_width) % n, rr_idx)
             rr_t = xp.where(rr_hit, rr_t + restart_period, rr_t)
         s_u32 = xp.asarray(s).astype(xp.uint32)
         if pair_fail_prob > 0.0:
-            u2 = _uniforms(seed_mix, s_u32, _PAIR_SALT, B * n,
-                           xp).reshape(B, n)
+            u2 = _uniforms(seed_mix, s_u32, _PAIR_SALT, lane0, n, xp)
             pf = fail_hit[:, pair_perm] & up & ~fail_hit & ~rec_hit & \
                 (u2 < pair_fail_prob)
             fail_hit = fail_hit | pf
         up = (up & ~fail_hit) | rec_hit
-        geo = _geometric(
-            _uniforms(seed_mix, s_u32, _GEO_SALT, B * n, xp).reshape(B, n),
-            geo_breaks, xp)
-        ev_t = xp.where(fail_hit, t_clamp[:, None] + downtime,
+        geo = _geometric_multi(
+            _uniforms(seed_mix, s_u32, _GEO_SALT, lane0, n, xp),
+            geo_masks, geo_tables, xp)
+        ev_t = xp.where(fail_hit, t_clamp[:, None] + dt_vec[None, :],
                         xp.where(rec_hit, t_clamp[:, None] + geo, ev_t))
 
         lark, maj, creps = pac_fn(up[:, succ].reshape(B * P, n),
@@ -192,9 +237,10 @@ def _make_step(xp, pac_fn, succ, *, B: int, n: int, P: int, horizon: int,
         new_unm = xp.sum(~maj.reshape(B, P), axis=1).astype(xp.int32)
         le = le + xp.maximum(new_unl - unl, 0)
         me = me + xp.maximum(new_unm - unm, 0)
+        nodes_up = xp.sum(up, axis=1).astype(xp.int32)
         carry = (now, up, ev_t, full, new_unl, new_unm, lpt, mpt, le, me,
-                 rr_t, rr_idx)
-        return carry, (t_clamp, new_unl, new_unm)
+                 rr_t, rr_idx, lane0)
+        return carry, (t_clamp, new_unl, new_unm, nodes_up)
     return step
 
 
@@ -209,13 +255,33 @@ def simulate_availability_batched(
         eps_abs: float = 5e-6, eps_rel: float = 0.05,
         min_events: int = 200, seed: int = 0, backend: str = "jax",
         pair_fail_prob: float = 0.0, restart_period: int = 0,
+        wave_width: int = 1, p_node=None, downtime_node=None,
+        devices: int = 1, pac_block_p: Optional[int] = None,
         chunk_steps: int = 512, max_steps: Optional[int] = None,
-        trajectory: bool = False) -> BatchedAvailabilityResult:
+        trajectory: bool = False,
+        use_shard_map: Optional[bool] = None) -> BatchedAvailabilityResult:
     """Batched Monte Carlo over `trials` trajectories sharing one succession
-    matrix (seeded); failure randomness is independent per trial."""
+    matrix (seeded); failure randomness is independent per trial.
+
+    devices > 1 shards the trials axis over a 1-D "trials" mesh
+    (launch/mesh.make_trials_mesh) via shard_map — bit-identical to
+    devices=1 for the same seed.  `use_shard_map` forces the shard_map
+    code path even on one device (tests).
+    """
     if backend not in PAC_BACKENDS:
         raise ValueError(f"backend must be one of {PAC_BACKENDS} "
                          f"(the sweep handles 'event' separately)")
+    if devices < 1:
+        raise ValueError("devices must be >= 1")
+    if devices > 1 and backend == "numpy":
+        raise ValueError("multi-device sharding needs a jax backend "
+                         "('jax' or 'pallas'); numpy has no device mesh")
+    if trials % devices:
+        raise ValueError(f"trials ({trials}) must divide evenly across "
+                         f"devices ({devices})")
+    if not 1 <= wave_width <= n:
+        raise ValueError("wave_width must be in [1, n]")
+    shard = use_shard_map if use_shard_map is not None else devices > 1
     B, P, horizon = trials, partitions, max_ticks
     succ_np = succession_matrix_fast(P, range(n), seed=seed)
     voters = 2 * (rf - 1) + 1
@@ -225,27 +291,42 @@ def simulate_availability_batched(
     if backend == "numpy":
         xp, succ = np, succ_np
     else:
-        import jax
         import jax.numpy as jnp
         xp, succ = jnp, jnp.asarray(succ_np)
 
+    p_arr = np.full(n, p, dtype=np.float64) if p_node is None \
+        else np.asarray(p_node, dtype=np.float64)
+    dt_arr = np.full(n, downtime, dtype=np.int64) if downtime_node is None \
+        else np.asarray(downtime_node, dtype=np.int64)
+    if p_arr.shape != (n,) or dt_arr.shape != (n,):
+        raise ValueError("p_node / downtime_node must have shape (n,)")
+    if not ((p_arr > 0) & (p_arr < 1)).all() or (dt_arr < 1).any():
+        raise ValueError("p_node must lie in (0, 1) and downtime_node >= 1")
+    dt_max = int(dt_arr.max())
+
     seed_mix = _mix32(xp.asarray([(seed & 0xFFFFFFFF) ^ 0x6A09E667],
                                  dtype=xp.uint32), xp)
-    geo_breaks = xp.asarray(_geometric_breaks(p, max_ticks + downtime + 2))
+    geo_masks, geo_tables = _geo_tables(p_arr, max_ticks + dt_max + 2, xp)
+    dt_vec = xp.asarray(dt_arr, dtype=xp.int32)
     pac_fn = lambda u, f: pac_eval_batch(u, f, rf=rf, voters=voters,
-                                         n_real=n, backend=backend)
-    step = _make_step(xp, pac_fn, succ, B=B, n=n, P=P, horizon=horizon,
-                      downtime=downtime, geo_breaks=geo_breaks,
-                      seed_mix=seed_mix, pair_fail_prob=pair_fail_prob,
-                      pair_perm=pair_perm, restart_period=restart_period)
+                                         n_real=n, backend=backend,
+                                         block_p=pac_block_p)
+    step = _make_step(xp, pac_fn, succ, n=n, P=P, horizon=horizon,
+                      dt_vec=dt_vec, geo_masks=geo_masks,
+                      geo_tables=geo_tables, seed_mix=seed_mix,
+                      pair_fail_prob=pair_fail_prob, pair_perm=pair_perm,
+                      restart_period=restart_period, wave_width=wave_width)
 
     # initial state: everyone up, roster replicas full, first failures at
-    # geometric gaps (step counter 0; scan steps start at 1)
+    # geometric gaps (step counter 0; scan steps start at 1).  lane0 is the
+    # global first-lane index per trial — carried so each shard keeps its
+    # global identity after the trials axis is split.
+    lane0 = xp.arange(B, dtype=xp.uint32) * xp.uint32(n)
     up0 = xp.ones((B, n), dtype=bool)
-    ev0 = _geometric(
+    ev0 = _geometric_multi(
         _uniforms(seed_mix, xp.asarray(0, dtype=xp.uint32), _GEO_SALT,
-                  B * n, xp).reshape(B, n),
-        geo_breaks, xp)
+                  lane0, n, xp),
+        geo_masks, geo_tables, xp)
     full0 = xp.zeros((B, P, n), dtype=bool)
     if backend == "numpy":
         full0[:, :, :rf] = True
@@ -262,19 +343,34 @@ def simulate_availability_batched(
     carry = (zi, up0, ev0, full0,
              xp.sum(~lark0.reshape(B, P), axis=1).astype(xp.int32),
              xp.sum(~maj0.reshape(B, P), axis=1).astype(xp.int32),
-             zf, zf, zi, zi, rr_t0, zi)
+             zf, zf, zi, zi, rr_t0, zi, lane0)
 
     if backend != "numpy":
         import jax
         import jax.numpy as jnp
 
-        @jax.jit
-        def run_chunk(carry, s0):
+        def _chunk(c, s0):
             return jax.lax.scan(
-                step, carry, s0 + jnp.arange(chunk_steps, dtype=jnp.int32))
+                step, c, s0 + jnp.arange(chunk_steps, dtype=jnp.int32))
+
+        if shard:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec
+
+            from ..launch.mesh import make_trials_mesh
+            mesh = make_trials_mesh(devices)
+            cspec = tuple(PartitionSpec("trials") for _ in carry)
+            yspec = tuple(PartitionSpec(None, "trials") for _ in range(4))
+            run_chunk = jax.jit(shard_map(
+                _chunk, mesh=mesh,
+                in_specs=(cspec, PartitionSpec()),
+                out_specs=(cspec, yspec), check_rep=False))
+        else:
+            run_chunk = jax.jit(_chunk)
 
     if max_steps is None:
-        per_trial = 2.0 * n * horizon / (1.0 / p + downtime)
+        p_eff = float(p_arr.mean())
+        per_trial = 2.0 * n * horizon / (1.0 / p_eff + float(dt_arr.mean()))
         if restart_period:
             per_trial += 2.0 * horizon / restart_period
         max_steps = int(3 * per_trial) + 2000
@@ -339,9 +435,9 @@ def simulate_availability_batched(
         hw_m = t * float(u_m_trials.std(ddof=1))
     traj_out = None
     if trajectory:
-        cols = [np.concatenate([c[i] for c in traj]) for i in range(3)]
+        cols = [np.concatenate([c[i] for c in traj]) for i in range(4)]
         traj_out = {"times": cols[0], "unavail_lark": cols[1],
-                    "unavail_maj": cols[2]}
+                    "unavail_maj": cols[2], "nodes_up": cols[3]}
     return BatchedAvailabilityResult(
         p=p, rf=rf, n=n, partitions=P, trials=B, backend=backend,
         ticks=int(now.mean()), u_lark=u_l, u_maj=u_m,
@@ -350,6 +446,6 @@ def simulate_availability_batched(
                     1.96 * math.sqrt(max(u_l * (1 - u_l), 1e-30) / pt)),
         ci_maj=max(hw_m,
                    1.96 * math.sqrt(max(u_m * (1 - u_m), 1e-30) / pt)),
-        stopped_early=stopped,
+        stopped_early=stopped, devices=devices,
         u_lark_trials=u_l_trials, u_maj_trials=u_m_trials,
         trajectory=traj_out)

@@ -11,7 +11,8 @@ from __future__ import annotations
 
 import functools
 import os
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -98,14 +99,133 @@ def _pallas_block_p(R: int) -> int:
     return bp
 
 
+def _pac_lane_pad(n_pad: int) -> int:
+    """Node axis padded up to a lane multiple for the VPU tile."""
+    return n_pad + (-n_pad % 128)
+
+
+def pac_vmem_bytes(block_p: int, n_pad: int) -> int:
+    """VMEM the PAC kernel holds live for one (block_p, n_lanes) block:
+    three int32 input tiles (up, full, valid), the int32 cumsum/creps
+    working tile, and the bool outputs — the budget the autotuner's
+    candidate enumeration respects."""
+    n_lanes = _pac_lane_pad(n_pad)
+    return block_p * n_lanes * 4 * 4 + block_p * (2 + n_lanes)
+
+
+def block_p_candidates(R: int, n_pad: int, *, max_block: int = 1024,
+                       vmem_limit_bytes: int = 8 * 2 ** 20):
+    """Power-of-two block_p values that tile R rows within the VMEM budget.
+
+    Deterministic pure function of its arguments — the autotuner measures
+    exactly this set, so two runs on the same shape always race the same
+    candidates.
+    """
+    cands = []
+    bp = 8
+    while bp <= min(R, max_block):
+        if R % bp == 0 and pac_vmem_bytes(bp, n_pad) <= vmem_limit_bytes:
+            cands.append(bp)
+        bp *= 2
+    return tuple(cands) or (_pallas_block_p(R),)
+
+
+@dataclass(frozen=True)
+class AutotuneResult:
+    block_p: int
+    timings_us: Mapping[int, float]   # candidate -> median µs/call
+    source: str                       # "measured" | "heuristic-fallback"
+
+
+_AUTOTUNE_CACHE: dict = {}
+
+
+def _measure_pac_block(R: int, n_pad: int, bp: int, *, rf: int, voters: int,
+                       n_real: int, iters: int) -> float:
+    """Median µs/call of the Pallas PAC kernel at one block size, on a
+    deterministic synthetic tile (counter-hash density pattern, no RNG
+    state)."""
+    import time
+
+    from . import pac_eval as pk
+    n_lanes = _pac_lane_pad(n_pad)
+    idx = (jnp.arange(R, dtype=jnp.uint32)[:, None] * jnp.uint32(n_lanes)
+           + jnp.arange(n_lanes, dtype=jnp.uint32)[None, :])
+    up = (idx * jnp.uint32(2654435761) % jnp.uint32(97)) < 90   # ~93% up,
+    full = (idx * jnp.uint32(40503) % jnp.uint32(89)) < 30      # fixed pattern
+    fn = jax.jit(functools.partial(
+        pk.pac_eval, rf=rf, voters=voters, n_real=n_real, block_p=bp,
+        interpret=jax.default_backend() != "tpu"))
+    jax.block_until_ready(fn(up, full))        # compile + warmup
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(up, full))
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def autotune_block_p(R: int, n_pad: int, *, rf: int, voters: int,
+                     n_real: int, candidates=None, iters: int = 9,
+                     measure=None, force: bool = False) -> AutotuneResult:
+    """Pick the fastest Pallas PAC block_p for an (R, n_pad) tile.
+
+    Deterministic by construction: the candidate set is a pure function of
+    the shape, each candidate's time is a median over `iters` calls, ties
+    break toward the smaller block, and the choice is cached per
+    (shape, params, candidates) so every later call in the process returns
+    the same answer.  Off-TPU the Pallas kernel runs in interpret mode,
+    where timings measure the interpreter rather than the kernel — so
+    without `force` (or an injected `measure` fn, used by tests) the tuner
+    falls back to the static heuristic instead of publishing noise.
+    """
+    cands = tuple(candidates) if candidates is not None \
+        else block_p_candidates(R, n_pad)
+    if not cands:
+        raise ValueError("autotune_block_p needs at least one candidate")
+    for bp in cands:
+        if R % bp:
+            raise ValueError(f"candidate block_p {bp} does not divide R={R}")
+    # injected-measure calls (tests) bypass the cache: a deterministic fake
+    # is repeatable on its own, and caching across *different* fakes with
+    # the same shape would return stale choices
+    key = (R, n_pad, rf, voters, n_real, cands, force)
+    if measure is None and key in _AUTOTUNE_CACHE:
+        return _AUTOTUNE_CACHE[key]
+    if measure is None:
+        if jax.default_backend() != "tpu" and not force:
+            res = AutotuneResult(block_p=_pallas_block_p(R), timings_us={},
+                                 source="heuristic-fallback")
+            _AUTOTUNE_CACHE[key] = res
+            return res
+        measure = functools.partial(_measure_pac_block, rf=rf,
+                                    voters=voters, n_real=n_real,
+                                    iters=iters)
+        timings = {bp: measure(R, n_pad, bp) for bp in cands}
+        best = min(sorted(timings), key=lambda bp: (timings[bp], bp))
+        res = AutotuneResult(block_p=best, timings_us=timings,
+                             source="measured")
+        _AUTOTUNE_CACHE[key] = res
+        return res
+    timings = {bp: float(measure(R, n_pad, bp)) for bp in cands}
+    best = min(sorted(timings), key=lambda bp: (timings[bp], bp))
+    return AutotuneResult(block_p=best, timings_us=timings,
+                          source="measured")
+
+
 def pac_eval_batch(up_succ, full_succ, *, rf: int, voters: int, n_real: int,
-                   backend: str = "jax"):
+                   backend: str = "jax", block_p: Optional[int] = None):
     """Dispatch a (R, n_pad) rank-space PAC tile to the chosen backend.
 
     backend:
       numpy   vectorized numpy (the event engine's evaluate logic)
       jax     pure-jnp oracle (jit-friendly; use inside lax.scan)
       pallas  kernels/pac_eval.py — compiled on TPU, interpret mode on CPU
+
+    block_p (pallas only) overrides the static block-size heuristic —
+    typically an `autotune_block_p(...)` choice.  Results are elementwise,
+    so every block size yields identical outputs; only throughput changes.
     """
     if backend == "numpy":
         return pac_eval_rank_np(up_succ, full_succ, rf=rf, voters=voters,
@@ -123,7 +243,7 @@ def pac_eval_batch(up_succ, full_succ, *, rf: int, voters: int, n_real: int,
         interpret = jax.default_backend() != "tpu"
         lark, maj, creps = pk.pac_eval(up_succ, full_succ, rf=rf,
                                        voters=voters, n_real=n_real,
-                                       block_p=_pallas_block_p(R),
+                                       block_p=block_p or _pallas_block_p(R),
                                        interpret=interpret)
         return lark, maj, creps[:, :n_pad]
     raise ValueError(f"unknown PAC backend {backend!r}; "

@@ -50,7 +50,10 @@ def pac_eval(up_succ, full_succ, *, rf: int, voters: int, n_real: int,
     """up_succ/full_succ: (P, n_pad) bool.  Returns (lark, maj, creps)."""
     P, n_pad = up_succ.shape
     block_p = min(block_p, P)
-    assert P % block_p == 0
+    if P % block_p:
+        raise ValueError(
+            f"block_p={block_p} must tile the row count P={P} exactly — "
+            "pick a candidate from ops.block_p_candidates(P, n_pad)")
     valid = (jnp.arange(n_pad) < n_real)[None, :].astype(jnp.bool_)
     valid = jnp.broadcast_to(valid, (block_p, n_pad))
 

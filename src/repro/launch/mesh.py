@@ -26,6 +26,26 @@ def make_production_mesh(*, multi_pod: bool = False):
     return Mesh(dev_array, axes)
 
 
+def make_trials_mesh(devices: int):
+    """1-D mesh over the first `devices` devices, axis name "trials".
+
+    The batched availability Monte Carlo shards its independent trials
+    across this axis (shard_map in core/availability_batched.py).  On CPU,
+    validate with XLA_FLAGS=--xla_force_host_platform_device_count=<D> set
+    before any jax import.
+    """
+    import jax
+
+    devs = jax.devices()
+    if len(devs) < devices:
+        raise RuntimeError(
+            f"need {devices} devices for a trials mesh; have {len(devs)} — "
+            "on CPU set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{devices} before any jax import")
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devs[:devices]), ("trials",))
+
+
 def make_host_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh over however many host devices exist (tests)."""
     import jax

@@ -127,6 +127,8 @@ def test_rolling_restart_is_zero_downtime():
     # the restarts actually happened: events at the scheduled cadence
     times = r.trajectory["times"][:, 0]
     assert {1_000, 2_000, 3_000} <= set(times.tolist())
+    # serial (wave width 1) maintenance never has two nodes down at once
+    assert int(r.trajectory["nodes_up"].min()) >= 12 - 1
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,43 @@
+"""Nightly regression gate: row matching and the 2-sigma drift rule."""
+import importlib.util
+from pathlib import Path
+
+_spec = importlib.util.spec_from_file_location(
+    "check_regression",
+    Path(__file__).resolve().parents[1] / "benchmarks" / "check_regression.py")
+check_regression = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_regression)
+
+
+def _row(kind="iid", scenario=None, rf=2, p=1e-3, u=1e-4, um=3e-4, ci=1e-5):
+    r = {"kind": kind, "rf": rf, "p": p, "u_lark": u, "u_maj": um,
+         "ci_lark": ci, "ci_maj": ci}
+    if scenario:
+        r["scenario"] = scenario
+    return r
+
+
+def test_identical_runs_pass_even_with_zero_ci():
+    doc = {"rows": [_row(ci=0.0), _row(kind="scenario", scenario="flapping")]}
+    failures, notes, checked = check_regression.compare(doc, doc, 2.0)
+    assert not failures and checked == 2
+
+
+def test_drift_beyond_sigma_fails_and_within_passes():
+    base = {"rows": [_row(u=1e-4, ci=1e-5)]}
+    # 2 sigma of combined se = 2*sqrt(2)*(1e-5/1.96) ~ 1.44e-5
+    ok = {"rows": [_row(u=1e-4 + 1e-5, ci=1e-5)]}
+    bad = {"rows": [_row(u=1e-4 + 5e-5, ci=1e-5)]}
+    assert not check_regression.compare(ok, base, 2.0)[0]
+    failures = check_regression.compare(bad, base, 2.0)[0]
+    assert failures and "u_lark" in failures[0]
+
+
+def test_missing_baseline_row_fails_and_new_row_is_noted():
+    base = {"rows": [_row(), _row(kind="scenario", scenario="rack-pairs")]}
+    new = {"rows": [_row(), _row(kind="scenario", scenario="flapping"),
+                    {"kind": "autotune", "block_p": 256}]}
+    failures, notes, checked = check_regression.compare(new, base, 2.0)
+    assert any("missing" in f for f in failures)
+    assert any("flapping" in s for s in notes)
+    assert checked == 1          # only the shared iid row is gated

@@ -1,0 +1,138 @@
+"""Scenario registry: naming, kwargs hygiene, and one behavioral property
+per registered failure model (the batched engine's mechanism knobs are
+covered in test_availability_batched.py; these pin the *policies*)."""
+import numpy as np
+import pytest
+
+from repro.core.availability_batched import simulate_availability_batched
+from repro.core.scenarios import (SCENARIOS, get_scenario, register_scenario,
+                                  scenario_names)
+
+_TINY = dict(n=13, partitions=32, trials=2, max_ticks=2_000,
+             min_ticks=10**9, chunk_steps=32, max_steps=120, seed=5,
+             backend="numpy")
+
+
+# ---------------------------------------------------------------------------
+# registry hygiene
+# ---------------------------------------------------------------------------
+
+def test_registry_exposes_at_least_four_named_scenarios():
+    names = scenario_names()
+    assert len(names) >= 4
+    assert "independent" in names
+    for name in names:
+        sc = get_scenario(name)
+        assert sc.name == name and sc.summary
+        assert sc.grid, name
+        for rf, p in sc.grid:
+            assert rf >= 2 and 0 < p < 1
+
+
+def test_unknown_scenario_lists_registered_names():
+    with pytest.raises(KeyError, match="independent"):
+        get_scenario("nope")
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError, match="duplicate"):
+        register_scenario("independent", "again", ((2, 1e-3),))(lambda **kw: {})
+
+
+def test_scenarios_cannot_override_sweep_owned_kwargs():
+    sc = register_scenario("_bad_tmp", "overrides rf", ((2, 1e-3),))(
+        lambda **kw: {"rf": 3})
+    try:
+        with pytest.raises(ValueError, match="sweep-owned"):
+            get_scenario("_bad_tmp").kwargs(n=8, rf=2, p=1e-3)
+    finally:
+        del SCENARIOS["_bad_tmp"], sc
+
+
+@pytest.mark.parametrize("name", scenario_names())
+def test_every_scenario_runs_under_the_batched_engine(name):
+    sc = get_scenario(name)
+    rf, p = sc.grid[0]
+    r = simulate_availability_batched(rf=rf, p=p,
+                                      **sc.kwargs(n=13, rf=rf, p=p), **_TINY)
+    assert 0.0 <= r.u_lark <= 1.0 and 0.0 <= r.u_maj <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# behavioral properties, one per failure model
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wave_width", [2, 3])
+def test_maintenance_wave_never_exceeds_wave_width(wave_width):
+    """A maintenance wave may take down at most `wave_width` nodes at once
+    (failure rate ~0 — at p=1e-7 a background failure still sneaks inside
+    the horizon every ~1e3 redraws, enough to flake — waves spaced beyond
+    the downtime)."""
+    n = 12
+    r = simulate_availability_batched(
+        n=n, partitions=32, rf=2, p=1e-9, trials=2, max_ticks=10_000,
+        min_ticks=10**9, restart_period=400, wave_width=wave_width,
+        downtime=50, backend="numpy", trajectory=True)
+    nodes_up = r.trajectory["nodes_up"]
+    assert int(nodes_up.min()) >= n - wave_width
+    # ... and the waves really do take that many down together
+    assert int(nodes_up.min()) == n - wave_width
+
+
+def test_wave_of_width_one_is_the_rolling_restart_scenario():
+    """wave_width=1 must reproduce the serial rolling restart bit-for-bit
+    (the registry's rolling-restart grid rides on the same mechanism)."""
+    kw = dict(n=12, partitions=32, rf=2, p=1e-5, trials=2, max_ticks=8_000,
+              min_ticks=10**9, restart_period=500, backend="numpy",
+              trajectory=True)
+    a = simulate_availability_batched(wave_width=1, **kw)
+    b = simulate_availability_batched(**kw)          # default width
+    for k in a.trajectory:
+        assert np.array_equal(a.trajectory[k], b.trajectory[k]), k
+
+
+def test_flapping_nodes_hurt_availability():
+    sc = get_scenario("flapping")
+    base = dict(n=16, partitions=64, rf=2, p=2e-3, trials=4,
+                max_ticks=50_000, min_ticks=10**9, seed=3, backend="numpy")
+    iid = simulate_availability_batched(**base)
+    flap = simulate_availability_batched(
+        **base, **sc.kwargs(n=16, rf=2, p=2e-3))
+    # 20x-rate flappers dominate the failure budget even with fast recovery
+    assert flap.u_lark > iid.u_lark
+    assert flap.u_maj > iid.u_maj
+
+
+def test_hetero_mttf_tiers_hurt_availability():
+    sc = get_scenario("hetero-mttf")
+    base = dict(n=15, partitions=64, rf=2, p=2e-3, trials=4,
+                max_ticks=50_000, min_ticks=10**9, seed=4, backend="numpy")
+    iid = simulate_availability_batched(**base)
+    het = simulate_availability_batched(
+        **base, **sc.kwargs(n=15, rf=2, p=2e-3))
+    # the 4x tier raises the mean failure rate to ~1.8x the base
+    assert het.u_lark > iid.u_lark
+
+
+def test_rack_pairs_scenario_matches_mechanism_knob():
+    """The registered scenario is exactly the pair_fail_prob mechanism —
+    same trajectory as passing the knob directly."""
+    sc = get_scenario("rack-pairs")
+    kw = dict(n=14, partitions=32, rf=2, p=5e-3, trials=2, max_ticks=5_000,
+              min_ticks=10**9, chunk_steps=64, max_steps=300, seed=9,
+              backend="numpy", trajectory=True)
+    a = simulate_availability_batched(**kw, **sc.kwargs(n=14, rf=2, p=5e-3))
+    b = simulate_availability_batched(**kw, pair_fail_prob=0.5)
+    for k in a.trajectory:
+        assert np.array_equal(a.trajectory[k], b.trajectory[k]), k
+
+
+def test_per_node_inputs_validated():
+    with pytest.raises(ValueError, match="shape"):
+        simulate_availability_batched(p_node=np.full(5, 1e-3), **_TINY, p=1e-3,
+                                      rf=2)
+    with pytest.raises(ValueError, match="downtime_node"):
+        simulate_availability_batched(
+            downtime_node=np.zeros(13, dtype=int), **_TINY, p=1e-3, rf=2)
+    with pytest.raises(ValueError, match="wave_width"):
+        simulate_availability_batched(wave_width=99, **_TINY, p=1e-3, rf=2)

@@ -1,0 +1,83 @@
+"""Trials-axis sharding: the shard_map code path must be bit-identical to
+the plain single-device scan for the same counter-based seed.
+
+The in-process tests exercise the shard_map path on a 1-device "trials"
+mesh (the container exposes one CPU device); the slow test re-runs the
+comparison in a subprocess with XLA_FLAGS=--xla_force_host_platform_
+device_count=8 — the flag must be set before any jax import, which this
+process is long past."""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.availability_batched import simulate_availability_batched
+
+_KW = dict(n=13, partitions=32, rf=2, p=5e-3, trials=4, max_ticks=4_000,
+           min_ticks=10**9, chunk_steps=64, max_steps=600, seed=11,
+           trajectory=True)
+
+
+def test_shard_map_path_identical_on_one_device():
+    plain = simulate_availability_batched(backend="jax", **_KW)
+    mesh1 = simulate_availability_batched(backend="jax", devices=1,
+                                          use_shard_map=True, **_KW)
+    for k in plain.trajectory:
+        assert np.array_equal(plain.trajectory[k], mesh1.trajectory[k]), k
+    assert plain.u_lark == mesh1.u_lark and plain.u_maj == mesh1.u_maj
+    assert np.array_equal(plain.u_lark_trials, mesh1.u_lark_trials)
+
+
+def test_shard_map_path_identical_with_scenario_knobs():
+    kw = dict(_KW, pair_fail_prob=0.5, restart_period=700, wave_width=2)
+    plain = simulate_availability_batched(backend="jax", **kw)
+    mesh1 = simulate_availability_batched(backend="jax", devices=1,
+                                          use_shard_map=True, **kw)
+    for k in plain.trajectory:
+        assert np.array_equal(plain.trajectory[k], mesh1.trajectory[k]), k
+
+
+def test_sharding_validation():
+    with pytest.raises(ValueError, match="numpy"):
+        simulate_availability_batched(backend="numpy", devices=2, **_KW)
+    with pytest.raises(ValueError, match="divide"):
+        simulate_availability_batched(backend="jax", devices=3, **_KW)
+    with pytest.raises(ValueError, match="devices"):
+        simulate_availability_batched(backend="jax", devices=0, **_KW)
+
+
+@pytest.mark.slow
+def test_eight_device_run_bit_identical_to_single():
+    """The acceptance-criterion comparison, on a forced 8-host-device mesh:
+    --devices 8 == --devices 4 == --devices 1, bit for bit."""
+    script = textwrap.dedent("""
+        import numpy as np
+        from repro.core.availability_batched import \\
+            simulate_availability_batched
+        kw = dict(n=13, partitions=32, rf=2, p=5e-3, trials=8,
+                  max_ticks=4_000, min_ticks=10**9, chunk_steps=64,
+                  max_steps=600, seed=11, backend="jax", trajectory=True,
+                  pair_fail_prob=0.3, restart_period=900)
+        r1 = simulate_availability_batched(devices=1, **kw)
+        for d in (4, 8):
+            rd = simulate_availability_batched(devices=d, **kw)
+            for k in r1.trajectory:
+                assert np.array_equal(r1.trajectory[k],
+                                      rd.trajectory[k]), (d, k)
+            assert r1.u_lark == rd.u_lark and r1.u_maj == rd.u_maj
+            assert np.array_equal(r1.u_lark_trials, rd.u_lark_trials)
+            assert r1.lark_events == rd.lark_events
+        print("OK")
+    """)
+    env = dict(os.environ,
+               JAX_PLATFORMS="cpu",
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=str(Path(__file__).resolve().parents[1] / "src"))
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr
+    assert "OK" in out.stdout
