@@ -1,9 +1,18 @@
-"""Paper §5.1 / Figure 6 / Table 2: availability vs node-failure probability.
+"""Paper §5.1 / Figure 6 / Table 2: availability vs node-failure probability,
+and (--metric downtime) the §6 commit-pause comparison.
 
 Reduced grid by default (CPU budget); --full sweeps the paper's p range with
 n=155, P=4096 and CI early-stopping; --smoke shrinks everything for the CI
 pallas-interpret lane.  Emits CSV rows:
   availability,<rf>,<p>,u_lark,u_maj,ratio,analytic_ratio,ticks
+
+--metric downtime swaps the instantaneous engine for the batched
+commit-pause engine (core/downtime_batched.py): rows carry the mean
+commit-pause fraction of LARK vs the equal-storage quorum-log baseline,
+the pause-duration histograms, and the dup-res / rebuild knobs
+(--dupres-ticks / --rebuild-steps).  Downtime rows are batched-only
+("event" maps to "numpy").  See docs/BENCHMARKS.md for the full CLI
+surface.
 
 Backends (--backend):
   event    scalar heapq event engine (core/availability.py); --trials N runs
@@ -41,6 +50,7 @@ from repro.core.analytical import (improvement_factor, lark_unavailability,
                                    node_unavailability)
 from repro.core.availability import simulate_availability
 from repro.core.availability_batched import simulate_availability_batched
+from repro.core.downtime_batched import simulate_downtime_batched
 from repro.core.scenarios import get_scenario, scenario_names
 
 REDUCED_GRID = [(2, 1e-3), (2, 3e-3), (2, 1e-2), (3, 1e-2), (4, 3e-2)]
@@ -58,6 +68,30 @@ def _grid_scale(full: bool, smoke: bool = False):
     return (155, 4096) if full else (63, 512)
 
 
+def _run_scale(full: bool, smoke: bool, *, scenario: bool):
+    """(n, partitions, max_ticks, min_ticks) — single source for both
+    metrics, so availability and downtime rows (and their committed
+    BENCH_*.json baselines) always use the same tick budgets."""
+    n, parts = _grid_scale(full, smoke)
+    if scenario:
+        max_ticks = 30_000 if smoke else (1_000_000 if full else 120_000)
+        min_ticks = 8_000 if smoke else 20_000
+    else:
+        max_ticks = 40_000 if smoke else (3_000_000 if full else 250_000)
+        min_ticks = 10_000 if smoke else 30_000
+    return n, parts, max_ticks, min_ticks
+
+
+def _iid_grid(full: bool, smoke: bool):
+    return SMOKE_GRID if smoke else (FULL_GRID if full else REDUCED_GRID)
+
+
+def _batched_backend(backend: str, devices: int):
+    """event rows reuse the numpy math, single-device; an explicit numpy
+    backend keeps its own devices so invalid combos still raise."""
+    return ("numpy", 1) if backend == "event" else (backend, devices)
+
+
 def _autotune_row(n: int, parts: int, trials: int, devices: int):
     """Race PAC block_p candidates on the per-device sweep tile shape."""
     from repro.kernels.ops import autotune_block_p
@@ -72,10 +106,8 @@ def _autotune_row(n: int, parts: int, trials: int, devices: int):
 
 def run(full: bool = False, seeds=(0,), backend: str = "event",
         devices: int = 1, smoke: bool = False, pac_block_p=None):
-    grid = SMOKE_GRID if smoke else (FULL_GRID if full else REDUCED_GRID)
-    n, parts = _grid_scale(full, smoke)
-    max_ticks = 40_000 if smoke else (3_000_000 if full else 250_000)
-    min_ticks = 10_000 if smoke else 30_000
+    grid = _iid_grid(full, smoke)
+    n, parts, max_ticks, min_ticks = _run_scale(full, smoke, scenario=False)
     rows = []
     for rf, p in grid:
         if backend == "event":
@@ -119,11 +151,8 @@ def run(full: bool = False, seeds=(0,), backend: str = "event",
 def run_scenarios(names, full: bool = False, trials: int = 4,
                   backend: str = "jax", seed: int = 0, devices: int = 1,
                   smoke: bool = False, pac_block_p=None):
-    backend = "numpy" if backend == "event" else backend
-    devices = 1 if backend == "numpy" else devices
-    n, parts = _grid_scale(full, smoke)
-    max_ticks = 30_000 if smoke else (1_000_000 if full else 120_000)
-    min_ticks = 8_000 if smoke else 20_000
+    backend, devices = _batched_backend(backend, devices)
+    n, parts, max_ticks, min_ticks = _run_scale(full, smoke, scenario=True)
     rows = []
     for name in names:
         sc = get_scenario(name)
@@ -140,6 +169,62 @@ def run_scenarios(names, full: bool = False, trials: int = 4,
                 "ratio": r.u_maj / r.u_lark if r.u_lark else float("inf"),
                 "ticks": r.ticks,
             })
+    return rows
+
+
+def _downtime_row(r, *, kind: str, scenario: str):
+    return {
+        "kind": kind, "scenario": scenario, "rf": r.rf, "p": r.p,
+        "pause_lark": r.pause_lark, "pause_quorum": r.pause_quorum,
+        "ci_pause_lark": r.ci_lark, "ci_pause_quorum": r.ci_quorum,
+        "ratio": r.availability_ratio,
+        "lark_events": r.lark_events, "quorum_events": r.quorum_events,
+        "hist_edges": r.hist_edges.tolist(),
+        "hist_lark": r.hist_lark.tolist(),
+        "hist_quorum": r.hist_quorum.tolist(),
+        "dupres_ticks": r.dupres_ticks, "rebuild_steps": r.rebuild_steps,
+        "ticks": r.ticks,
+    }
+
+
+def run_downtime(full: bool = False, trials: int = 4, backend: str = "jax",
+                 seed: int = 0, devices: int = 1, smoke: bool = False,
+                 pac_block_p=None, dupres_ticks: int = 1,
+                 rebuild_steps: int = 100):
+    """§6 commit-pause rows over the i.i.d. grid."""
+    backend, devices = _batched_backend(backend, devices)
+    grid = _iid_grid(full, smoke)
+    n, parts, max_ticks, min_ticks = _run_scale(full, smoke, scenario=False)
+    rows = []
+    for rf, p in grid:
+        r = simulate_downtime_batched(
+            n=n, partitions=parts, rf=rf, p=p, trials=trials,
+            max_ticks=max_ticks, min_ticks=min_ticks, seed=seed,
+            backend=backend, devices=devices, pac_block_p=pac_block_p,
+            dupres_ticks=dupres_ticks, rebuild_steps=rebuild_steps)
+        rows.append(_downtime_row(r, kind="downtime", scenario="iid"))
+    return rows
+
+
+def run_downtime_scenarios(names, full: bool = False, trials: int = 4,
+                           backend: str = "jax", seed: int = 0,
+                           devices: int = 1, smoke: bool = False,
+                           pac_block_p=None, dupres_ticks: int = 1,
+                           rebuild_steps: int = 100):
+    backend, devices = _batched_backend(backend, devices)
+    n, parts, max_ticks, min_ticks = _run_scale(full, smoke, scenario=True)
+    rows = []
+    for name in names:
+        sc = get_scenario(name)
+        for rf, p in sc.grid:
+            r = simulate_downtime_batched(
+                n=n, partitions=parts, rf=rf, p=p, trials=trials,
+                max_ticks=max_ticks, min_ticks=min_ticks, seed=seed,
+                backend=backend, devices=devices, pac_block_p=pac_block_p,
+                dupres_ticks=dupres_ticks, rebuild_steps=rebuild_steps,
+                **sc.kwargs(n=n, rf=rf, p=p))
+            rows.append(_downtime_row(r, kind="downtime_scenario",
+                                      scenario=name))
     return rows
 
 
@@ -168,6 +253,16 @@ def main(argv=None, *, strict: bool = True):
                     help="tiny grid/scale (CI pallas-interpret lane)")
     ap.add_argument("--backend", default="event",
                     choices=("event", "numpy", "jax", "pallas"))
+    ap.add_argument("--metric", default="availability",
+                    choices=("availability", "downtime"),
+                    help="instantaneous availability (§5.1) or "
+                         "commit-pause durations (§6)")
+    ap.add_argument("--dupres-ticks", type=int, default=None,
+                    help="LARK dup-res round-trip cost in ticks "
+                         "(downtime metric only; default 1)")
+    ap.add_argument("--rebuild-steps", type=int, default=None,
+                    help="quorum-log rebuild pause in ticks after a "
+                         "replica loss (downtime metric only; default 100)")
     ap.add_argument("--trials", type=int, default=1,
                     help="seeds (event) or batch size (batched backends)")
     ap.add_argument("--devices", type=int, default=1,
@@ -199,6 +294,16 @@ def main(argv=None, *, strict: bool = True):
     if args.autotune and args.backend != "pallas":
         ap.error("--autotune tunes the pallas kernel block size; "
                  "use --backend pallas")
+    if args.metric != "downtime":
+        if args.dupres_ticks is not None or args.rebuild_steps is not None:
+            ap.error("--dupres-ticks/--rebuild-steps only apply to "
+                     "--metric downtime")
+    if args.dupres_ticks is None:
+        args.dupres_ticks = 1
+    if args.rebuild_steps is None:
+        args.rebuild_steps = 100
+    if args.dupres_ticks < 0 or args.rebuild_steps < 0:
+        ap.error("--dupres-ticks and --rebuild-steps must be >= 0")
 
     names = _resolve_scenarios(args, ap)
     rows = []
@@ -208,30 +313,63 @@ def main(argv=None, *, strict: bool = True):
         pac_block_p, row = _autotune_row(n, parts, args.trials, args.devices)
         rows.append(row)
 
-    if not args.scenarios_only:
-        for r in run(full=args.full, seeds=tuple(range(args.trials)),
-                     backend=args.backend, devices=args.devices,
-                     smoke=args.smoke, pac_block_p=pac_block_p):
-            rows.append(r)
-            print(f"availability,rf{r['rf']}_p{r['p']:g},0,"
-                  f"u_lark={r['u_lark']:.3e};u_maj={r['u_maj']:.3e};"
-                  f"ratio={r['ratio']:.2f};analytic={r['analytic_ratio']}")
-    if names:
-        for r in run_scenarios(names, full=args.full, trials=args.trials,
-                               backend=args.backend, devices=args.devices,
-                               smoke=args.smoke, pac_block_p=pac_block_p):
-            rows.append(r)
-            print(f"availability_scenario,{r['scenario']}_rf{r['rf']}_"
-                  f"p{r['p']:g},0,u_lark={r['u_lark']:.3e};"
-                  f"u_maj={r['u_maj']:.3e};ratio={r['ratio']:.2f}")
+    if args.metric == "downtime":
+        common = dict(full=args.full, trials=args.trials,
+                      backend=args.backend, devices=args.devices,
+                      smoke=args.smoke, pac_block_p=pac_block_p,
+                      dupres_ticks=args.dupres_ticks,
+                      rebuild_steps=args.rebuild_steps)
+        if not args.scenarios_only:
+            for r in run_downtime(**common):
+                rows.append(r)
+                print(f"downtime,rf{r['rf']}_p{r['p']:g},0,"
+                      f"pause_lark={r['pause_lark']:.3e};"
+                      f"pause_quorum={r['pause_quorum']:.3e};"
+                      f"ratio={r['ratio']:.2f}")
+        if names:
+            for r in run_downtime_scenarios(names, **common):
+                rows.append(r)
+                print(f"downtime_scenario,{r['scenario']}_rf{r['rf']}_"
+                      f"p{r['p']:g},0,pause_lark={r['pause_lark']:.3e};"
+                      f"pause_quorum={r['pause_quorum']:.3e};"
+                      f"ratio={r['ratio']:.2f}")
+    else:
+        if not args.scenarios_only:
+            for r in run(full=args.full, seeds=tuple(range(args.trials)),
+                         backend=args.backend, devices=args.devices,
+                         smoke=args.smoke, pac_block_p=pac_block_p):
+                rows.append(r)
+                print(f"availability,rf{r['rf']}_p{r['p']:g},0,"
+                      f"u_lark={r['u_lark']:.3e};u_maj={r['u_maj']:.3e};"
+                      f"ratio={r['ratio']:.2f};"
+                      f"analytic={r['analytic_ratio']}")
+        if names:
+            for r in run_scenarios(names, full=args.full,
+                                   trials=args.trials,
+                                   backend=args.backend,
+                                   devices=args.devices,
+                                   smoke=args.smoke,
+                                   pac_block_p=pac_block_p):
+                rows.append(r)
+                print(f"availability_scenario,{r['scenario']}_rf{r['rf']}_"
+                      f"p{r['p']:g},0,u_lark={r['u_lark']:.3e};"
+                      f"u_maj={r['u_maj']:.3e};ratio={r['ratio']:.2f}")
     if args.json:
         doc = {"meta": {"backend": args.backend, "trials": args.trials,
                         "devices": args.devices, "full": args.full,
-                        "smoke": args.smoke, "scenarios": names},
-               "rows": rows}
+                        "smoke": args.smoke, "scenarios": names,
+                        "metric": args.metric},
+               "rows": [_json_safe(r) for r in rows]}
         with open(args.json, "w") as fh:
-            json.dump(doc, fh, indent=1, sort_keys=True)
+            json.dump(doc, fh, indent=1, sort_keys=True, allow_nan=False)
     return 0
+
+
+def _json_safe(row):
+    """Non-finite floats (a ratio over a zero pause/unavailability) are not
+    RFC-JSON; dump them as null so jq/strict parsers can read the file."""
+    return {k: (None if isinstance(v, float) and not math.isfinite(v) else v)
+            for k, v in row.items()}
 
 
 if __name__ == "__main__":

@@ -1,9 +1,10 @@
 """Gate a sweep run against a committed baseline (nightly CI regression).
 
 Compares an ``availability_sweep.py --json`` dump row-by-row with a
-baseline produced by the same command (benchmarks/BENCH_sweep.json) and
-exits 1 when any shared row's u_lark/u_maj drifts more than --sigma
-combined standard errors (CI half-widths are 95% → se = ci/1.96).
+baseline produced by the same command and exits 1 when any shared row's
+gated columns (u_lark/u_maj for availability rows, pause_lark /
+pause_quorum for --metric downtime rows) drift more than --sigma combined
+standard errors (CI half-widths are 95% → se = ci/1.96).
 
 The Monte Carlo draws counter-based randomness, so an unchanged tree
 reproduces the baseline *exactly*; drift within sigma allows for
@@ -13,6 +14,11 @@ semantic change that should come with a refreshed baseline:
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     python benchmarks/availability_sweep.py --backend jax --trials 8 \
         --devices 8 --scenario all --json benchmarks/BENCH_sweep.json
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python benchmarks/availability_sweep.py --backend jax --trials 8 \
+        --devices 8 --metric downtime --smoke --scenario all \
+        --json benchmarks/BENCH_downtime.json
 """
 from __future__ import annotations
 
@@ -24,12 +30,29 @@ import sys
 _SE_FLOOR = 1e-12   # deterministic RNG: identical runs pass at se == 0
 
 
+#: gated value/CI column pairs per row kind ("availability" covers the
+#: legacy iid/scenario kinds; "downtime" rows carry pause fractions)
+_GATED_COLS = {
+    "availability": (("u_lark", "ci_lark"), ("u_maj", "ci_maj")),
+    "downtime": (("pause_lark", "ci_pause_lark"),
+                 ("pause_quorum", "ci_pause_quorum")),
+}
+
+
 def row_key(r: dict):
     if r.get("kind") == "scenario":
         return ("scenario", r["scenario"], r["rf"], r["p"])
     if r.get("kind") == "iid":
         return ("iid", r["rf"], r["p"])
+    if r.get("kind") in ("downtime", "downtime_scenario"):
+        return ("downtime", r.get("scenario", "iid"), r["rf"], r["p"])
     return None                      # autotune/meta rows are not gated
+
+
+def row_cols(r: dict):
+    kind = "downtime" if r.get("kind", "").startswith("downtime") \
+        else "availability"
+    return _GATED_COLS[kind]
 
 
 def compare(new: dict, base: dict, sigma: float):
@@ -47,7 +70,7 @@ def compare(new: dict, base: dict, sigma: float):
             notes.append(f"new row (not in baseline, skipped): {k}")
             continue
         checked += 1
-        for col, ci_col in (("u_lark", "ci_lark"), ("u_maj", "ci_maj")):
+        for col, ci_col in row_cols(r):
             se = max(math.hypot(r[ci_col] / 1.96, b[ci_col] / 1.96),
                      _SE_FLOOR)
             drift = abs(r[col] - b[col])

@@ -16,7 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
-from repro.kernels.ops import autotune_block_p, pac_eval_batch
+from repro.kernels.ops import (autotune_block_p, downtime_eval_batch,
+                               pac_eval_batch)
 
 
 def _time(fn, *args, iters=5) -> float:
@@ -76,6 +77,17 @@ def main(argv=None, *, strict: bool = True):
                                                 n_real=155, backend="jax"))
     print(f"kernel_pac_batch_jax,r{R}n155,"
           f"{_time(pac_j, upj, fullj):.0f},trials=8xp4096")
+
+    # downtime engine per-step evaluation (PAC + quorum replica set +
+    # acting leader) on the same Monte Carlo tile
+    dt_np = lambda u, f: downtime_eval_batch(u, f, rf=3, n_real=155,
+                                             backend="numpy")
+    print(f"kernel_downtime_batch_numpy,r{R}n155,"
+          f"{_time(dt_np, up_b, full_b):.0f},trials=8xp4096")
+    dt_j = jax.jit(lambda u, f: downtime_eval_batch(u, f, rf=3, n_real=155,
+                                                    backend="jax"))
+    print(f"kernel_downtime_batch_jax,r{R}n155,"
+          f"{_time(dt_j, upj, fullj):.0f},trials=8xp4096")
     if args.autotune:
         res = autotune_block_p(R, 155, rf=3, voters=5, n_real=155)
         print(f"kernel_pac_autotune,r{R}n155,0,"

@@ -46,9 +46,20 @@ live in core/scenarios.py):
                   as a Monte Carlo scenario).
   wave_width      nodes per restart wave (1 = serial rolling restart).
   p_node          per-node failure probability (heterogeneous MTTF);
-                  overrides the scalar `p` for gap scheduling.
+                  overrides the scalar `p` for gap scheduling — one
+                  geometric CDF table per distinct value (per-class
+                  tables selected by node masks), so use a few tiers,
+                  not n distinct rates.
   downtime_node   per-node downtime ticks (flapping nodes recover fast);
                   overrides the scalar `downtime`.
+
+The node-trajectory advance (`_make_node_advance` / `_initial_node_state`)
+is the single source of randomness for every engine in this stack: the
+§6 downtime engine (core/downtime_batched.py) imports it, consumes the
+identical variate stream, and therefore replays bit-identical node
+trajectories for equal knobs — the invariant that makes its zero-knob
+degeneracy tests exact.  Extend the closure rather than drawing ad-hoc
+randomness in a new engine; see docs/ARCHITECTURE.md.
 """
 from __future__ import annotations
 
@@ -184,26 +195,32 @@ class BatchedAvailabilityResult:
 
 
 # ---------------------------------------------------------------------------
-# The per-event step, written once for both array namespaces.
+# Node-trajectory advance, written once for both array namespaces and shared
+# with the downtime engine (core/downtime_batched.py): any engine built on it
+# replays bit-identical failure/recovery trajectories for the same seed.
 # ---------------------------------------------------------------------------
 
-def _make_step(xp, pac_fn, succ, *, n: int, P: int, horizon: int,
-               dt_vec, geo_masks, geo_tables, seed_mix,
-               pair_fail_prob: float, pair_perm, restart_period: int,
-               wave_width: int):
-    def step(carry, s):
-        (now, up, ev_t, full, unl, unm, lpt, mpt, le, me, rr_t, rr_idx,
-         lane0) = carry
-        B = up.shape[0]               # local trials (a shard of the batch)
+def _make_node_advance(xp, *, n: int, horizon: int, dt_vec, geo_masks,
+                       geo_tables, seed_mix, pair_fail_prob: float,
+                       pair_perm, restart_period: int, wave_width: int):
+    """Closure advancing the node up/down state to the next event.
+
+    advance(now, up, ev_t, rr_t, rr_idx, lane0, s) ->
+        (t_clamp, dt, active, up, ev_t, rr_t, rr_idx)
+
+    All randomness is drawn here (geometric gap redraws, correlated-pair
+    coin flips), keyed by (seed, step s, global lane) — the invariant every
+    engine on top of this must preserve is that it consumes *no* extra
+    randomness, so availability and downtime runs with equal knobs see the
+    same trajectory, and sharded runs match single-device bit for bit.
+    """
+    def advance(now, up, ev_t, rr_t, rr_idx, lane0, s):
         node_next = xp.min(ev_t, axis=1)                     # (B,)
         t_next = node_next if not restart_period else \
             xp.minimum(node_next, rr_t)
         active = t_next < horizon
         t_clamp = xp.minimum(t_next, xp.int32(horizon))
         dt = (t_clamp - now).astype(xp.float32)
-        lpt = lpt + unl.astype(xp.float32) * dt
-        mpt = mpt + unm.astype(xp.float32) * dt
-        now = t_clamp
 
         hit = (ev_t == t_next[:, None]) & active[:, None]
         fail_hit = hit & up
@@ -228,6 +245,175 @@ def _make_step(xp, pac_fn, succ, *, n: int, P: int, horizon: int,
             geo_masks, geo_tables, xp)
         ev_t = xp.where(fail_hit, t_clamp[:, None] + dt_vec[None, :],
                         xp.where(rec_hit, t_clamp[:, None] + geo, ev_t))
+        return t_clamp, dt, active, up, ev_t, rr_t, rr_idx
+    return advance
+
+
+def _initial_node_state(xp, *, B: int, n: int, seed_mix, geo_masks,
+                        geo_tables, restart_period: int, horizon: int):
+    """(lane0, up0, ev0, rr_t0) — everyone up, first failures at geometric
+    gaps drawn at step counter 0 (scan steps start at 1).  lane0 is the
+    global first-lane index per trial, carried so each shard keeps its
+    global identity after the trials axis is split."""
+    lane0 = xp.arange(B, dtype=xp.uint32) * xp.uint32(n)
+    up0 = xp.ones((B, n), dtype=bool)
+    ev0 = _geometric_multi(
+        _uniforms(seed_mix, xp.asarray(0, dtype=xp.uint32), _GEO_SALT,
+                  lane0, n, xp),
+        geo_masks, geo_tables, xp)
+    rr_t0 = xp.full((B,), restart_period if restart_period else horizon + 1,
+                    dtype=xp.int32)
+    return lane0, up0, ev0, rr_t0
+
+
+def _initial_full_state(xp, backend: str, eval_fn, up0, succ, *, B: int,
+                        P: int, n: int, rf: int):
+    """t=0 'has the latest copy' mask, shared by both engines: roster
+    replicas full, one evaluation on that state, then available (PAC-ok)
+    partitions refresh to the committed replica set.  eval_fn is pac_fn or
+    dt_fn — both return the LARK mask first and creps last.  Returns
+    (full0, eval outputs)."""
+    full0 = xp.zeros((B, P, n), dtype=bool)
+    if backend == "numpy":
+        full0[:, :, :rf] = True
+    else:
+        full0 = full0.at[:, :, :rf].set(True)
+    outs = eval_fn(up0[:, succ].reshape(B * P, n), full0.reshape(B * P, n))
+    lark0, creps0 = outs[0], outs[-1]
+    full0 = xp.where(lark0.reshape(B, P)[:, :, None],
+                     creps0.reshape(B, P, n), full0)
+    return full0, outs
+
+
+# ---------------------------------------------------------------------------
+# Shared driver scaffolding: argument validation, per-run constants, and the
+# chunk runners.  The downtime engine reuses all of it, so a retune of any
+# trajectory-affecting constant (seed mixing, geometric tables, max_steps
+# heuristic, shard specs) lands in both engines at once — a drift here would
+# break the exact cross-engine degeneracies tests/test_downtime_batched.py
+# pins.
+# ---------------------------------------------------------------------------
+
+def _validate_batched_args(*, backend: str, devices: int, trials: int,
+                           wave_width: int, n: int):
+    if backend not in PAC_BACKENDS:
+        raise ValueError(f"backend must be one of {PAC_BACKENDS}")
+    if devices < 1:
+        raise ValueError("devices must be >= 1")
+    if devices > 1 and backend == "numpy":
+        raise ValueError("multi-device sharding needs a jax backend "
+                         "('jax' or 'pallas'); numpy has no device mesh")
+    if trials % devices:
+        raise ValueError(f"trials ({trials}) must divide evenly across "
+                         f"devices ({devices})")
+    if not 1 <= wave_width <= n:
+        raise ValueError("wave_width must be in [1, n]")
+
+
+def _engine_setup(backend: str, *, n: int, partitions: int, seed: int,
+                  p: float, downtime: int, p_node, downtime_node,
+                  max_ticks: int):
+    """(xp, succ, seed_mix, geo_masks, geo_tables, dt_vec, pair_perm,
+    p_arr, dt_arr) — every deterministic per-run constant both engines
+    share."""
+    succ_np = succession_matrix_fast(partitions, range(n), seed=seed)
+    if backend == "numpy":
+        xp, succ = np, succ_np
+    else:
+        import jax.numpy as jnp
+        xp, succ = jnp, jnp.asarray(succ_np)
+
+    p_arr = np.full(n, p, dtype=np.float64) if p_node is None \
+        else np.asarray(p_node, dtype=np.float64)
+    dt_arr = np.full(n, downtime, dtype=np.int64) if downtime_node is None \
+        else np.asarray(downtime_node, dtype=np.int64)
+    if p_arr.shape != (n,) or dt_arr.shape != (n,):
+        raise ValueError("p_node / downtime_node must have shape (n,)")
+    if not ((p_arr > 0) & (p_arr < 1)).all() or (dt_arr < 1).any():
+        raise ValueError("p_node must lie in (0, 1) and downtime_node >= 1")
+
+    seed_mix = _mix32(xp.asarray([(seed & 0xFFFFFFFF) ^ 0x6A09E667],
+                                 dtype=xp.uint32), xp)
+    geo_masks, geo_tables = _geo_tables(
+        p_arr, max_ticks + int(dt_arr.max()) + 2, xp)
+    dt_vec = xp.asarray(dt_arr, dtype=xp.int32)
+    pair_perm = np.arange(n)
+    pair_perm[:n - n % 2] ^= 1
+    return (xp, succ, seed_mix, geo_masks, geo_tables, dt_vec, pair_perm,
+            p_arr, dt_arr)
+
+
+def _default_max_steps(p_arr, dt_arr, *, n: int, horizon: int,
+                       restart_period: int) -> int:
+    """Step budget: ~3x the expected event count plus slack."""
+    p_eff = float(p_arr.mean())
+    per_trial = 2.0 * n * horizon / (1.0 / p_eff + float(dt_arr.mean()))
+    if restart_period:
+        per_trial += 2.0 * horizon / restart_period
+    return int(3 * per_trial) + 2000
+
+
+def _make_chunk_runner(step, carry, *, chunk_steps: int, devices: int,
+                       shard: bool, n_outputs: int):
+    """jit'd (carry, s0) -> (carry, ys) scanning `chunk_steps` steps,
+    optionally shard_map'd over the trials mesh (dim 0 of every carry
+    leaf; outputs stack steps in front)."""
+    import jax
+    import jax.numpy as jnp
+
+    def _chunk(c, s0):
+        return jax.lax.scan(
+            step, c, s0 + jnp.arange(chunk_steps, dtype=jnp.int32))
+
+    if shard:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec
+
+        from ..launch.mesh import make_trials_mesh
+        mesh = make_trials_mesh(devices)
+        cspec = tuple(PartitionSpec("trials") for _ in carry)
+        yspec = tuple(PartitionSpec(None, "trials")
+                      for _ in range(n_outputs))
+        return jax.jit(shard_map(
+            _chunk, mesh=mesh,
+            in_specs=(cspec, PartitionSpec()),
+            out_specs=(cspec, yspec), check_rep=False))
+    return jax.jit(_chunk)
+
+
+def _run_chunk_numpy(step, carry, s0: int, chunk_steps: int):
+    """The numpy backends' python chunk loop (same contract as the jit'd
+    runner)."""
+    ys = []
+    for s in range(s0, s0 + chunk_steps):
+        carry, y = step(carry, np.int32(s))
+        ys.append(y)
+    return carry, tuple(np.stack(col) for col in zip(*ys))
+
+
+# ---------------------------------------------------------------------------
+# The per-event step, written once for both array namespaces.
+# ---------------------------------------------------------------------------
+
+def _make_step(xp, pac_fn, succ, *, n: int, P: int, horizon: int,
+               dt_vec, geo_masks, geo_tables, seed_mix,
+               pair_fail_prob: float, pair_perm, restart_period: int,
+               wave_width: int):
+    advance = _make_node_advance(
+        xp, n=n, horizon=horizon, dt_vec=dt_vec, geo_masks=geo_masks,
+        geo_tables=geo_tables, seed_mix=seed_mix,
+        pair_fail_prob=pair_fail_prob, pair_perm=pair_perm,
+        restart_period=restart_period, wave_width=wave_width)
+
+    def step(carry, s):
+        (now, up, ev_t, full, unl, unm, lpt, mpt, le, me, rr_t, rr_idx,
+         lane0) = carry
+        B = up.shape[0]               # local trials (a shard of the batch)
+        t_clamp, dt, active, up, ev_t, rr_t, rr_idx = advance(
+            now, up, ev_t, rr_t, rr_idx, lane0, s)
+        lpt = lpt + unl.astype(xp.float32) * dt
+        mpt = mpt + unm.astype(xp.float32) * dt
+        now = t_clamp
 
         lark, maj, creps = pac_fn(up[:, succ].reshape(B * P, n),
                                   full.reshape(B * P, n))
@@ -258,7 +444,7 @@ def simulate_availability_batched(
         wave_width: int = 1, p_node=None, downtime_node=None,
         devices: int = 1, pac_block_p: Optional[int] = None,
         chunk_steps: int = 512, max_steps: Optional[int] = None,
-        trajectory: bool = False,
+        trajectory: bool = False, voters: Optional[int] = None,
         use_shard_map: Optional[bool] = None) -> BatchedAvailabilityResult:
     """Batched Monte Carlo over `trials` trajectories sharing one succession
     matrix (seeded); failure randomness is independent per trial.
@@ -267,47 +453,24 @@ def simulate_availability_batched(
     (launch/mesh.make_trials_mesh) via shard_map — bit-identical to
     devices=1 for the same seed.  `use_shard_map` forces the shard_map
     code path even on one device (tests).
+
+    voters overrides the baseline quorum size (default 2*(rf-1)+1, the
+    paper's 2f+1 voter set).  voters=rf evaluates majority over the f+1
+    roster replicas — the instantaneous-availability limit of the
+    downtime engine's equal-storage quorum-log baseline, which the
+    property tests in tests/test_downtime_batched.py pin exactly.
     """
-    if backend not in PAC_BACKENDS:
-        raise ValueError(f"backend must be one of {PAC_BACKENDS} "
-                         f"(the sweep handles 'event' separately)")
-    if devices < 1:
-        raise ValueError("devices must be >= 1")
-    if devices > 1 and backend == "numpy":
-        raise ValueError("multi-device sharding needs a jax backend "
-                         "('jax' or 'pallas'); numpy has no device mesh")
-    if trials % devices:
-        raise ValueError(f"trials ({trials}) must divide evenly across "
-                         f"devices ({devices})")
-    if not 1 <= wave_width <= n:
-        raise ValueError("wave_width must be in [1, n]")
+    _validate_batched_args(backend=backend, devices=devices, trials=trials,
+                           wave_width=wave_width, n=n)
     shard = use_shard_map if use_shard_map is not None else devices > 1
     B, P, horizon = trials, partitions, max_ticks
-    succ_np = succession_matrix_fast(P, range(n), seed=seed)
-    voters = 2 * (rf - 1) + 1
-    pair_perm = np.arange(n)
-    pair_perm[:n - n % 2] ^= 1
-
-    if backend == "numpy":
-        xp, succ = np, succ_np
-    else:
-        import jax.numpy as jnp
-        xp, succ = jnp, jnp.asarray(succ_np)
-
-    p_arr = np.full(n, p, dtype=np.float64) if p_node is None \
-        else np.asarray(p_node, dtype=np.float64)
-    dt_arr = np.full(n, downtime, dtype=np.int64) if downtime_node is None \
-        else np.asarray(downtime_node, dtype=np.int64)
-    if p_arr.shape != (n,) or dt_arr.shape != (n,):
-        raise ValueError("p_node / downtime_node must have shape (n,)")
-    if not ((p_arr > 0) & (p_arr < 1)).all() or (dt_arr < 1).any():
-        raise ValueError("p_node must lie in (0, 1) and downtime_node >= 1")
-    dt_max = int(dt_arr.max())
-
-    seed_mix = _mix32(xp.asarray([(seed & 0xFFFFFFFF) ^ 0x6A09E667],
-                                 dtype=xp.uint32), xp)
-    geo_masks, geo_tables = _geo_tables(p_arr, max_ticks + dt_max + 2, xp)
-    dt_vec = xp.asarray(dt_arr, dtype=xp.int32)
+    voters = voters if voters is not None else 2 * (rf - 1) + 1
+    if not 1 <= voters <= n:
+        raise ValueError("voters must be in [1, n]")
+    (xp, succ, seed_mix, geo_masks, geo_tables, dt_vec, pair_perm,
+     p_arr, dt_arr) = _engine_setup(
+        backend, n=n, partitions=P, seed=seed, p=p, downtime=downtime,
+        p_node=p_node, downtime_node=downtime_node, max_ticks=max_ticks)
     pac_fn = lambda u, f: pac_eval_batch(u, f, rf=rf, voters=voters,
                                          n_real=n, backend=backend,
                                          block_p=pac_block_p)
@@ -317,63 +480,29 @@ def simulate_availability_batched(
                       pair_fail_prob=pair_fail_prob, pair_perm=pair_perm,
                       restart_period=restart_period, wave_width=wave_width)
 
-    # initial state: everyone up, roster replicas full, first failures at
-    # geometric gaps (step counter 0; scan steps start at 1).  lane0 is the
-    # global first-lane index per trial — carried so each shard keeps its
-    # global identity after the trials axis is split.
-    lane0 = xp.arange(B, dtype=xp.uint32) * xp.uint32(n)
-    up0 = xp.ones((B, n), dtype=bool)
-    ev0 = _geometric_multi(
-        _uniforms(seed_mix, xp.asarray(0, dtype=xp.uint32), _GEO_SALT,
-                  lane0, n, xp),
-        geo_masks, geo_tables, xp)
-    full0 = xp.zeros((B, P, n), dtype=bool)
-    if backend == "numpy":
-        full0[:, :, :rf] = True
-    else:
-        full0 = full0.at[:, :, :rf].set(True)
-    lark0, maj0, creps0 = pac_fn(up0[:, succ].reshape(B * P, n),
-                                 full0.reshape(B * P, n))
-    full0 = xp.where(lark0.reshape(B, P)[:, :, None],
-                     creps0.reshape(B, P, n), full0)
+    # initial state: everyone up, roster replicas full
+    lane0, up0, ev0, rr_t0 = _initial_node_state(
+        xp, B=B, n=n, seed_mix=seed_mix, geo_masks=geo_masks,
+        geo_tables=geo_tables, restart_period=restart_period,
+        horizon=horizon)
+    full0, (lark0, maj0, _creps0) = _initial_full_state(
+        xp, backend, pac_fn, up0, succ, B=B, P=P, n=n, rf=rf)
     zi = xp.zeros((B,), dtype=xp.int32)
     zf = xp.zeros((B,), dtype=xp.float32)
-    rr_t0 = xp.full((B,), restart_period if restart_period else horizon + 1,
-                    dtype=xp.int32)
     carry = (zi, up0, ev0, full0,
              xp.sum(~lark0.reshape(B, P), axis=1).astype(xp.int32),
              xp.sum(~maj0.reshape(B, P), axis=1).astype(xp.int32),
              zf, zf, zi, zi, rr_t0, zi, lane0)
 
     if backend != "numpy":
-        import jax
         import jax.numpy as jnp
-
-        def _chunk(c, s0):
-            return jax.lax.scan(
-                step, c, s0 + jnp.arange(chunk_steps, dtype=jnp.int32))
-
-        if shard:
-            from jax.experimental.shard_map import shard_map
-            from jax.sharding import PartitionSpec
-
-            from ..launch.mesh import make_trials_mesh
-            mesh = make_trials_mesh(devices)
-            cspec = tuple(PartitionSpec("trials") for _ in carry)
-            yspec = tuple(PartitionSpec(None, "trials") for _ in range(4))
-            run_chunk = jax.jit(shard_map(
-                _chunk, mesh=mesh,
-                in_specs=(cspec, PartitionSpec()),
-                out_specs=(cspec, yspec), check_rep=False))
-        else:
-            run_chunk = jax.jit(_chunk)
+        run_chunk = _make_chunk_runner(step, carry, chunk_steps=chunk_steps,
+                                       devices=devices, shard=shard,
+                                       n_outputs=4)
 
     if max_steps is None:
-        p_eff = float(p_arr.mean())
-        per_trial = 2.0 * n * horizon / (1.0 / p_eff + float(dt_arr.mean()))
-        if restart_period:
-            per_trial += 2.0 * horizon / restart_period
-        max_steps = int(3 * per_trial) + 2000
+        max_steps = _default_max_steps(p_arr, dt_arr, n=n, horizon=horizon,
+                                       restart_period=restart_period)
 
     lpt_tot = np.zeros(B)
     mpt_tot = np.zeros(B)
@@ -383,11 +512,7 @@ def simulate_availability_batched(
     s0 = 1
     while s0 < max_steps:
         if backend == "numpy":
-            ys = []
-            for s in range(s0, s0 + chunk_steps):
-                carry, y = step(carry, np.int32(s))
-                ys.append(y)
-            ys = tuple(np.stack(col) for col in zip(*ys))
+            carry, ys = _run_chunk_numpy(step, carry, s0, chunk_steps)
         else:
             carry, ys = run_chunk(carry, jnp.int32(s0))
         s0 += chunk_steps

@@ -1,0 +1,375 @@
+"""Batched commit-pause / downtime engine — paper §6 at Monte Carlo scale.
+
+Paper anchor: §6's equal-storage-budget argument.  Both systems keep only
+f+1 data copies; LARK keeps committing through data-node failures (PAC
+reasons over the whole cluster, partitions are ready immediately after a
+leader change, at most a per-key duplicate-resolution round trip when the
+new leader lacks the latest copy), while quorum-log protocols
+(Raft/Paxos/VR-style) commit through a majority of a *fixed replica set*
+and must pause commits to rebuild a replica after losing one.  The
+instantaneous engine (core/availability_batched.py) measures how often
+each protocol *is* available; this engine measures commit-pause
+*durations* — how long writes stall, and why.
+
+Runs B trials x P partitions through the exact counter-RNG trajectories of
+the availability engine (the node-advance closure is imported from it, and
+consumes the identical randomness stream), then carries two per-partition
+protocol state machines per step instead of an instantaneous average:
+
+  LARK         paused iff PAC (SimpleMajority) fails; ready the instant
+               PAC holds again.  When the acting leader (first up node in
+               succession order) changes while the partition is available
+               and the new leader lacks the latest copy, an optional
+               dup-res penalty of `dupres_ticks` commit-paused ticks is
+               charged (the paper's one-round-trip duplicate resolution).
+  quorum-log   paused iff a majority of the f+1-copy replica set (the
+               first rf succession nodes) is down, OR a rebuild is in
+               progress: every replica loss starts a `rebuild_steps`-tick
+               countdown during which commits pause (log-based replica
+               catch-up under an equal storage budget).
+
+Outputs per protocol: the mean commit-pause fraction (paused
+partition-ticks / total partition-ticks — with dupres_ticks=0 and
+rebuild_steps=0 these degenerate *exactly* to the instantaneous engine's
+u_lark and its voters=rf u_maj, a property tests pin bit-for-bit), pause
+event counts, and a histogram of completed pause durations in
+power-of-two tick buckets (bucket k counts durations in [2^k, 2^(k+1)),
+the top bucket open-ended; runs still open at the horizon are censored
+and not counted).
+
+Invariants this engine must preserve (see docs/ARCHITECTURE.md):
+  * It consumes no randomness beyond the shared node-advance closure, so
+    for equal knobs its node trajectory is bit-identical to the
+    availability engine's — and across numpy / jax / pallas backends, and
+    across any `devices` sharding of the trials axis (same shard_map over
+    launch/mesh.make_trials_mesh, same carried global lane offsets).
+  * All per-step protocol state is integer/boolean (pause accumulators
+    are float32 counts * dt, matching the availability engine's
+    arithmetic), so cross-backend equality is exact, not approximate.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+from ..kernels.ops import downtime_eval_batch
+from .availability import t975
+from .availability_batched import (_default_max_steps, _engine_setup,
+                                   _initial_full_state, _initial_node_state,
+                                   _make_chunk_runner, _make_node_advance,
+                                   _run_chunk_numpy, _validate_batched_args)
+
+
+# ---------------------------------------------------------------------------
+# Result
+# ---------------------------------------------------------------------------
+
+@dataclass
+class BatchedDowntimeResult:
+    p: float
+    rf: int
+    n: int
+    partitions: int
+    trials: int
+    backend: str
+    ticks: int                       # mean elapsed ticks per trial
+    pause_lark: float                # mean commit-pause fraction, pooled
+    pause_quorum: float
+    lark_events: int                 # pause-start events (incl. dup-res)
+    quorum_events: int
+    ci_lark: float                   # 95% half-widths on the fractions
+    ci_quorum: float
+    dupres_ticks: int
+    rebuild_steps: int
+    stopped_early: bool
+    devices: int = 1
+    hist_edges: np.ndarray = field(repr=False, default=None)   # (nbins,)
+    hist_lark: np.ndarray = field(repr=False, default=None)    # (nbins,)
+    hist_quorum: np.ndarray = field(repr=False, default=None)
+    pause_lark_trials: np.ndarray = field(repr=False, default=None)
+    pause_quorum_trials: np.ndarray = field(repr=False, default=None)
+    trajectory: Optional[Dict[str, np.ndarray]] = field(repr=False,
+                                                        default=None)
+
+    @property
+    def availability_ratio(self) -> float:
+        """Quorum-log pause over LARK pause — the §6 headline ratio."""
+        return self.pause_quorum / self.pause_lark if self.pause_lark > 0 \
+            else math.inf
+
+
+# ---------------------------------------------------------------------------
+# The per-event step.
+# ---------------------------------------------------------------------------
+
+def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
+               dupres_ticks: int, rebuild_steps: int, hist_bins: int):
+    def hist_add(hist, mask, d):
+        """Scatter completed pause durations d (B, P) where mask into
+        power-of-two buckets — comparisons only, so every backend bins
+        identically."""
+        b = xp.zeros(d.shape, dtype=xp.int32)
+        for k in range(1, hist_bins):
+            b = b + (d >= (1 << k)).astype(xp.int32)
+        oh = (b[:, :, None] == xp.arange(hist_bins, dtype=xp.int32)
+              [None, None, :]) & mask[:, :, None]
+        return hist + xp.sum(oh, axis=1).astype(xp.int32)
+
+    def step(carry, s):
+        (now, up, ev_t, full, rr_t, rr_idx, lane0, ldn, lt0, qrep, qreb,
+         qdn, qt0, leader, lpt, qpt, lev, qev, lhist, qhist) = carry
+        B = up.shape[0]               # local trials (a shard of the batch)
+        t_clamp, dt, active, up, ev_t, rr_t, rr_idx = advance(
+            now, up, ev_t, rr_t, rr_idx, lane0, s)
+        dt_i = t_clamp - now                                  # (B,) int32
+
+        # -- pause time over [now, t_clamp), from interval-start state.
+        # LARK matches the availability engine's lpt arithmetic exactly
+        # (count * dt in float32); quorum adds the rebuild overlap —
+        # min(remaining, dt) extra paused ticks per majority-up partition.
+        lpt = lpt + xp.sum(ldn, axis=1).astype(xp.float32) * dt
+        qmaj_prev = 2 * xp.sum(qrep, axis=2) > rf             # (B, P)
+        qpt = qpt + xp.sum(~qmaj_prev, axis=1).astype(xp.float32) * dt
+        qpt = qpt + xp.sum(xp.where(
+            qmaj_prev, xp.minimum(qreb, dt_i[:, None]), 0)
+            .astype(xp.float32), axis=1)
+
+        # -- a rebuild expiring mid-interval ends a quorum pause run
+        # between events (PAC state can only flip at events, so LARK runs
+        # never end mid-interval)
+        ends_mid = qdn & qmaj_prev & (qreb > 0) & (qreb <= dt_i[:, None])
+        qhist = hist_add(qhist, ends_mid, (now[:, None] + qreb) - qt0)
+        qdn = qdn & ~ends_mid
+        qreb = xp.maximum(qreb - dt_i[:, None], 0)
+        now = t_clamp
+
+        # -- re-evaluate both protocols on the post-event cluster state
+        up_succ = up[:, succ]                                 # (B, P, n)
+        rep_new = up_succ[:, :, :rf]                          # replica lanes
+        lark, qmaj, ldr, lfull, _nrep, creps = dt_fn(
+            up_succ.reshape(B * P, n), full.reshape(B * P, n))
+        lark = lark.reshape(B, P)
+        qmaj = qmaj.reshape(B, P)
+        ldr = ldr.reshape(B, P)
+        lfull = lfull.reshape(B, P)
+        full = xp.where(lark[:, :, None], creps.reshape(B, P, n), full)
+
+        # -- LARK transitions: close runs that came back, open new ones
+        lhist = hist_add(lhist, ldn & lark, t_clamp[:, None] - lt0)
+        lgo = ~ldn & ~lark
+        lt0 = xp.where(lgo, t_clamp[:, None], lt0)
+        lev = lev + xp.sum(lgo, axis=1).astype(xp.int32)
+        ldn = ~lark
+
+        # -- dup-res penalty: available partition, new acting leader, and
+        # the leader lacks the latest copy (pre-refresh full mask) ->
+        # one round trip of paused commits, charged instantaneously.  The
+        # baseline only tracks the leader *while available* (no commits
+        # flow during a pause), so a leadership move inside an outage is
+        # still charged when service resumes under the new stale leader.
+        if dupres_ticks > 0:
+            pen = (ldr != leader) & lark & ~lfull
+            npen = xp.sum(pen, axis=1).astype(xp.int32)
+            lpt = lpt + npen.astype(xp.float32) * xp.float32(dupres_ticks)
+            lev = lev + npen
+            lhist = hist_add(lhist, pen,
+                             xp.full(pen.shape, dupres_ticks,
+                                     dtype=xp.int32))
+        leader = xp.where(lark, ldr, leader)
+
+        # -- quorum transitions: any replica loss (a replica-set lane
+        # going up -> down, even if masked by a simultaneous recovery of
+        # another lane) (re)starts the rebuild
+        if rebuild_steps > 0:
+            loss = xp.any(qrep & ~rep_new, axis=2)
+            qreb = xp.where(loss, xp.int32(rebuild_steps), qreb)
+        qpause = ~qmaj | (qreb > 0)
+        qhist = hist_add(qhist, qdn & ~qpause, t_clamp[:, None] - qt0)
+        qgo = ~qdn & qpause
+        qt0 = xp.where(qgo, t_clamp[:, None], qt0)
+        qev = qev + xp.sum(qgo, axis=1).astype(xp.int32)
+        qdn = qpause
+        qrep = rep_new
+
+        carry = (now, up, ev_t, full, rr_t, rr_idx, lane0, ldn, lt0,
+                 qrep, qreb, qdn, qt0, leader, lpt, qpt, lev, qev,
+                 lhist, qhist)
+        out = (t_clamp, xp.sum(ldn, axis=1).astype(xp.int32),
+               xp.sum(qdn, axis=1).astype(xp.int32),
+               xp.sum(up, axis=1).astype(xp.int32))
+        return carry, out
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def simulate_downtime_batched(
+        *, n: int = 155, partitions: int = 4096, rf: int = 2,
+        p: float = 1e-3, downtime: int = 10, trials: int = 8,
+        min_ticks: int = 50_000, max_ticks: int = 3_000_000,
+        eps_abs: float = 5e-6, eps_rel: float = 0.05,
+        min_events: int = 200, seed: int = 0, backend: str = "jax",
+        dupres_ticks: int = 1, rebuild_steps: int = 100,
+        hist_bins: int = 16,
+        pair_fail_prob: float = 0.0, restart_period: int = 0,
+        wave_width: int = 1, p_node=None, downtime_node=None,
+        devices: int = 1, pac_block_p: Optional[int] = None,
+        chunk_steps: int = 512, max_steps: Optional[int] = None,
+        trajectory: bool = False,
+        use_shard_map: Optional[bool] = None) -> BatchedDowntimeResult:
+    """Batched §6 commit-pause Monte Carlo over `trials` trajectories.
+
+    Accepts the availability engine's cluster/scenario knobs unchanged
+    (every core/scenarios.py policy runs here too), plus:
+
+    dupres_ticks   LARK's per-leader-change duplicate-resolution cost in
+                   ticks (0 disables; then LARK pause == instantaneous
+                   PAC unavailability exactly).  The charge is
+                   instantaneous, so a cost comparable to the horizon can
+                   push the raw pause integral past wall time; reported
+                   fractions are clipped to [0, 1].
+    rebuild_steps  quorum-log rebuild countdown after a replica loss
+                   (0 disables; then quorum pause == plain
+                   majority-of-replica-set unavailability exactly).
+    hist_bins      power-of-two duration buckets ([1,2), [2,4), ...,
+                   top bucket open-ended).
+
+    devices > 1 shards trials over the same 1-D "trials" mesh as the
+    availability engine — bit-identical to devices=1 for the same seed.
+    """
+    _validate_batched_args(backend=backend, devices=devices, trials=trials,
+                           wave_width=wave_width, n=n)
+    if dupres_ticks < 0 or rebuild_steps < 0:
+        raise ValueError("dupres_ticks and rebuild_steps must be >= 0")
+    if not 2 <= hist_bins <= 30:
+        raise ValueError("hist_bins must be in [2, 30]")
+    shard = use_shard_map if use_shard_map is not None else devices > 1
+    B, P, horizon = trials, partitions, max_ticks
+    (xp, succ, seed_mix, geo_masks, geo_tables, dt_vec, pair_perm,
+     p_arr, dt_arr) = _engine_setup(
+        backend, n=n, partitions=P, seed=seed, p=p, downtime=downtime,
+        p_node=p_node, downtime_node=downtime_node, max_ticks=max_ticks)
+    dt_fn = lambda u, f: downtime_eval_batch(u, f, rf=rf, n_real=n,
+                                             backend=backend,
+                                             block_p=pac_block_p)
+    advance = _make_node_advance(
+        xp, n=n, horizon=horizon, dt_vec=dt_vec, geo_masks=geo_masks,
+        geo_tables=geo_tables, seed_mix=seed_mix,
+        pair_fail_prob=pair_fail_prob, pair_perm=pair_perm,
+        restart_period=restart_period, wave_width=wave_width)
+    step = _make_step(xp, dt_fn, advance, succ, n=n, P=P, rf=rf,
+                      dupres_ticks=dupres_ticks,
+                      rebuild_steps=rebuild_steps, hist_bins=hist_bins)
+
+    # initial state: everyone up, roster replicas full, both protocols
+    # evaluated once at t=0 (identical to the availability engine's init)
+    lane0, up0, ev0, rr_t0 = _initial_node_state(
+        xp, B=B, n=n, seed_mix=seed_mix, geo_masks=geo_masks,
+        geo_tables=geo_tables, restart_period=restart_period,
+        horizon=horizon)
+    full0, (lark0, qmaj0, ldr0, _lf0, _nrep0, _creps0) = _initial_full_state(
+        xp, backend, dt_fn, up0, succ, B=B, P=P, n=n, rf=rf)
+    lark0 = lark0.reshape(B, P)
+    zi = xp.zeros((B,), dtype=xp.int32)
+    zf = xp.zeros((B,), dtype=xp.float32)
+    zbp = xp.zeros((B, P), dtype=xp.int32)
+    zh = xp.zeros((B, hist_bins), dtype=xp.int32)
+    carry = (zi, up0, ev0, full0, rr_t0, zi, lane0,
+             ~lark0, zbp,                              # ldn, lt0
+             up0[:, succ[:, :rf]],                     # qrep (all up)
+             zbp,                                      # qreb
+             ~qmaj0.reshape(B, P), zbp,                # qdn, qt0
+             ldr0.reshape(B, P).astype(xp.int32),      # leader
+             zf, zf, zi, zi, zh, zh)
+
+    if backend != "numpy":
+        import jax.numpy as jnp
+        run_chunk = _make_chunk_runner(step, carry, chunk_steps=chunk_steps,
+                                       devices=devices, shard=shard,
+                                       n_outputs=4)
+
+    if max_steps is None:
+        max_steps = _default_max_steps(p_arr, dt_arr, n=n, horizon=horizon,
+                                       restart_period=restart_period)
+
+    lpt_tot = np.zeros(B)
+    qpt_tot = np.zeros(B)
+    lev_tot = qev_tot = 0
+    lhist_tot = np.zeros(hist_bins, dtype=np.int64)
+    qhist_tot = np.zeros(hist_bins, dtype=np.int64)
+    traj = [] if trajectory else None
+    stopped = False
+    s0 = 1
+    while s0 < max_steps:
+        if backend == "numpy":
+            carry, ys = _run_chunk_numpy(step, carry, s0, chunk_steps)
+        else:
+            carry, ys = run_chunk(carry, jnp.int32(s0))
+        s0 += chunk_steps
+        if trajectory:
+            traj.append(tuple(np.asarray(c) for c in ys))
+        # drain per-chunk accumulators into float64/int totals
+        now = np.asarray(carry[0], dtype=np.int64)
+        lpt_tot += np.asarray(carry[14], dtype=np.float64)
+        qpt_tot += np.asarray(carry[15], dtype=np.float64)
+        lev_tot += int(np.asarray(carry[16]).sum())
+        qev_tot += int(np.asarray(carry[17]).sum())
+        lhist_tot += np.asarray(carry[18], dtype=np.int64).sum(axis=0)
+        qhist_tot += np.asarray(carry[19], dtype=np.int64).sum(axis=0)
+        carry = carry[:14] + (zf, zf, zi, zi, zh, zh)
+        if (now >= horizon).all():
+            break
+        # pooled CI early stop, mirroring the availability engine's rule
+        # (nominal binomial width; reported CIs use across-trial spread)
+        if now.mean() >= min_ticks and lev_tot >= min_events \
+                and qev_tot >= min_events:
+            pt = float(P) * float(now.sum())
+            u_l = min(lpt_tot.sum() / pt, 1.0)
+            u_q = min(qpt_tot.sum() / pt, 1.0)
+            hw_l = 1.96 * math.sqrt(max(u_l * (1 - u_l), 1e-30) / pt)
+            hw_q = 1.96 * math.sqrt(max(u_q * (1 - u_q), 1e-30) / pt)
+            if hw_l <= max(eps_abs, eps_rel * u_l) and \
+                    hw_q <= max(eps_abs, eps_rel * u_q):
+                stopped = True
+                break
+
+    now = np.maximum(np.asarray(carry[0], dtype=np.int64), 1)
+    pt_b = P * now.astype(np.float64)
+    pt = float(pt_b.sum())
+    # fractions by construction, except the instantaneous dup-res charge
+    # can overshoot wall time under extreme dupres_ticks — clip so the
+    # reported values and the binomial u*(1-u) CI terms stay meaningful
+    u_l = min(float(lpt_tot.sum()) / pt, 1.0)
+    u_q = min(float(qpt_tot.sum()) / pt, 1.0)
+    u_l_trials = np.minimum(lpt_tot / pt_b, 1.0)
+    u_q_trials = np.minimum(qpt_tot / pt_b, 1.0)
+    hw_l = hw_q = 0.0
+    if B >= 3:
+        t = t975(B - 1) / math.sqrt(B)
+        hw_l = t * float(u_l_trials.std(ddof=1))
+        hw_q = t * float(u_q_trials.std(ddof=1))
+    traj_out = None
+    if trajectory:
+        cols = [np.concatenate([c[i] for c in traj]) for i in range(4)]
+        traj_out = {"times": cols[0], "paused_lark": cols[1],
+                    "paused_quorum": cols[2], "nodes_up": cols[3]}
+    return BatchedDowntimeResult(
+        p=p, rf=rf, n=n, partitions=P, trials=B, backend=backend,
+        ticks=int(now.mean()), pause_lark=u_l, pause_quorum=u_q,
+        lark_events=lev_tot, quorum_events=qev_tot,
+        ci_lark=max(hw_l,
+                    1.96 * math.sqrt(max(u_l * (1 - u_l), 1e-30) / pt)),
+        ci_quorum=max(hw_q,
+                      1.96 * math.sqrt(max(u_q * (1 - u_q), 1e-30) / pt)),
+        dupres_ticks=dupres_ticks, rebuild_steps=rebuild_steps,
+        stopped_early=stopped, devices=devices,
+        hist_edges=np.asarray([1 << k for k in range(hist_bins)],
+                              dtype=np.int64),
+        hist_lark=lhist_tot, hist_quorum=qhist_tot,
+        pause_lark_trials=u_l_trials, pause_quorum_trials=u_q_trials,
+        trajectory=traj_out)

@@ -1,21 +1,51 @@
-"""Named, parameterized failure scenarios for the availability Monte Carlo.
+"""Named, parameterized failure scenarios for the batched Monte Carlos.
 
-The batched engine (core/availability_batched.py) exposes mechanism knobs —
-correlated pair failures, scheduled restart waves, per-node failure rates
-and downtimes — and this module gives the *policies* built on them stable
-names, so the sweep CLI, CI, and tests all draw from one registry instead
-of hard-coded grids:
+Paper anchors: the ``independent`` scenario is §5.1's i.i.d. grid model;
+``rolling-restart`` and ``maintenance-wave`` exercise §5.3's
+zero-downtime rolling-restart claim; the rest stress PAC (§3) under the
+correlated/heterogeneous failure modes real fleets see.  Every scenario
+runs under both batched engines — instantaneous availability
+(core/availability_batched.py, §5.1) and commit-pause downtime
+(core/downtime_batched.py, §6) — because scenarios only parameterize the
+shared node-failure *trajectory*, never the protocol evaluation.
+
+The engines expose mechanism knobs; this module gives the *policies*
+built on them stable names, so the sweep CLI, CI, and tests all draw
+from one registry instead of hard-coded grids:
 
     from repro.core.scenarios import get_scenario
     sc = get_scenario("rack-pairs")
     r = simulate_availability_batched(n=63, rf=2, p=3e-3,
                                       **sc.kwargs(n=63, rf=2, p=3e-3))
 
+Knobs a scenario may emit (all consumed by the shared node-advance in
+availability_batched.py, so trajectories stay bit-identical across
+backends/devices/engines):
+
+  pair_fail_prob   correlated dual failures — when node i fails, its pair
+                   partner (2i <-> 2i+1) fails at the same tick with this
+                   probability (shared rack / power domain).
+  restart_period   scheduled maintenance: every `restart_period` ticks
+                   the next wave of nodes (in id order, wrapping) is
+                   taken down for its configured downtime.
+  wave_width       nodes per restart wave; 1 = serial rolling restart
+                   (§5.3), >1 = batched maintenance that can swallow a
+                   whole roster at once.
+  p_node           (n,) per-node failure probability — heterogeneous
+                   MTTF.  Implemented as one geometric CDF table per
+                   *distinct* probability (per-class tables, selected by
+                   node masks), so keep the number of tiers small.
+  downtime_node    (n,) per-node downtime ticks (flapping nodes recover
+                   fast, slow hardware lingers); overrides the scalar
+                   `downtime`.
+
 Each scenario is a function (n, rf, p) -> extra keyword arguments for
-``simulate_availability_batched``; ``grid`` carries the (rf, p) points the
-sweep evaluates by default.  Scenarios only ever *add* kwargs on top of the
-i.i.d. baseline, so every registered name runs under every batched backend
-(numpy / jax / pallas) and shards across devices unchanged.
+the engines; ``grid`` carries the (rf, p) points the sweep evaluates by
+default.  Scenarios only ever *add* kwargs on top of the i.i.d.
+baseline — never sweep-owned ones like n/rf/p/backend/devices
+(``Scenario.kwargs`` enforces this) — so every registered name runs
+under every batched backend (numpy / jax / pallas) and shards across
+devices unchanged.
 """
 from __future__ import annotations
 
@@ -38,7 +68,8 @@ class Scenario:
         """simulate_availability_batched kwargs beyond (n, rf, p)."""
         kw = self.make_kwargs(n=n, rf=rf, p=p)
         for k in ("n", "rf", "p", "partitions", "trials", "backend",
-                  "devices", "seed"):
+                  "devices", "seed", "dupres_ticks", "rebuild_steps",
+                  "voters"):
             if k in kw:
                 raise ValueError(f"scenario {self.name!r} may not override "
                                  f"sweep-owned kwarg {k!r}")

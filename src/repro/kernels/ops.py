@@ -1,11 +1,30 @@
 """Jit'd dispatch wrappers: Pallas kernel on TPU, pure-jnp oracle elsewhere.
 
-The CPU container validates kernels in ``interpret=True`` mode (tests) while
-models/benchmarks/dry-runs use the jnp oracle path — identical math, so the
-lowered HLO is an honest stand-in and the TPU kernel is a drop-in swap.
+Two layers live here:
 
-Set ``REPRO_FORCE_PALLAS=interpret`` to route model code through the
-interpreted kernels (slow; tests only).
+*Model kernels* (flash_attention, mlstm, rglru): the CPU container
+validates them in ``interpret=True`` mode (tests) while
+models/benchmarks/dry-runs use the jnp oracle path — identical math, so
+the lowered HLO is an honest stand-in and the TPU kernel is a drop-in
+swap.  Set ``REPRO_FORCE_PALLAS=interpret`` to route model code through
+the interpreted kernels (slow; tests only).
+
+*Monte Carlo batch ops* (paper §5.1 / §6 hot loops): ``pac_eval_batch``
+and ``downtime_eval_batch`` evaluate (R, n_pad) rank-space cluster-state
+tiles under a uniform three-backend contract —
+
+  backend="numpy"   vectorized numpy (the scalar event engine's math,
+                    shared via pac_np.py, jax-import-free)
+  backend="jax"     pure-jnp oracle (jit-friendly; used inside lax.scan)
+  backend="pallas"  kernels/pac_eval.py — compiled on TPU, interpret
+                    mode on CPU
+
+Invariants (pinned by tests/test_availability_batched.py and
+tests/test_downtime_batched.py, stated in docs/ARCHITECTURE.md): all
+three backends are bit-identical (comparisons/cumsums only, no float
+math); padding columns >= n_real never affect outputs; and the Pallas
+``block_p`` tiling — including the deterministic ``autotune_block_p``
+choice — changes throughput, never results.
 """
 from __future__ import annotations
 
@@ -88,7 +107,8 @@ def pac_eval(up, succ, full, rf: int, *, voters=None,
 # (numpy-only) so the event engine never pays the jax import.
 # ---------------------------------------------------------------------------
 
-from .pac_np import pac_eval_rank_np  # noqa: E402  (re-export)
+from .pac_np import (downtime_eval_rank_np,  # noqa: E402  (re-export)
+                     pac_eval_rank_np)
 
 
 def _pallas_block_p(R: int) -> int:
@@ -246,5 +266,46 @@ def pac_eval_batch(up_succ, full_succ, *, rf: int, voters: int, n_real: int,
                                        block_p=block_p or _pallas_block_p(R),
                                        interpret=interpret)
         return lark, maj, creps[:, :n_pad]
+    raise ValueError(f"unknown PAC backend {backend!r}; "
+                     f"expected one of {PAC_BACKENDS}")
+
+
+def downtime_eval_batch(up_succ, full_succ, *, rf: int, n_real: int,
+                        backend: str = "jax",
+                        block_p: Optional[int] = None):
+    """Dispatch the §6 downtime engine's per-step evaluation of a
+    (R, n_pad) rank-space tile to the chosen backend.
+
+    Extends the pac_eval_batch contract with the state the commit-pause
+    engine (core/downtime_batched.py) tracks between steps — the
+    quorum-log baseline's f+1-copy replica-set majority and up-count, and
+    the acting leader's rank and latest-copy bit (for the dup-res
+    penalty).  Returns (lark, qmaj, leader, leader_full, nrep, creps);
+    see pac_np.downtime_eval_rank_np for per-output semantics.
+
+    The same invariants as pac_eval_batch hold: all three backends are
+    bit-identical (pure comparisons/cumsums, no float math), and block_p
+    (pallas) only tiles the rows — any autotune_block_p choice for an
+    (R, n_pad) PAC tile is valid here, which is why the sweep reuses one
+    autotuned block size for both metrics.
+    """
+    if backend == "numpy":
+        return downtime_eval_rank_np(up_succ, full_succ, rf=rf,
+                                     n_real=n_real)
+    if backend == "jax":
+        return ref.downtime_eval_rank_ref(up_succ, full_succ, rf=rf,
+                                          n_real=n_real)
+    if backend == "pallas":
+        from . import pac_eval as pk
+        R, n_pad = up_succ.shape
+        lanes = -n_pad % 128
+        if lanes:
+            up_succ = jnp.pad(up_succ, ((0, 0), (0, lanes)))
+            full_succ = jnp.pad(full_succ, ((0, 0), (0, lanes)))
+        interpret = jax.default_backend() != "tpu"
+        lark, qmaj, leader, lfull, nrep, creps = pk.downtime_eval(
+            up_succ, full_succ, rf=rf, n_real=n_real,
+            block_p=block_p or _pallas_block_p(R), interpret=interpret)
+        return lark, qmaj, leader, lfull, nrep, creps[:, :n_pad]
     raise ValueError(f"unknown PAC backend {backend!r}; "
                      f"expected one of {PAC_BACKENDS}")

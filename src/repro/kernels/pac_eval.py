@@ -80,3 +80,72 @@ def pac_eval(up_succ, full_succ, *, rf: int, voters: int, n_real: int,
         interpret=interpret,
     )(up_succ, full_succ, valid)
     return lark, maj, creps
+
+
+def _downtime_kernel(up_ref, full_ref, valid_ref, lark_ref, qmaj_ref,
+                     leader_ref, lfull_ref, nrep_ref, creps_ref, *,
+                     rf: int, n_real: int):
+    """PAC + quorum-log replica set + acting leader for one (bp, n) block —
+    the §6 downtime engine's per-step evaluation (downtime_eval_rank_np is
+    the contract; everything is integer/boolean VPU work, so outputs are
+    bit-identical to the numpy and jnp implementations)."""
+    up = up_ref[...].astype(jnp.int32)            # (bp, n)
+    full = full_ref[...].astype(jnp.int32)
+    valid = valid_ref[...].astype(jnp.int32)
+    up = up * valid
+    full = full * valid
+
+    lanes = jax.lax.broadcasted_iota(jnp.int32, up.shape, 1)
+    n_up = jnp.sum(up, axis=1, keepdims=True)
+    majority = (2 * n_up > n_real).astype(jnp.int32)
+    nrep = jnp.sum(jnp.where(lanes < rf, up, 0), axis=1)          # (bp,)
+    any_roster = (nrep[:, None] > 0).astype(jnp.int32)
+    full_up = (jnp.sum(full * up, axis=1, keepdims=True) > 0).astype(jnp.int32)
+    lark_ref[...] = ((majority * any_roster * full_up)[:, 0] > 0)
+
+    qmaj_ref[...] = (2 * nrep > rf)
+    nrep_ref[...] = nrep
+
+    leader = jnp.min(jnp.where(up > 0, lanes, up.shape[1]), axis=1)
+    leader = jnp.minimum(leader, n_real).astype(jnp.int32)
+    leader_ref[...] = leader
+    lfull_ref[...] = (jnp.sum(
+        jnp.where(lanes == leader[:, None], full * up, 0), axis=1) > 0)
+
+    rank = jnp.cumsum(up, axis=1)
+    creps_ref[...] = (up > 0) & (rank <= rf)
+
+
+def downtime_eval(up_succ, full_succ, *, rf: int, n_real: int,
+                  block_p: int = 256, interpret: bool = False):
+    """up_succ/full_succ: (P, n_pad) bool.  Returns (lark, qmaj, leader,
+    leader_full, nrep, creps) — see pac_np.downtime_eval_rank_np."""
+    P, n_pad = up_succ.shape
+    block_p = min(block_p, P)
+    if P % block_p:
+        raise ValueError(
+            f"block_p={block_p} must tile the row count P={P} exactly — "
+            "pick a candidate from ops.block_p_candidates(P, n_pad)")
+    valid = (jnp.arange(n_pad) < n_real)[None, :].astype(jnp.bool_)
+    valid = jnp.broadcast_to(valid, (block_p, n_pad))
+
+    kernel = functools.partial(_downtime_kernel, rf=rf, n_real=n_real)
+    row_spec = pl.BlockSpec((block_p,), lambda i: (i,))
+    tile_spec = pl.BlockSpec((block_p, n_pad), lambda i: (i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(P // block_p,),
+        in_specs=[tile_spec, tile_spec,
+                  pl.BlockSpec((block_p, n_pad), lambda i: (0, 0))],
+        out_specs=[row_spec, row_spec, row_spec, row_spec, row_spec,
+                   tile_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((P,), jnp.bool_),
+            jax.ShapeDtypeStruct((P,), jnp.bool_),
+            jax.ShapeDtypeStruct((P,), jnp.int32),
+            jax.ShapeDtypeStruct((P,), jnp.bool_),
+            jax.ShapeDtypeStruct((P,), jnp.int32),
+            jax.ShapeDtypeStruct((P, n_pad), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(up_succ, full_succ, valid)

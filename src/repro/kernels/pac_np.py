@@ -30,3 +30,35 @@ def pac_eval_rank_np(up_succ, full_succ, *, rf: int, voters: int,
     rank = np.cumsum(up, axis=1) <= rf
     creps = up & rank
     return lark, maj, creps
+
+
+def downtime_eval_rank_np(up_succ, full_succ, *, rf: int, n_real: int):
+    """Per-step protocol evaluation for the downtime engine (§6).
+
+    Same (R, n_pad) rank-space tiles as pac_eval_rank_np.  Returns
+      lark        (R,)   bool — PAC SimpleMajority (identical math)
+      qmaj        (R,)   bool — majority of the f+1-copy replica set
+                         (the first rf succession columns; equal storage)
+      leader      (R,)   int32 — succession rank of the acting leader
+                         (first up node; n_real when no node is up)
+      leader_full (R,)   bool — leader holds the latest copy (pre-refresh
+                         full mask, so a fresh leader is visibly stale)
+      nrep        (R,)   int32 — up-count within the replica set
+      creps       (R, n_pad) bool — cluster replicas (holder refresh)
+    """
+    up = np.asarray(up_succ, dtype=bool)
+    full = np.asarray(full_succ, dtype=bool)
+    lark, qmaj, creps = pac_eval_rank_np(up, full, rf=rf, voters=rf,
+                                         n_real=n_real)
+    if up.shape[1] > n_real:
+        valid = np.arange(up.shape[1]) < n_real
+        up = up & valid
+        full = full & valid
+    nrep = up[:, :rf].sum(axis=1).astype(np.int32)
+    lanes = np.arange(up.shape[1], dtype=np.int32)
+    leader = np.where(up, lanes[None, :], np.int32(up.shape[1])) \
+        .min(axis=1).astype(np.int32)
+    leader = np.minimum(leader, np.int32(n_real))
+    leader_full = ((full & up) & (lanes[None, :] == leader[:, None])) \
+        .any(axis=1)
+    return lark, qmaj, leader, leader_full, nrep, creps

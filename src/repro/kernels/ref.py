@@ -5,8 +5,12 @@ Contents
   mlstm_chunkwise    xLSTM matrix-memory, chunk-parallel (mlstm_chunk oracle)
   mlstm_step         single-step mLSTM recurrence (decode)
   rglru_scan_ref     RG-LRU linear recurrence via associative scan
-  rglru_step         single-step RG-LRU (decode)
-  pac_eval_ref       PAC availability over (partitions x nodes) masks
+  rglru_step             single-step RG-LRU (decode)
+  pac_eval_ref           PAC availability over (partitions x nodes) masks
+  pac_eval_rank_ref      rank-space PAC tile (oracle for kernels/pac_eval.py)
+  downtime_eval_rank_ref rank-space per-step protocol eval for the §6
+                         downtime engine (PAC + quorum-log replica set +
+                         acting leader)
 """
 from __future__ import annotations
 
@@ -192,6 +196,27 @@ def pac_eval_rank_ref(up_succ, full_succ, *, rf: int, voters: int,
     rank = jnp.cumsum(up.astype(jnp.int32), axis=1)
     creps = up & (rank <= rf)
     return lark, maj, creps
+
+
+def downtime_eval_rank_ref(up_succ, full_succ, *, rf: int, n_real: int):
+    """Pure-jnp oracle of kernels.pac_np.downtime_eval_rank_np (§6 downtime
+    engine per-step evaluation) — see that function for the contract.  All
+    outputs are comparisons/cumsums over the same masked tiles, so the two
+    implementations (and the Pallas kernel) are bit-identical."""
+    n_pad = up_succ.shape[1]
+    valid = (jnp.arange(n_pad) < n_real)[None, :]
+    up = up_succ & valid
+    full = full_succ & valid
+    lark, qmaj, creps = pac_eval_rank_ref(up_succ, full_succ, rf=rf,
+                                          voters=rf, n_real=n_real)
+    nrep = jnp.sum(up[:, :rf], axis=1).astype(jnp.int32)
+    lanes = jnp.arange(n_pad, dtype=jnp.int32)
+    leader = jnp.min(jnp.where(up, lanes[None, :], jnp.int32(n_pad)),
+                     axis=1).astype(jnp.int32)
+    leader = jnp.minimum(leader, jnp.int32(n_real))
+    leader_full = jnp.any((full & up) & (lanes[None, :] == leader[:, None]),
+                          axis=1)
+    return lark, qmaj, leader, leader_full, nrep, creps
 
 def pac_eval_ref(up, succ, full, rf: int, *, voters: Optional[int] = None,
                  conditions: Tuple[str, ...] = ("simple_majority",)):

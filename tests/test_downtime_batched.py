@@ -1,0 +1,206 @@
+"""Batched §6 downtime/commit-pause engine: cross-backend and shard_map
+bit-identity, the dup-res and rebuild degeneracy properties (pause
+fractions must collapse *exactly* to the instantaneous engine's
+integrals when the knobs are zeroed), protocol-semantics monotonicity,
+and duration-histogram accounting."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.availability_batched import simulate_availability_batched
+from repro.core.downtime_batched import simulate_downtime_batched
+from repro.core.scenarios import get_scenario, scenario_names
+from repro.kernels.ops import PAC_BACKENDS, downtime_eval_batch
+
+RNG = np.random.default_rng(17)
+
+_KW = dict(n=13, partitions=32, rf=2, p=5e-3, trials=3, max_ticks=4_000,
+           min_ticks=10**9, chunk_steps=64, max_steps=600, seed=11,
+           trajectory=True)
+
+
+# ---------------------------------------------------------------------------
+# per-step op: backend agreement
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rf,n_real,n_pad", [(2, 23, 23), (3, 19, 40)])
+def test_downtime_eval_backends_agree(rf, n_real, n_pad):
+    R = 128
+    up = RNG.random((R, n_pad)) < 0.8
+    full = RNG.random((R, n_pad)) < 0.4
+    up[0] = False                       # dead partition: leader sentinel
+    outs = {}
+    for b in PAC_BACKENDS:
+        u = up if b == "numpy" else jnp.asarray(up)
+        f = full if b == "numpy" else jnp.asarray(full)
+        outs[b] = tuple(np.asarray(o) for o in downtime_eval_batch(
+            u, f, rf=rf, n_real=n_real, backend=b))
+    for b in PAC_BACKENDS[1:]:
+        for i, (a, c) in enumerate(zip(outs[PAC_BACKENDS[0]], outs[b])):
+            assert np.array_equal(a, c), (b, i)
+    lark, qmaj, leader, lfull, nrep, creps = outs["numpy"]
+    assert leader[0] == n_real and not lfull[0]          # no node up
+    assert ((2 * nrep > rf) == qmaj).all()
+    assert (nrep <= rf).all()
+    assert not creps[:, n_real:].any()                   # padding untouched
+    # the leader is the first up node: rank-space argmax over the up mask
+    up_m = up & (np.arange(n_pad) < n_real)
+    exp = np.where(up_m.any(axis=1), up_m.argmax(axis=1), n_real)
+    assert np.array_equal(leader, exp)
+
+
+# ---------------------------------------------------------------------------
+# bit-identical seeded trajectories across backends and sharding
+# ---------------------------------------------------------------------------
+
+def test_trajectory_identical_across_backends():
+    results = {b: simulate_downtime_batched(backend=b, **_KW)
+               for b in PAC_BACKENDS}
+    base = results[PAC_BACKENDS[0]]
+    for b in PAC_BACKENDS[1:]:
+        r = results[b]
+        for k in base.trajectory:
+            assert np.array_equal(base.trajectory[k], r.trajectory[k]), \
+                (b, k)
+        assert r.pause_lark == base.pause_lark
+        assert r.pause_quorum == base.pause_quorum
+        assert np.array_equal(r.hist_lark, base.hist_lark)
+        assert np.array_equal(r.hist_quorum, base.hist_quorum)
+        assert r.lark_events == base.lark_events
+        assert r.quorum_events == base.quorum_events
+    # paused-partition counts really vary over time (the engine is live)
+    assert base.trajectory["paused_quorum"].max() > 0
+
+
+def test_shard_map_path_identical_on_one_device():
+    plain = simulate_downtime_batched(backend="jax", **_KW)
+    mesh1 = simulate_downtime_batched(backend="jax", devices=1,
+                                      use_shard_map=True, **_KW)
+    for k in plain.trajectory:
+        assert np.array_equal(plain.trajectory[k], mesh1.trajectory[k]), k
+    assert plain.pause_lark == mesh1.pause_lark
+    assert plain.pause_quorum == mesh1.pause_quorum
+    assert np.array_equal(plain.hist_lark, mesh1.hist_lark)
+    assert np.array_equal(plain.pause_lark_trials, mesh1.pause_lark_trials)
+
+
+def test_sharding_and_knob_validation():
+    with pytest.raises(ValueError, match="numpy"):
+        simulate_downtime_batched(backend="numpy", devices=2, **_KW)
+    with pytest.raises(ValueError, match="divide"):
+        simulate_downtime_batched(backend="jax", devices=2, **_KW)
+    with pytest.raises(ValueError, match="dupres_ticks"):
+        simulate_downtime_batched(backend="numpy", dupres_ticks=-1, **_KW)
+    with pytest.raises(ValueError, match="hist_bins"):
+        simulate_downtime_batched(backend="numpy", hist_bins=1, **_KW)
+
+
+# ---------------------------------------------------------------------------
+# degeneracy properties: zeroed knobs collapse to instantaneous integrals
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=2, max_value=3),
+       st.sampled_from([3e-3, 8e-3]),
+       st.integers(min_value=0, max_value=3))
+def test_zero_knobs_degenerate_to_instantaneous_integrals(rf, p, seed):
+    """Satellite acceptance: dupres_ticks=0 makes LARK downtime equal the
+    instantaneous-PAC unavailability integral, and rebuild_steps=0 makes
+    the quorum-log baseline plain majority-of-replica-set availability
+    (voters=rf in the instantaneous engine) — exactly, not statistically,
+    because both engines replay the same counter-RNG trajectory."""
+    kw = dict(n=11, partitions=16, p=p, trials=2, max_ticks=1_500,
+              min_ticks=10**9, chunk_steps=32, max_steps=200, seed=seed,
+              backend="numpy", trajectory=True)
+    dt = simulate_downtime_batched(rf=rf, dupres_ticks=0, rebuild_steps=0,
+                                   **kw)
+    av = simulate_availability_batched(rf=rf, voters=rf, **kw)
+    assert dt.pause_lark == av.u_lark
+    assert dt.pause_quorum == av.u_maj
+    assert np.array_equal(dt.pause_lark_trials, av.u_lark_trials)
+    assert np.array_equal(dt.pause_quorum_trials, av.u_maj_trials)
+    assert np.array_equal(dt.trajectory["times"], av.trajectory["times"])
+    assert np.array_equal(dt.trajectory["paused_lark"],
+                          av.trajectory["unavail_lark"])
+    assert np.array_equal(dt.trajectory["paused_quorum"],
+                          av.trajectory["unavail_maj"])
+
+
+def test_dupres_and_rebuild_only_add_pause():
+    base = simulate_downtime_batched(dupres_ticks=0, rebuild_steps=0, **_KW)
+    dup = simulate_downtime_batched(dupres_ticks=5, rebuild_steps=0, **_KW)
+    reb = simulate_downtime_batched(dupres_ticks=0, rebuild_steps=50, **_KW)
+    reb2 = simulate_downtime_batched(dupres_ticks=0, rebuild_steps=200,
+                                     **_KW)
+    assert dup.pause_lark > base.pause_lark
+    assert dup.pause_quorum == base.pause_quorum     # knob is LARK-only
+    assert reb.pause_quorum > base.pause_quorum
+    assert reb2.pause_quorum > reb.pause_quorum      # monotone in rebuild
+    assert reb.pause_lark == base.pause_lark         # knob is quorum-only
+
+
+def test_lark_outpauses_nothing_quorum_pays_rebuilds():
+    """The §6 headline: equal storage budget, same trajectory — LARK's
+    commit-pause fraction stays well below the rebuilding quorum-log's."""
+    r = simulate_downtime_batched(backend="numpy", **_KW)
+    assert r.pause_lark < r.pause_quorum
+    assert r.availability_ratio > 2.0
+
+
+# ---------------------------------------------------------------------------
+# duration-histogram accounting
+# ---------------------------------------------------------------------------
+
+def test_histogram_accounting():
+    r = simulate_downtime_batched(backend="numpy", **_KW)
+    assert r.hist_edges.tolist() == [1 << k for k in range(16)]
+    # every completed run was opened by a counted pause-start event
+    # (runs still open at the horizon are censored, so <=)
+    assert 0 < int(r.hist_lark.sum()) <= r.lark_events
+    assert 0 < int(r.hist_quorum.sum()) <= r.quorum_events
+    # dup-res penalties land in the bucket holding dupres_ticks
+    zero = simulate_downtime_batched(dupres_ticks=0, **_KW)
+    pen8 = simulate_downtime_batched(dupres_ticks=8, **_KW)
+    extra = pen8.hist_lark - zero.hist_lark
+    assert extra[3] > 0                        # bucket [8, 16)
+    assert (extra[:3] == 0).all() and (extra[4:] == 0).all()
+
+
+def test_quorum_rebuild_durations_reflect_the_countdown():
+    """With a failure-free rebuild window, every quorum pause caused by a
+    single replica loss lasts >= rebuild_steps ticks — the histogram mass
+    sits at or above the rebuild bucket."""
+    r = simulate_downtime_batched(
+        n=12, partitions=32, rf=3, p=1e-3, trials=2, max_ticks=20_000,
+        min_ticks=10**9, seed=7, backend="numpy", dupres_ticks=0,
+        rebuild_steps=64)
+    assert int(r.hist_quorum.sum()) > 0
+    assert r.hist_quorum[:6].sum() == 0        # no run shorter than 64
+
+
+# ---------------------------------------------------------------------------
+# scenario registry compatibility
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", scenario_names())
+def test_every_scenario_runs_under_the_downtime_engine(name):
+    sc = get_scenario(name)
+    rf, p = sc.grid[0]
+    r = simulate_downtime_batched(
+        rf=rf, p=p, n=13, partitions=32, trials=2, max_ticks=2_000,
+        min_ticks=10**9, chunk_steps=32, max_steps=120, seed=5,
+        backend="numpy", **sc.kwargs(n=13, rf=rf, p=p))
+    assert 0.0 <= r.pause_lark and 0.0 <= r.pause_quorum <= 1.0
+
+
+@pytest.mark.slow
+def test_batched_downtime_matches_reduced_scale_expectations():
+    """Reduced-grid row at the sweep's scale: LARK pause ~ u_lark level,
+    quorum pays heavily for rebuilds."""
+    r = simulate_downtime_batched(
+        n=63, partitions=512, rf=2, p=3e-3, trials=4, max_ticks=120_000,
+        min_ticks=20_000, seed=0, backend="jax")
+    assert 0 < r.pause_lark < 0.1
+    assert r.pause_quorum > r.pause_lark
+    assert r.availability_ratio > 5

@@ -1,0 +1,111 @@
+"""Docs lane: fail CI on broken intra-repo markdown links and on missing
+module docstrings in the protocol/kernels packages.
+
+Two cheap checks, no dependencies beyond the stdlib:
+
+1. Every relative link target in a tracked ``*.md`` file must exist on
+   disk (resolved against the file's own directory, ``#fragment``
+   stripped).  External schemes (http/https/mailto) and pure in-page
+   anchors are skipped.
+2. Every module under ``src/repro/core`` and ``src/repro/kernels``
+   (``__init__.py`` exempt) must carry a module docstring of at least
+   ``MIN_DOCSTRING_CHARS`` characters — the documentation floor
+   docs/ARCHITECTURE.md's invariants section relies on.
+
+Run from anywhere: paths are anchored to the repo root (parent of this
+file's directory).  Exit code 1 with a per-finding report on failure.
+"""
+from __future__ import annotations
+
+import ast
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+MIN_DOCSTRING_CHARS = 40
+DOCSTRING_PACKAGES = ("src/repro/core", "src/repro/kernels")
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", ".ruff_cache",
+             ".hypothesis", ".venv", "venv", "node_modules", ".tox",
+             "build", "dist", ".claude"}
+
+# [text](target) — good enough for the hand-written markdown in this
+# repo; images (![alt](target)) match too, which is what we want
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def iter_files(suffix: str):
+    """Tracked files first (so vendored/venv markdown the repo doesn't own
+    never fails the lane); filesystem walk with a skip list as the
+    fallback outside a git checkout."""
+    try:
+        out = subprocess.run(
+            ["git", "ls-files", "-z", "--cached", "--others",
+             "--exclude-standard", f"*{suffix}"], cwd=REPO,
+            capture_output=True, text=True, check=True)
+        paths = [REPO / rel
+                 for rel in sorted(filter(None, out.stdout.split("\0")))]
+    except (OSError, subprocess.CalledProcessError):
+        paths = sorted(REPO.rglob(f"*{suffix}"))
+    for path in paths:
+        if path.exists() and not SKIP_DIRS.intersection(
+                p.name for p in path.parents):
+            yield path
+
+
+def check_markdown_links() -> list:
+    failures = []
+    for md in iter_files(".md"):
+        text = md.read_text(encoding="utf-8")
+        for m in _LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (md.parent / rel).exists():
+                line = text[:m.start()].count("\n") + 1
+                failures.append(f"{md.relative_to(REPO)}:{line}: "
+                                f"broken link -> {target}")
+    return failures
+
+
+def check_module_docstrings() -> list:
+    failures = []
+    for pkg in DOCSTRING_PACKAGES:
+        for py in sorted((REPO / pkg).rglob("*.py")):
+            if py.name == "__init__.py":
+                continue
+            rel = py.relative_to(REPO)
+            try:
+                tree = ast.parse(py.read_text(encoding="utf-8"))
+            except SyntaxError as e:
+                failures.append(f"{rel}: does not parse: {e}")
+                continue
+            doc = ast.get_docstring(tree)
+            if not doc:
+                failures.append(f"{rel}: missing module docstring")
+            elif len(doc) < MIN_DOCSTRING_CHARS:
+                failures.append(
+                    f"{rel}: module docstring under "
+                    f"{MIN_DOCSTRING_CHARS} chars ({len(doc)})")
+    return failures
+
+
+def main() -> int:
+    failures = check_markdown_links() + check_module_docstrings()
+    for f in failures:
+        print(f"docs: {f}")
+    if failures:
+        print(f"DOCS CHECK FAILED: {len(failures)} finding(s)")
+        return 1
+    n_md = sum(1 for _ in iter_files(".md"))
+    print(f"docs ok: links in {n_md} markdown files, module docstrings "
+          f"in {', '.join(DOCSTRING_PACKAGES)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
