@@ -10,9 +10,12 @@ pallas-interpret lane.  Emits CSV rows:
 commit-pause engine (core/downtime_batched.py): rows carry the mean
 commit-pause fraction of LARK vs the equal-storage quorum-log baseline,
 the pause-duration histograms, and the dup-res / rebuild knobs
-(--dupres-ticks / --rebuild-steps).  Downtime rows are batched-only
-("event" maps to "numpy").  See docs/BENCHMARKS.md for the full CLI
-surface.
+(--dupres-ticks / --rebuild-steps).  --rebuild-model picks the baseline:
+"fixed" (static first-rf replica set, constant rebuild pause) or
+"reconfig" (replica-set reconfiguration onto live nodes with a
+data-sized catch-up, --rebuild-ticks-per-gib per GiB of per-partition
+data).  Downtime rows are batched-only ("event" maps to "numpy").  See
+docs/BENCHMARKS.md for the full CLI surface.
 
 Backends (--backend):
   event    scalar heapq event engine (core/availability.py); --trials N runs
@@ -92,15 +95,27 @@ def _batched_backend(backend: str, devices: int):
     return ("numpy", 1) if backend == "event" else (backend, devices)
 
 
-def _autotune_row(n: int, parts: int, trials: int, devices: int):
-    """Race PAC block_p candidates on the per-device sweep tile shape."""
+def _autotune_row(n: int, parts: int, trials: int, devices: int, *,
+                  metric: str = "availability", rf: int = 2,
+                  rebuild_model: str = "fixed"):
+    """Race block_p candidates on the per-device sweep tile shape, timing
+    the kernel the grid will actually run: pac_eval for the availability
+    metric, downtime_eval (or its roster-carrying reconfig variant) for
+    --metric downtime — at the grid's rf, not a hardcoded rf=2/voters=3."""
     from repro.kernels.ops import autotune_block_p
     R = (trials // devices) * parts
-    res = autotune_block_p(R, n, rf=2, voters=3, n_real=n)
+    if metric == "downtime":
+        kernel = "downtime_roster" if rebuild_model == "reconfig" \
+            else "downtime"
+    else:
+        kernel = "pac"
+    res = autotune_block_p(R, n, rf=rf, voters=2 * (rf - 1) + 1, n_real=n,
+                           kernel=kernel)
     row = {"kind": "autotune", "block_p": res.block_p, "source": res.source,
+           "kernel": kernel, "rf": rf,
            "timings_us": {str(k): v for k, v in res.timings_us.items()}}
     print(f"autotune,block_p,0,choice={res.block_p};source={res.source};"
-          f"candidates={len(res.timings_us)}")
+          f"kernel={kernel};rf={rf};candidates={len(res.timings_us)}")
     return res.block_p, row
 
 
@@ -183,6 +198,8 @@ def _downtime_row(r, *, kind: str, scenario: str):
         "hist_lark": r.hist_lark.tolist(),
         "hist_quorum": r.hist_quorum.tolist(),
         "dupres_ticks": r.dupres_ticks, "rebuild_steps": r.rebuild_steps,
+        "rebuild_model": r.rebuild_model,
+        "rebuild_ticks_per_gib": r.rebuild_ticks_per_gib,
         "ticks": r.ticks,
     }
 
@@ -190,7 +207,8 @@ def _downtime_row(r, *, kind: str, scenario: str):
 def run_downtime(full: bool = False, trials: int = 4, backend: str = "jax",
                  seed: int = 0, devices: int = 1, smoke: bool = False,
                  pac_block_p=None, dupres_ticks: int = 1,
-                 rebuild_steps: int = 100):
+                 rebuild_steps: int = 100, rebuild_model: str = "fixed",
+                 rebuild_ticks_per_gib: int = 100):
     """§6 commit-pause rows over the i.i.d. grid."""
     backend, devices = _batched_backend(backend, devices)
     grid = _iid_grid(full, smoke)
@@ -201,7 +219,9 @@ def run_downtime(full: bool = False, trials: int = 4, backend: str = "jax",
             n=n, partitions=parts, rf=rf, p=p, trials=trials,
             max_ticks=max_ticks, min_ticks=min_ticks, seed=seed,
             backend=backend, devices=devices, pac_block_p=pac_block_p,
-            dupres_ticks=dupres_ticks, rebuild_steps=rebuild_steps)
+            dupres_ticks=dupres_ticks, rebuild_steps=rebuild_steps,
+            rebuild_model=rebuild_model,
+            rebuild_ticks_per_gib=rebuild_ticks_per_gib)
         rows.append(_downtime_row(r, kind="downtime", scenario="iid"))
     return rows
 
@@ -210,7 +230,9 @@ def run_downtime_scenarios(names, full: bool = False, trials: int = 4,
                            backend: str = "jax", seed: int = 0,
                            devices: int = 1, smoke: bool = False,
                            pac_block_p=None, dupres_ticks: int = 1,
-                           rebuild_steps: int = 100):
+                           rebuild_steps: int = 100,
+                           rebuild_model: str = "fixed",
+                           rebuild_ticks_per_gib: int = 100):
     backend, devices = _batched_backend(backend, devices)
     n, parts, max_ticks, min_ticks = _run_scale(full, smoke, scenario=True)
     rows = []
@@ -222,6 +244,8 @@ def run_downtime_scenarios(names, full: bool = False, trials: int = 4,
                 max_ticks=max_ticks, min_ticks=min_ticks, seed=seed,
                 backend=backend, devices=devices, pac_block_p=pac_block_p,
                 dupres_ticks=dupres_ticks, rebuild_steps=rebuild_steps,
+                rebuild_model=rebuild_model,
+                rebuild_ticks_per_gib=rebuild_ticks_per_gib,
                 **sc.kwargs(n=n, rf=rf, p=p))
             rows.append(_downtime_row(r, kind="downtime_scenario",
                                       scenario=name))
@@ -262,7 +286,19 @@ def main(argv=None, *, strict: bool = True):
                          "(downtime metric only; default 1)")
     ap.add_argument("--rebuild-steps", type=int, default=None,
                     help="quorum-log rebuild pause in ticks after a "
-                         "replica loss (downtime metric only; default 100)")
+                         "replica loss (--rebuild-model fixed only; "
+                         "default 100)")
+    ap.add_argument("--rebuild-model", default=None,
+                    choices=("fixed", "reconfig"),
+                    help="quorum-log baseline: static replica set with a "
+                         "constant rebuild pause (fixed, default) or "
+                         "reconfiguration onto live nodes with a "
+                         "data-sized catch-up (reconfig); downtime "
+                         "metric only")
+    ap.add_argument("--rebuild-ticks-per-gib", type=int, default=None,
+                    help="reconfig catch-up cost per GiB of partition "
+                         "data (--rebuild-model reconfig only; "
+                         "default 100)")
     ap.add_argument("--trials", type=int, default=1,
                     help="seeds (event) or batch size (batched backends)")
     ap.add_argument("--devices", type=int, default=1,
@@ -295,22 +331,46 @@ def main(argv=None, *, strict: bool = True):
         ap.error("--autotune tunes the pallas kernel block size; "
                  "use --backend pallas")
     if args.metric != "downtime":
-        if args.dupres_ticks is not None or args.rebuild_steps is not None:
-            ap.error("--dupres-ticks/--rebuild-steps only apply to "
+        if args.dupres_ticks is not None or args.rebuild_steps is not None \
+                or args.rebuild_model is not None \
+                or args.rebuild_ticks_per_gib is not None:
+            ap.error("--dupres-ticks/--rebuild-steps/--rebuild-model/"
+                     "--rebuild-ticks-per-gib only apply to "
                      "--metric downtime")
+    if args.rebuild_model is None:
+        args.rebuild_model = "fixed"
+    if args.rebuild_model == "reconfig" and args.rebuild_steps is not None:
+        ap.error("--rebuild-steps is the fixed-model knob; use "
+                 "--rebuild-ticks-per-gib with --rebuild-model reconfig")
+    if args.rebuild_model == "fixed" \
+            and args.rebuild_ticks_per_gib is not None:
+        ap.error("--rebuild-ticks-per-gib is the reconfig-model knob; use "
+                 "--rebuild-steps with --rebuild-model fixed")
     if args.dupres_ticks is None:
         args.dupres_ticks = 1
     if args.rebuild_steps is None:
         args.rebuild_steps = 100
-    if args.dupres_ticks < 0 or args.rebuild_steps < 0:
-        ap.error("--dupres-ticks and --rebuild-steps must be >= 0")
+    if args.rebuild_ticks_per_gib is None:
+        args.rebuild_ticks_per_gib = 100
+    if args.dupres_ticks < 0 or args.rebuild_steps < 0 \
+            or args.rebuild_ticks_per_gib < 0:
+        ap.error("--dupres-ticks/--rebuild-steps/--rebuild-ticks-per-gib "
+                 "must be >= 0")
 
     names = _resolve_scenarios(args, ap)
     rows = []
     pac_block_p = None
     if args.autotune:
         n, parts = _grid_scale(args.full, args.smoke)
-        pac_block_p, row = _autotune_row(n, parts, args.trials, args.devices)
+        # rf of the first row the sweep will actually run (scenario grid
+        # when the i.i.d. grid is skipped)
+        if args.scenarios_only and names:
+            tune_rf = get_scenario(names[0]).grid[0][0]
+        else:
+            tune_rf = _iid_grid(args.full, args.smoke)[0][0]
+        pac_block_p, row = _autotune_row(
+            n, parts, args.trials, args.devices, metric=args.metric,
+            rf=tune_rf, rebuild_model=args.rebuild_model)
         rows.append(row)
 
     if args.metric == "downtime":
@@ -318,7 +378,9 @@ def main(argv=None, *, strict: bool = True):
                       backend=args.backend, devices=args.devices,
                       smoke=args.smoke, pac_block_p=pac_block_p,
                       dupres_ticks=args.dupres_ticks,
-                      rebuild_steps=args.rebuild_steps)
+                      rebuild_steps=args.rebuild_steps,
+                      rebuild_model=args.rebuild_model,
+                      rebuild_ticks_per_gib=args.rebuild_ticks_per_gib)
         if not args.scenarios_only:
             for r in run_downtime(**common):
                 rows.append(r)
@@ -355,10 +417,13 @@ def main(argv=None, *, strict: bool = True):
                       f"p{r['p']:g},0,u_lark={r['u_lark']:.3e};"
                       f"u_maj={r['u_maj']:.3e};ratio={r['ratio']:.2f}")
     if args.json:
-        doc = {"meta": {"backend": args.backend, "trials": args.trials,
-                        "devices": args.devices, "full": args.full,
-                        "smoke": args.smoke, "scenarios": names,
-                        "metric": args.metric},
+        meta = {"backend": args.backend, "trials": args.trials,
+                "devices": args.devices, "full": args.full,
+                "smoke": args.smoke, "scenarios": names,
+                "metric": args.metric}
+        if args.metric == "downtime":
+            meta["rebuild_model"] = args.rebuild_model
+        doc = {"meta": meta,
                "rows": [_json_safe(r) for r in rows]}
         with open(args.json, "w") as fh:
             json.dump(doc, fh, indent=1, sort_keys=True, allow_nan=False)

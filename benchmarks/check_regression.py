@@ -4,7 +4,11 @@ Compares an ``availability_sweep.py --json`` dump row-by-row with a
 baseline produced by the same command and exits 1 when any shared row's
 gated columns (u_lark/u_maj for availability rows, pause_lark /
 pause_quorum for --metric downtime rows) drift more than --sigma combined
-standard errors (CI half-widths are 95% → se = ci/1.96).
+standard errors (CI half-widths are 95% → se = ci/1.96).  Downtime rows
+are additionally keyed by rebuild_model, so fixed and reconfig baselines
+never gate each other.  Loads are strict RFC JSON (``Infinity``/``NaN``
+tokens are rejected); a null gated value (a serialized non-finite) skips
+that column's gate with a note.
 
 The Monte Carlo draws counter-based randomness, so an unchanged tree
 reproduces the baseline *exactly*; drift within sigma allows for
@@ -19,6 +23,11 @@ semantic change that should come with a refreshed baseline:
     python benchmarks/availability_sweep.py --backend jax --trials 8 \
         --devices 8 --metric downtime --smoke --scenario all \
         --json benchmarks/BENCH_downtime.json
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python benchmarks/availability_sweep.py --backend jax --trials 8 \
+        --devices 8 --metric downtime --smoke --rebuild-model reconfig \
+        --scenario all --json benchmarks/BENCH_downtime_reconfig.json
 """
 from __future__ import annotations
 
@@ -45,7 +54,11 @@ def row_key(r: dict):
     if r.get("kind") == "iid":
         return ("iid", r["rf"], r["p"])
     if r.get("kind") in ("downtime", "downtime_scenario"):
-        return ("downtime", r.get("scenario", "iid"), r["rf"], r["p"])
+        # the two quorum-log baselines measure different things; rows from
+        # different rebuild models must never be compared (pre-roster
+        # baselines carry no rebuild_model field and are all "fixed")
+        return ("downtime", r.get("scenario", "iid"), r["rf"], r["p"],
+                r.get("rebuild_model", "fixed"))
     return None                      # autotune/meta rows are not gated
 
 
@@ -71,6 +84,12 @@ def compare(new: dict, base: dict, sigma: float):
             continue
         checked += 1
         for col, ci_col in row_cols(r):
+            if any(v is None for v in (r[col], r[ci_col],
+                                       b[col], b[ci_col])):
+                # a null is a serialized non-finite (e.g. a ratio over a
+                # zero denominator) — there is nothing to gate
+                notes.append(f"null {col} (gate skipped): {k}")
+                continue
             se = max(math.hypot(r[ci_col] / 1.96, b[ci_col] / 1.96),
                      _SE_FLOOR)
             drift = abs(r[col] - b[col])
@@ -84,6 +103,20 @@ def compare(new: dict, base: dict, sigma: float):
     return failures, notes, checked
 
 
+def load_rows(path: str) -> dict:
+    """Strict-RFC JSON load: `Infinity`/`NaN`/`-Infinity` tokens (which
+    python's json writes and reads happily, but jq and most parsers
+    reject) fail loudly — a current sweep serializes non-finite values as
+    null, so their presence means a stale or hand-edited dump."""
+    def _reject(token):
+        raise ValueError(
+            f"{path}: non-finite JSON value {token!r} is not RFC JSON — "
+            "regenerate the dump with availability_sweep.py --json "
+            "(non-finite ratios serialize as null)")
+    with open(path) as fh:
+        return json.load(fh, parse_constant=_reject)
+
+
 def main(argv=None, *, strict: bool = True) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("results", help="sweep --json output to check")
@@ -92,10 +125,8 @@ def main(argv=None, *, strict: bool = True) -> int:
                     help="allowed drift in combined standard errors")
     args = ap.parse_args(argv if argv is not None else sys.argv[1:])
 
-    with open(args.results) as fh:
-        new = json.load(fh)
-    with open(args.baseline) as fh:
-        base = json.load(fh)
+    new = load_rows(args.results)
+    base = load_rows(args.baseline)
     failures, notes, checked = compare(new, base, args.sigma)
     for s in notes:
         print(f"note: {s}")

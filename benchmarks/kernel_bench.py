@@ -88,6 +88,14 @@ def main(argv=None, *, strict: bool = True):
                                                     backend="jax"))
     print(f"kernel_downtime_batch_jax,r{R}n155,"
           f"{_time(dt_j, upj, fullj):.0f},trials=8xp4096")
+
+    # roster-aware variant (the reconfiguring quorum-log baseline carries
+    # per-partition replica-set ranks instead of the first-rf lanes)
+    roster = jnp.asarray(rng.integers(0, 155, (R, 3)), jnp.int32)
+    dt_r = jax.jit(lambda u, f, ro: downtime_eval_batch(
+        u, f, rf=3, n_real=155, backend="jax", roster=ro))
+    print(f"kernel_downtime_roster_jax,r{R}n155,"
+          f"{_time(dt_r, upj, fullj, roster):.0f},trials=8xp4096")
     if args.autotune:
         res = autotune_block_p(R, 155, rf=3, voters=5, n_real=155)
         print(f"kernel_pac_autotune,r{R}n155,0,"

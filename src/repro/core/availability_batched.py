@@ -406,25 +406,32 @@ def _make_step(xp, pac_fn, succ, *, n: int, P: int, horizon: int,
         restart_period=restart_period, wave_width=wave_width)
 
     def step(carry, s):
-        (now, up, ev_t, full, unl, unm, lpt, mpt, le, me, rr_t, rr_idx,
+        (now, up, ev_t, full, dnl, dnm, lpt, mpt, le, me, rr_t, rr_idx,
          lane0) = carry
         B = up.shape[0]               # local trials (a shard of the batch)
         t_clamp, dt, active, up, ev_t, rr_t, rr_idx = advance(
             now, up, ev_t, rr_t, rr_idx, lane0, s)
-        lpt = lpt + unl.astype(xp.float32) * dt
-        mpt = mpt + unm.astype(xp.float32) * dt
+        lpt = lpt + xp.sum(dnl, axis=1).astype(xp.float32) * dt
+        mpt = mpt + xp.sum(dnm, axis=1).astype(xp.float32) * dt
         now = t_clamp
 
         lark, maj, creps = pac_fn(up[:, succ].reshape(B * P, n),
                                   full.reshape(B * P, n))
         lark = lark.reshape(B, P)
+        maj = maj.reshape(B, P)
         full = xp.where(lark[:, :, None], creps.reshape(B, P, n), full)
-        new_unl = xp.sum(~lark, axis=1).astype(xp.int32)
-        new_unm = xp.sum(~maj.reshape(B, P), axis=1).astype(xp.int32)
-        le = le + xp.maximum(new_unl - unl, 0)
-        me = me + xp.maximum(new_unm - unm, 0)
+        # outage events are per-partition down-transitions (the downtime
+        # engine's lgo/qgo rule): a net per-trial count delta would cancel
+        # a partition recovering in the same step another fails and
+        # undercount, starving the min_events early-stop
+        le = le + xp.sum(~dnl & ~lark, axis=1).astype(xp.int32)
+        me = me + xp.sum(~dnm & ~maj, axis=1).astype(xp.int32)
+        dnl = ~lark
+        dnm = ~maj
+        new_unl = xp.sum(dnl, axis=1).astype(xp.int32)
+        new_unm = xp.sum(dnm, axis=1).astype(xp.int32)
         nodes_up = xp.sum(up, axis=1).astype(xp.int32)
-        carry = (now, up, ev_t, full, new_unl, new_unm, lpt, mpt, le, me,
+        carry = (now, up, ev_t, full, dnl, dnm, lpt, mpt, le, me,
                  rr_t, rr_idx, lane0)
         return carry, (t_clamp, new_unl, new_unm, nodes_up)
     return step
@@ -490,8 +497,8 @@ def simulate_availability_batched(
     zi = xp.zeros((B,), dtype=xp.int32)
     zf = xp.zeros((B,), dtype=xp.float32)
     carry = (zi, up0, ev0, full0,
-             xp.sum(~lark0.reshape(B, P), axis=1).astype(xp.int32),
-             xp.sum(~maj0.reshape(B, P), axis=1).astype(xp.int32),
+             ~lark0.reshape(B, P),                 # dnl (per-partition)
+             ~maj0.reshape(B, P),                  # dnm
              zf, zf, zi, zi, rr_t0, zi, lane0)
 
     if backend != "numpy":

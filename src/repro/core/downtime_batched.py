@@ -22,11 +22,35 @@ protocol state machines per step instead of an instantaneous average:
                and the new leader lacks the latest copy, an optional
                dup-res penalty of `dupres_ticks` commit-paused ticks is
                charged (the paper's one-round-trip duplicate resolution).
-  quorum-log   paused iff a majority of the f+1-copy replica set (the
-               first rf succession nodes) is down, OR a rebuild is in
-               progress: every replica loss starts a `rebuild_steps`-tick
-               countdown during which commits pause (log-based replica
-               catch-up under an equal storage budget).
+  quorum-log   paused iff a majority of the f+1-copy replica set is down,
+               OR a rebuild is in progress.  Two baseline models
+               (`rebuild_model`):
+
+               fixed     the replica set is the first rf succession
+                         nodes, statically; every replica loss starts a
+                         constant `rebuild_steps`-tick countdown during
+                         which commits pause (log-based replica catch-up
+                         under an equal storage budget).
+               reconfig  the replica set is a carried per-partition
+                         *roster* of succession ranks.  After a replica
+                         loss the protocol recruits the next up node in
+                         succession order (Spinnaker/VR-style
+                         reconfiguration onto live nodes), and the
+                         catch-up countdown is proportional to the
+                         partition's data size: `rebuild_ticks_per_gib`
+                         x a per-partition size in GiB drawn
+                         deterministically at t=0 (uniform in [1, 2),
+                         shared by all trials — one cluster dataset,
+                         many failure trajectories).  A loss during
+                         catch-up restarts the clock; a down roster
+                         member with no up replacement available keeps
+                         its seat until one appears (late recruitment
+                         does not restart the clock — the catch-up was
+                         already charged to the loss).  Sizes come from
+                         the same counter-hash family as the trajectory
+                         RNG under a dedicated salt, so the node-advance
+                         randomness stream is untouched and trajectories
+                         stay bit-identical to the fixed model's.
 
 Outputs per protocol: the mean commit-pause fraction (paused
 partition-ticks / total partition-ticks — with dupres_ticks=0 and
@@ -60,7 +84,39 @@ from .availability import t975
 from .availability_batched import (_default_max_steps, _engine_setup,
                                    _initial_full_state, _initial_node_state,
                                    _make_chunk_runner, _make_node_advance,
-                                   _run_chunk_numpy, _validate_batched_args)
+                                   _mix32, _run_chunk_numpy, _uniforms,
+                                   _validate_batched_args)
+
+_SIZE_SALT = 0x94D049BB
+
+REBUILD_MODELS = ("fixed", "reconfig")
+
+
+def partition_sizes_gib(seed: int, partitions: int) -> np.ndarray:
+    """Deterministic per-partition data sizes in GiB, uniform in [1, 2).
+
+    Drawn once at t=0 from the same counter-hash family as the trajectory
+    RNG but under a dedicated salt and partition-indexed lanes, so the
+    node-advance randomness stream is untouched (invariant 3 in
+    docs/ARCHITECTURE.md) and the reconfiguring baseline replays the
+    exact node trajectories of the fixed one.  Always computed host-side
+    in numpy — every backend receives the identical int32 tick table.
+    """
+    seed_mix = _mix32(np.asarray([(seed & 0xFFFFFFFF) ^ 0x6A09E667],
+                                 dtype=np.uint32), np)
+    u = _uniforms(seed_mix, np.asarray(0, dtype=np.uint32), _SIZE_SALT,
+                  np.zeros(1, dtype=np.uint32), partitions, np)[0]
+    return 1.0 + u.astype(np.float64)
+
+
+def _partition_rebuild_ticks(seed: int, partitions: int,
+                             ticks_per_gib: int) -> np.ndarray:
+    """(P,) int32 catch-up countdowns for the reconfiguring baseline:
+    floor(ticks_per_gib x size_gib).  Sizes are >= 1 GiB, so with
+    ticks_per_gib == rebuild_steps every reconfig catch-up is at least as
+    long as the fixed model's constant."""
+    return np.floor(ticks_per_gib *
+                    partition_sizes_gib(seed, partitions)).astype(np.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -86,6 +142,8 @@ class BatchedDowntimeResult:
     rebuild_steps: int
     stopped_early: bool
     devices: int = 1
+    rebuild_model: str = "fixed"
+    rebuild_ticks_per_gib: int = 0   # reconfig only; 0 under "fixed"
     hist_edges: np.ndarray = field(repr=False, default=None)   # (nbins,)
     hist_lark: np.ndarray = field(repr=False, default=None)    # (nbins,)
     hist_quorum: np.ndarray = field(repr=False, default=None)
@@ -105,18 +163,90 @@ class BatchedDowntimeResult:
 # The per-event step.
 # ---------------------------------------------------------------------------
 
+def _hist_add(xp, hist_bins: int, hist, mask, d):
+    """Scatter completed pause durations d (B, P) where mask into
+    power-of-two buckets (bucket k counts [2^k, 2^(k+1)), top bucket
+    open-ended) — comparisons only, so every backend bins identically.
+    Duration-0 runs (opened and closed at the same tick by coincident
+    events) are not pauses and are dropped, never mis-binned into the
+    [1, 2) bucket."""
+    mask = mask & (d > 0)
+    b = xp.zeros(d.shape, dtype=xp.int32)
+    for k in range(1, hist_bins):
+        b = b + (d >= (1 << k)).astype(xp.int32)
+    oh = (b[:, :, None] == xp.arange(hist_bins, dtype=xp.int32)
+          [None, None, :]) & mask[:, :, None]
+    return hist + xp.sum(oh, axis=1).astype(xp.int32)
+
+
 def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
-               dupres_ticks: int, rebuild_steps: int, hist_bins: int):
+               dupres_ticks: int, rebuild_steps: int, hist_bins: int,
+               rebuild_model: str = "fixed", rebuild_ticks=None):
     def hist_add(hist, mask, d):
-        """Scatter completed pause durations d (B, P) where mask into
-        power-of-two buckets — comparisons only, so every backend bins
-        identically."""
-        b = xp.zeros(d.shape, dtype=xp.int32)
-        for k in range(1, hist_bins):
-            b = b + (d >= (1 << k)).astype(xp.int32)
-        oh = (b[:, :, None] == xp.arange(hist_bins, dtype=xp.int32)
-              [None, None, :]) & mask[:, :, None]
-        return hist + xp.sum(oh, axis=1).astype(xp.int32)
+        return _hist_add(xp, hist_bins, hist, mask, d)
+
+    # -- shared protocol blocks.  Both rebuild models run these verbatim
+    # (the models differ only in how the replica set and the rebuild
+    # countdown are derived), so a retune lands in both state machines at
+    # once — the LARK-bit-identity-across-models and fixed-model-baseline
+    # pins in tests/test_downtime_batched.py depend on that.
+
+    def interval_pause(now, dt, dt_i, ldn, qrep, qreb, qdn, qt0, lpt, qpt,
+                       qhist):
+        """Pause time over [now, t_clamp) from interval-start state.
+        LARK matches the availability engine's lpt arithmetic exactly
+        (count * dt in float32); quorum adds the rebuild overlap —
+        min(remaining, dt) extra paused ticks per majority-up partition —
+        and a rebuild expiring mid-interval ends a quorum pause run
+        between events (PAC state can only flip at events, so LARK runs
+        never end mid-interval)."""
+        lpt = lpt + xp.sum(ldn, axis=1).astype(xp.float32) * dt
+        qmaj_prev = 2 * xp.sum(qrep, axis=2) > rf             # (B, P)
+        qpt = qpt + xp.sum(~qmaj_prev, axis=1).astype(xp.float32) * dt
+        qpt = qpt + xp.sum(xp.where(
+            qmaj_prev, xp.minimum(qreb, dt_i[:, None]), 0)
+            .astype(xp.float32), axis=1)
+        ends_mid = qdn & qmaj_prev & (qreb > 0) & (qreb <= dt_i[:, None])
+        qhist = hist_add(qhist, ends_mid, (now[:, None] + qreb) - qt0)
+        qdn = qdn & ~ends_mid
+        qreb = xp.maximum(qreb - dt_i[:, None], 0)
+        return lpt, qpt, qreb, qdn, qhist
+
+    def lark_transitions(t_clamp, lark, ldr, lfull, ldn, lt0, leader, lpt,
+                         lev, lhist):
+        """Close LARK runs that came back, open new ones, and charge the
+        dup-res penalty: available partition, new acting leader, and the
+        leader lacks the latest copy (pre-refresh full mask) -> one round
+        trip of paused commits, charged instantaneously.  The baseline
+        only tracks the leader *while available* (no commits flow during
+        a pause), so a leadership move inside an outage is still charged
+        when service resumes under the new stale leader."""
+        lhist = hist_add(lhist, ldn & lark, t_clamp[:, None] - lt0)
+        lgo = ~ldn & ~lark
+        lt0 = xp.where(lgo, t_clamp[:, None], lt0)
+        lev = lev + xp.sum(lgo, axis=1).astype(xp.int32)
+        ldn = ~lark
+        if dupres_ticks > 0:
+            pen = (ldr != leader) & lark & ~lfull
+            npen = xp.sum(pen, axis=1).astype(xp.int32)
+            lpt = lpt + npen.astype(xp.float32) * xp.float32(dupres_ticks)
+            lev = lev + npen
+            lhist = hist_add(lhist, pen,
+                             xp.full(pen.shape, dupres_ticks,
+                                     dtype=xp.int32))
+        leader = xp.where(lark, ldr, leader)
+        return ldn, lt0, leader, lpt, lev, lhist
+
+    def quorum_transitions(t_clamp, qmaj, qreb, qdn, qt0, qev, qhist):
+        """Close quorum runs whose pause condition cleared, open new ones
+        (a pause-start is one counted event)."""
+        qpause = ~qmaj | (qreb > 0)
+        qhist = hist_add(qhist, qdn & ~qpause, t_clamp[:, None] - qt0)
+        qgo = ~qdn & qpause
+        qt0 = xp.where(qgo, t_clamp[:, None], qt0)
+        qev = qev + xp.sum(qgo, axis=1).astype(xp.int32)
+        qdn = qpause
+        return qdn, qt0, qev, qhist
 
     def step(carry, s):
         (now, up, ev_t, full, rr_t, rr_idx, lane0, ldn, lt0, qrep, qreb,
@@ -125,25 +255,8 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
         t_clamp, dt, active, up, ev_t, rr_t, rr_idx = advance(
             now, up, ev_t, rr_t, rr_idx, lane0, s)
         dt_i = t_clamp - now                                  # (B,) int32
-
-        # -- pause time over [now, t_clamp), from interval-start state.
-        # LARK matches the availability engine's lpt arithmetic exactly
-        # (count * dt in float32); quorum adds the rebuild overlap —
-        # min(remaining, dt) extra paused ticks per majority-up partition.
-        lpt = lpt + xp.sum(ldn, axis=1).astype(xp.float32) * dt
-        qmaj_prev = 2 * xp.sum(qrep, axis=2) > rf             # (B, P)
-        qpt = qpt + xp.sum(~qmaj_prev, axis=1).astype(xp.float32) * dt
-        qpt = qpt + xp.sum(xp.where(
-            qmaj_prev, xp.minimum(qreb, dt_i[:, None]), 0)
-            .astype(xp.float32), axis=1)
-
-        # -- a rebuild expiring mid-interval ends a quorum pause run
-        # between events (PAC state can only flip at events, so LARK runs
-        # never end mid-interval)
-        ends_mid = qdn & qmaj_prev & (qreb > 0) & (qreb <= dt_i[:, None])
-        qhist = hist_add(qhist, ends_mid, (now[:, None] + qreb) - qt0)
-        qdn = qdn & ~ends_mid
-        qreb = xp.maximum(qreb - dt_i[:, None], 0)
+        lpt, qpt, qreb, qdn, qhist = interval_pause(
+            now, dt, dt_i, ldn, qrep, qreb, qdn, qt0, lpt, qpt, qhist)
         now = t_clamp
 
         # -- re-evaluate both protocols on the post-event cluster state
@@ -157,41 +270,17 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
         lfull = lfull.reshape(B, P)
         full = xp.where(lark[:, :, None], creps.reshape(B, P, n), full)
 
-        # -- LARK transitions: close runs that came back, open new ones
-        lhist = hist_add(lhist, ldn & lark, t_clamp[:, None] - lt0)
-        lgo = ~ldn & ~lark
-        lt0 = xp.where(lgo, t_clamp[:, None], lt0)
-        lev = lev + xp.sum(lgo, axis=1).astype(xp.int32)
-        ldn = ~lark
+        ldn, lt0, leader, lpt, lev, lhist = lark_transitions(
+            t_clamp, lark, ldr, lfull, ldn, lt0, leader, lpt, lev, lhist)
 
-        # -- dup-res penalty: available partition, new acting leader, and
-        # the leader lacks the latest copy (pre-refresh full mask) ->
-        # one round trip of paused commits, charged instantaneously.  The
-        # baseline only tracks the leader *while available* (no commits
-        # flow during a pause), so a leadership move inside an outage is
-        # still charged when service resumes under the new stale leader.
-        if dupres_ticks > 0:
-            pen = (ldr != leader) & lark & ~lfull
-            npen = xp.sum(pen, axis=1).astype(xp.int32)
-            lpt = lpt + npen.astype(xp.float32) * xp.float32(dupres_ticks)
-            lev = lev + npen
-            lhist = hist_add(lhist, pen,
-                             xp.full(pen.shape, dupres_ticks,
-                                     dtype=xp.int32))
-        leader = xp.where(lark, ldr, leader)
-
-        # -- quorum transitions: any replica loss (a replica-set lane
-        # going up -> down, even if masked by a simultaneous recovery of
-        # another lane) (re)starts the rebuild
+        # -- any replica loss (a replica-set lane going up -> down, even
+        # if masked by a simultaneous recovery of another lane)
+        # (re)starts the constant rebuild countdown
         if rebuild_steps > 0:
             loss = xp.any(qrep & ~rep_new, axis=2)
             qreb = xp.where(loss, xp.int32(rebuild_steps), qreb)
-        qpause = ~qmaj | (qreb > 0)
-        qhist = hist_add(qhist, qdn & ~qpause, t_clamp[:, None] - qt0)
-        qgo = ~qdn & qpause
-        qt0 = xp.where(qgo, t_clamp[:, None], qt0)
-        qev = qev + xp.sum(qgo, axis=1).astype(xp.int32)
-        qdn = qpause
+        qdn, qt0, qev, qhist = quorum_transitions(
+            t_clamp, qmaj, qreb, qdn, qt0, qev, qhist)
         qrep = rep_new
 
         carry = (now, up, ev_t, full, rr_t, rr_idx, lane0, ldn, lt0,
@@ -201,7 +290,87 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
                xp.sum(qdn, axis=1).astype(xp.int32),
                xp.sum(up, axis=1).astype(xp.int32))
         return carry, out
-    return step
+
+    lanes_n = xp.arange(n, dtype=xp.int32)
+
+    def step_reconfig(carry, s):
+        """The reconfiguring baseline: identical to `step` (same shared
+        protocol blocks) except the quorum-log replica set is the carried
+        per-partition roster of succession ranks (reconfigured onto live
+        nodes after losses) and the catch-up countdown is the
+        per-partition `rebuild_ticks` table.  LARK's code path is
+        untouched, so LARK outputs are bit-identical across rebuild
+        models."""
+        (now, up, ev_t, full, rr_t, rr_idx, lane0, ldn, lt0, qrep, qreb,
+         qdn, qt0, leader, lpt, qpt, lev, qev, lhist, qhist,
+         roster) = carry
+        B = up.shape[0]               # local trials (a shard of the batch)
+        t_clamp, dt, active, up, ev_t, rr_t, rr_idx = advance(
+            now, up, ev_t, rr_t, rr_idx, lane0, s)
+        dt_i = t_clamp - now                                  # (B,) int32
+        lpt, qpt, qreb, qdn, qhist = interval_pause(
+            now, dt, dt_i, ldn, qrep, qreb, qdn, qt0, lpt, qpt, qhist)
+        now = t_clamp
+
+        # -- post-event cluster state; fresh losses are roster members
+        # that were up at interval start and are down now
+        up_succ = up[:, succ]                                 # (B, P, n)
+        rup = xp.take_along_axis(up_succ, roster, axis=2)     # (B, P, rf)
+        loss_any = xp.any(qrep & ~rup, axis=2)
+
+        # -- recruit: every down roster member is replaced by the first
+        # up node in succession order not already in the roster (if none
+        # is up, the seat is kept until a later step finds one)
+        in_roster = xp.zeros((B, P, n), dtype=bool)
+        for j in range(rf):
+            in_roster = in_roster | (lanes_n[None, None, :]
+                                     == roster[:, :, j, None])
+        slot = xp.arange(rf, dtype=xp.int32)
+        for j in range(rf):
+            need = ~rup[:, :, j]
+            cand = up_succ & ~in_roster
+            repl = xp.min(xp.where(cand, lanes_n[None, None, :],
+                                   xp.int32(n)), axis=2)
+            take = need & (repl < n)
+            old_j = roster[:, :, j]
+            new_j = xp.where(take, repl, old_j)
+            in_roster = in_roster & ~(take[:, :, None] &
+                                      (lanes_n[None, None, :]
+                                       == old_j[:, :, None]))
+            in_roster = in_roster | (take[:, :, None] &
+                                     (lanes_n[None, None, :]
+                                      == new_j[:, :, None]))
+            roster = xp.where((slot == j)[None, None, :],
+                              new_j[:, :, None], roster)
+
+        # -- each fresh loss (re)starts the data-sized catch-up countdown
+        qreb = xp.where(loss_any, rebuild_ticks[None, :], qreb)
+
+        # -- roster-aware per-step evaluation on the reconfigured roster
+        lark, qmaj, ldr, lfull, _nrep, creps = dt_fn(
+            up_succ.reshape(B * P, n), full.reshape(B * P, n),
+            roster.reshape(B * P, rf))
+        lark = lark.reshape(B, P)
+        qmaj = qmaj.reshape(B, P)
+        ldr = ldr.reshape(B, P)
+        lfull = lfull.reshape(B, P)
+        full = xp.where(lark[:, :, None], creps.reshape(B, P, n), full)
+
+        ldn, lt0, leader, lpt, lev, lhist = lark_transitions(
+            t_clamp, lark, ldr, lfull, ldn, lt0, leader, lpt, lev, lhist)
+        qdn, qt0, qev, qhist = quorum_transitions(
+            t_clamp, qmaj, qreb, qdn, qt0, qev, qhist)
+        qrep = xp.take_along_axis(up_succ, roster, axis=2)
+
+        carry = (now, up, ev_t, full, rr_t, rr_idx, lane0, ldn, lt0,
+                 qrep, qreb, qdn, qt0, leader, lpt, qpt, lev, qev,
+                 lhist, qhist, roster)
+        out = (t_clamp, xp.sum(ldn, axis=1).astype(xp.int32),
+               xp.sum(qdn, axis=1).astype(xp.int32),
+               xp.sum(up, axis=1).astype(xp.int32))
+        return carry, out
+
+    return step_reconfig if rebuild_model == "reconfig" else step
 
 
 # ---------------------------------------------------------------------------
@@ -216,6 +385,7 @@ def simulate_downtime_batched(
         min_events: int = 200, seed: int = 0, backend: str = "jax",
         dupres_ticks: int = 1, rebuild_steps: int = 100,
         hist_bins: int = 16,
+        rebuild_model: str = "fixed", rebuild_ticks_per_gib: int = 100,
         pair_fail_prob: float = 0.0, restart_period: int = 0,
         wave_width: int = 1, p_node=None, downtime_node=None,
         devices: int = 1, pac_block_p: Optional[int] = None,
@@ -233,9 +403,21 @@ def simulate_downtime_batched(
                    instantaneous, so a cost comparable to the horizon can
                    push the raw pause integral past wall time; reported
                    fractions are clipped to [0, 1].
-    rebuild_steps  quorum-log rebuild countdown after a replica loss
+    rebuild_model  "fixed" (default): static first-rf replica set with a
+                   constant rebuild countdown — the pre-roster baseline,
+                   bit-identical to it.  "reconfig": replica-set
+                   reconfiguration onto live nodes with a data-sized
+                   catch-up (see the module docstring).
+    rebuild_steps  fixed-model rebuild countdown after a replica loss
                    (0 disables; then quorum pause == plain
                    majority-of-replica-set unavailability exactly).
+                   Ignored under rebuild_model="reconfig".
+    rebuild_ticks_per_gib
+                   reconfig-model catch-up cost per GiB of partition
+                   data; per-partition sizes are uniform in [1, 2) GiB
+                   (partition_sizes_gib), so countdowns span
+                   [ticks_per_gib, 2*ticks_per_gib).  Ignored under
+                   rebuild_model="fixed".
     hist_bins      power-of-two duration buckets ([1,2), [2,4), ...,
                    top bucket open-ended).
 
@@ -248,15 +430,22 @@ def simulate_downtime_batched(
         raise ValueError("dupres_ticks and rebuild_steps must be >= 0")
     if not 2 <= hist_bins <= 30:
         raise ValueError("hist_bins must be in [2, 30]")
+    if rebuild_model not in REBUILD_MODELS:
+        raise ValueError(f"rebuild_model must be one of {REBUILD_MODELS}")
+    if rebuild_ticks_per_gib < 0:
+        raise ValueError("rebuild_ticks_per_gib must be >= 0")
+    reconfig = rebuild_model == "reconfig"
     shard = use_shard_map if use_shard_map is not None else devices > 1
     B, P, horizon = trials, partitions, max_ticks
     (xp, succ, seed_mix, geo_masks, geo_tables, dt_vec, pair_perm,
      p_arr, dt_arr) = _engine_setup(
         backend, n=n, partitions=P, seed=seed, p=p, downtime=downtime,
         p_node=p_node, downtime_node=downtime_node, max_ticks=max_ticks)
-    dt_fn = lambda u, f: downtime_eval_batch(u, f, rf=rf, n_real=n,
-                                             backend=backend,
-                                             block_p=pac_block_p)
+    dt_fn = lambda u, f, roster=None: downtime_eval_batch(
+        u, f, rf=rf, n_real=n, backend=backend, block_p=pac_block_p,
+        roster=roster)
+    rebuild_ticks = xp.asarray(_partition_rebuild_ticks(
+        seed, P, rebuild_ticks_per_gib)) if reconfig else None
     advance = _make_node_advance(
         xp, n=n, horizon=horizon, dt_vec=dt_vec, geo_masks=geo_masks,
         geo_tables=geo_tables, seed_mix=seed_mix,
@@ -264,10 +453,14 @@ def simulate_downtime_batched(
         restart_period=restart_period, wave_width=wave_width)
     step = _make_step(xp, dt_fn, advance, succ, n=n, P=P, rf=rf,
                       dupres_ticks=dupres_ticks,
-                      rebuild_steps=rebuild_steps, hist_bins=hist_bins)
+                      rebuild_steps=rebuild_steps, hist_bins=hist_bins,
+                      rebuild_model=rebuild_model,
+                      rebuild_ticks=rebuild_ticks)
 
     # initial state: everyone up, roster replicas full, both protocols
-    # evaluated once at t=0 (identical to the availability engine's init)
+    # evaluated once at t=0 (identical to the availability engine's init;
+    # the t=0 roster is [0..rf-1] per partition, so the non-roster init
+    # evaluation is exact for both rebuild models)
     lane0, up0, ev0, rr_t0 = _initial_node_state(
         xp, B=B, n=n, seed_mix=seed_mix, geo_masks=geo_masks,
         geo_tables=geo_tables, restart_period=restart_period,
@@ -286,6 +479,12 @@ def simulate_downtime_batched(
              ~qmaj0.reshape(B, P), zbp,                # qdn, qt0
              ldr0.reshape(B, P).astype(xp.int32),      # leader
              zf, zf, zi, zi, zh, zh)
+    if reconfig:
+        roster0 = xp.broadcast_to(
+            xp.arange(rf, dtype=xp.int32)[None, None, :], (B, P, rf))
+        if backend == "numpy":
+            roster0 = np.ascontiguousarray(roster0)
+        carry = carry + (roster0,)
 
     if backend != "numpy":
         import jax.numpy as jnp
@@ -321,7 +520,7 @@ def simulate_downtime_batched(
         qev_tot += int(np.asarray(carry[17]).sum())
         lhist_tot += np.asarray(carry[18], dtype=np.int64).sum(axis=0)
         qhist_tot += np.asarray(carry[19], dtype=np.int64).sum(axis=0)
-        carry = carry[:14] + (zf, zf, zi, zi, zh, zh)
+        carry = carry[:14] + (zf, zf, zi, zi, zh, zh) + carry[20:]
         if (now >= horizon).all():
             break
         # pooled CI early stop, mirroring the availability engine's rule
@@ -368,6 +567,8 @@ def simulate_downtime_batched(
                       1.96 * math.sqrt(max(u_q * (1 - u_q), 1e-30) / pt)),
         dupres_ticks=dupres_ticks, rebuild_steps=rebuild_steps,
         stopped_early=stopped, devices=devices,
+        rebuild_model=rebuild_model,
+        rebuild_ticks_per_gib=rebuild_ticks_per_gib if reconfig else 0,
         hist_edges=np.asarray([1 << k for k in range(hist_bins)],
                               dtype=np.int64),
         hist_lark=lhist_tot, hist_quorum=qhist_tot,

@@ -160,9 +160,17 @@ class AutotuneResult:
 _AUTOTUNE_CACHE: dict = {}
 
 
+#: kernels the block_p autotuner can race — the §5.1 PAC kernel and the
+#: §6 downtime kernel (plus its roster-carrying reconfig variant); all
+#: three share the (R, n_pad) tile contract, so candidate sets transfer
+AUTOTUNE_KERNELS = ("pac", "downtime", "downtime_roster")
+
+
 def _measure_pac_block(R: int, n_pad: int, bp: int, *, rf: int, voters: int,
-                       n_real: int, iters: int) -> float:
-    """Median µs/call of the Pallas PAC kernel at one block size, on a
+                       n_real: int, iters: int,
+                       kernel: str = "pac") -> float:
+    """Median µs/call of one Pallas Monte Carlo kernel (`kernel` selects
+    pac_eval / downtime_eval / its roster variant) at one block size, on a
     deterministic synthetic tile (counter-hash density pattern, no RNG
     state)."""
     import time
@@ -173,14 +181,32 @@ def _measure_pac_block(R: int, n_pad: int, bp: int, *, rf: int, voters: int,
            + jnp.arange(n_lanes, dtype=jnp.uint32)[None, :])
     up = (idx * jnp.uint32(2654435761) % jnp.uint32(97)) < 90   # ~93% up,
     full = (idx * jnp.uint32(40503) % jnp.uint32(89)) < 30      # fixed pattern
-    fn = jax.jit(functools.partial(
-        pk.pac_eval, rf=rf, voters=voters, n_real=n_real, block_p=bp,
-        interpret=jax.default_backend() != "tpu"))
-    jax.block_until_ready(fn(up, full))        # compile + warmup
+    interpret = jax.default_backend() != "tpu"
+    if kernel == "pac":
+        fn = jax.jit(functools.partial(
+            pk.pac_eval, rf=rf, voters=voters, n_real=n_real, block_p=bp,
+            interpret=interpret))
+        args = (up, full)
+    elif kernel in ("downtime", "downtime_roster"):
+        kw = dict(rf=rf, n_real=n_real, block_p=bp, interpret=interpret)
+        if kernel == "downtime_roster":
+            # identity roster, rank axis lane-padded with the sentinel the
+            # engine's pallas path uses (ops.downtime_eval_batch)
+            rf_pad = rf + (-rf % 128)
+            ranks = jnp.arange(rf_pad, dtype=jnp.int32)[None, :]
+            kw["roster"] = jnp.broadcast_to(
+                jnp.where(ranks < rf, ranks, jnp.int32(n_lanes)),
+                (R, rf_pad))
+        fn = jax.jit(functools.partial(pk.downtime_eval, **kw))
+        args = (up, full)
+    else:
+        raise ValueError(f"unknown autotune kernel {kernel!r}; expected "
+                         f"one of {AUTOTUNE_KERNELS}")
+    jax.block_until_ready(fn(*args))           # compile + warmup
     times = []
     for _ in range(iters):
         t0 = time.perf_counter()
-        jax.block_until_ready(fn(up, full))
+        jax.block_until_ready(fn(*args))
         times.append((time.perf_counter() - t0) * 1e6)
     times.sort()
     return times[len(times) // 2]
@@ -188,18 +214,27 @@ def _measure_pac_block(R: int, n_pad: int, bp: int, *, rf: int, voters: int,
 
 def autotune_block_p(R: int, n_pad: int, *, rf: int, voters: int,
                      n_real: int, candidates=None, iters: int = 9,
-                     measure=None, force: bool = False) -> AutotuneResult:
-    """Pick the fastest Pallas PAC block_p for an (R, n_pad) tile.
+                     measure=None, force: bool = False,
+                     kernel: str = "pac") -> AutotuneResult:
+    """Pick the fastest Pallas block_p for an (R, n_pad) Monte Carlo tile.
 
-    Deterministic by construction: the candidate set is a pure function of
-    the shape, each candidate's time is a median over `iters` calls, ties
-    break toward the smaller block, and the choice is cached per
-    (shape, params, candidates) so every later call in the process returns
-    the same answer.  Off-TPU the Pallas kernel runs in interpret mode,
-    where timings measure the interpreter rather than the kernel — so
-    without `force` (or an injected `measure` fn, used by tests) the tuner
-    falls back to the static heuristic instead of publishing noise.
+    `kernel` selects which kernel is raced: "pac" (§5.1 availability),
+    "downtime" (§6 commit-pause), or "downtime_roster" (the reconfiguring
+    baseline's roster-carrying variant) — the sweep threads its --metric /
+    --rebuild-model so the tuner times the kernel the grid will actually
+    run.  Deterministic by construction: the candidate set is a pure
+    function of the shape, each candidate's time is a median over `iters`
+    calls, ties break toward the smaller block, and the choice is cached
+    per (shape, params, kernel, candidates) so every later call in the
+    process returns the same answer.  Off-TPU the Pallas kernel runs in
+    interpret mode, where timings measure the interpreter rather than the
+    kernel — so without `force` (or an injected `measure` fn, used by
+    tests) the tuner falls back to the static heuristic instead of
+    publishing noise.
     """
+    if kernel not in AUTOTUNE_KERNELS:
+        raise ValueError(f"unknown autotune kernel {kernel!r}; expected "
+                         f"one of {AUTOTUNE_KERNELS}")
     cands = tuple(candidates) if candidates is not None \
         else block_p_candidates(R, n_pad)
     if not cands:
@@ -210,7 +245,7 @@ def autotune_block_p(R: int, n_pad: int, *, rf: int, voters: int,
     # injected-measure calls (tests) bypass the cache: a deterministic fake
     # is repeatable on its own, and caching across *different* fakes with
     # the same shape would return stale choices
-    key = (R, n_pad, rf, voters, n_real, cands, force)
+    key = (R, n_pad, rf, voters, n_real, cands, force, kernel)
     if measure is None and key in _AUTOTUNE_CACHE:
         return _AUTOTUNE_CACHE[key]
     if measure is None:
@@ -221,7 +256,7 @@ def autotune_block_p(R: int, n_pad: int, *, rf: int, voters: int,
             return res
         measure = functools.partial(_measure_pac_block, rf=rf,
                                     voters=voters, n_real=n_real,
-                                    iters=iters)
+                                    iters=iters, kernel=kernel)
         timings = {bp: measure(R, n_pad, bp) for bp in cands}
         best = min(sorted(timings), key=lambda bp: (timings[bp], bp))
         res = AutotuneResult(block_p=best, timings_us=timings,
@@ -272,7 +307,7 @@ def pac_eval_batch(up_succ, full_succ, *, rf: int, voters: int, n_real: int,
 
 def downtime_eval_batch(up_succ, full_succ, *, rf: int, n_real: int,
                         backend: str = "jax",
-                        block_p: Optional[int] = None):
+                        block_p: Optional[int] = None, roster=None):
     """Dispatch the §6 downtime engine's per-step evaluation of a
     (R, n_pad) rank-space tile to the chosen backend.
 
@@ -283,6 +318,12 @@ def downtime_eval_batch(up_succ, full_succ, *, rf: int, n_real: int,
     penalty).  Returns (lark, qmaj, leader, leader_full, nrep, creps);
     see pac_np.downtime_eval_rank_np for per-output semantics.
 
+    roster (R, rf) int32, optional: the reconfiguring baseline's carried
+    replica-set ranks — qmaj/nrep are then evaluated over those ranks
+    instead of the implicit first rf lanes (`--rebuild-model reconfig`).
+    Passing the identity roster [0..rf-1] reproduces the static baseline
+    bit for bit.
+
     The same invariants as pac_eval_batch hold: all three backends are
     bit-identical (pure comparisons/cumsums, no float math), and block_p
     (pallas) only tiles the rows — any autotune_block_p choice for an
@@ -291,10 +332,10 @@ def downtime_eval_batch(up_succ, full_succ, *, rf: int, n_real: int,
     """
     if backend == "numpy":
         return downtime_eval_rank_np(up_succ, full_succ, rf=rf,
-                                     n_real=n_real)
+                                     n_real=n_real, roster=roster)
     if backend == "jax":
         return ref.downtime_eval_rank_ref(up_succ, full_succ, rf=rf,
-                                          n_real=n_real)
+                                          n_real=n_real, roster=roster)
     if backend == "pallas":
         from . import pac_eval as pk
         R, n_pad = up_succ.shape
@@ -302,10 +343,19 @@ def downtime_eval_batch(up_succ, full_succ, *, rf: int, n_real: int,
         if lanes:
             up_succ = jnp.pad(up_succ, ((0, 0), (0, lanes)))
             full_succ = jnp.pad(full_succ, ((0, 0), (0, lanes)))
+        if roster is not None:
+            # pad the rank axis to a lane multiple; the pad value is the
+            # tile width, a rank no lane iota ever matches (never read:
+            # the kernel only visits the first rf roster columns)
+            rpad = -roster.shape[1] % 128
+            roster = jnp.pad(roster.astype(jnp.int32),
+                             ((0, 0), (0, rpad)),
+                             constant_values=n_pad + lanes)
         interpret = jax.default_backend() != "tpu"
         lark, qmaj, leader, lfull, nrep, creps = pk.downtime_eval(
             up_succ, full_succ, rf=rf, n_real=n_real,
-            block_p=block_p or _pallas_block_p(R), interpret=interpret)
+            block_p=block_p or _pallas_block_p(R), interpret=interpret,
+            roster=roster)
         return lark, qmaj, leader, lfull, nrep, creps[:, :n_pad]
     raise ValueError(f"unknown PAC backend {backend!r}; "
                      f"expected one of {PAC_BACKENDS}")

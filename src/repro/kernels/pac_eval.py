@@ -116,10 +116,58 @@ def _downtime_kernel(up_ref, full_ref, valid_ref, lark_ref, qmaj_ref,
     creps_ref[...] = (up > 0) & (rank <= rf)
 
 
+def _downtime_roster_kernel(up_ref, full_ref, valid_ref, roster_ref,
+                            lark_ref, qmaj_ref, leader_ref, lfull_ref,
+                            nrep_ref, creps_ref, *, rf: int, n_real: int):
+    """Roster-aware variant of _downtime_kernel for the §6 reconfiguring
+    quorum-log baseline: the replica set is the given per-row roster of
+    succession ranks rather than the implicit first rf lanes.  The gather
+    up[roster[j]] is a one-hot compare-and-sum per roster slot (rf is
+    small and static), so the kernel stays pure VPU integer work and
+    bit-identical to the numpy/jnp take_along_axis implementations."""
+    up = up_ref[...].astype(jnp.int32)            # (bp, n)
+    full = full_ref[...].astype(jnp.int32)
+    valid = valid_ref[...].astype(jnp.int32)
+    roster = roster_ref[...]                      # (bp, rf_pad) int32
+    up = up * valid
+    full = full * valid
+
+    lanes = jax.lax.broadcasted_iota(jnp.int32, up.shape, 1)
+    n_up = jnp.sum(up, axis=1, keepdims=True)
+    majority = (2 * n_up > n_real).astype(jnp.int32)
+    roster_up = jnp.sum(jnp.where(lanes < rf, up, 0), axis=1, keepdims=True)
+    any_roster = (roster_up > 0).astype(jnp.int32)
+    full_up = (jnp.sum(full * up, axis=1, keepdims=True) > 0).astype(jnp.int32)
+    lark_ref[...] = ((majority * any_roster * full_up)[:, 0] > 0)
+
+    # replica-set up-count over the carried roster ranks (only the first
+    # rf roster columns are real; the rest is lane padding, never read)
+    nrep = jnp.zeros(up.shape[:1], dtype=jnp.int32)
+    for j in range(rf):
+        member = roster[:, j:j + 1]               # (bp, 1)
+        nrep = nrep + jnp.sum(jnp.where(lanes == member, up, 0), axis=1)
+    qmaj_ref[...] = (2 * nrep > rf)
+    nrep_ref[...] = nrep
+
+    leader = jnp.min(jnp.where(up > 0, lanes, up.shape[1]), axis=1)
+    leader = jnp.minimum(leader, n_real).astype(jnp.int32)
+    leader_ref[...] = leader
+    lfull_ref[...] = (jnp.sum(
+        jnp.where(lanes == leader[:, None], full * up, 0), axis=1) > 0)
+
+    rank = jnp.cumsum(up, axis=1)
+    creps_ref[...] = (up > 0) & (rank <= rf)
+
+
 def downtime_eval(up_succ, full_succ, *, rf: int, n_real: int,
-                  block_p: int = 256, interpret: bool = False):
+                  block_p: int = 256, interpret: bool = False,
+                  roster=None):
     """up_succ/full_succ: (P, n_pad) bool.  Returns (lark, qmaj, leader,
-    leader_full, nrep, creps) — see pac_np.downtime_eval_rank_np."""
+    leader_full, nrep, creps) — see pac_np.downtime_eval_rank_np.
+
+    roster (P, rf_pad) int32, optional: per-row replica-set ranks for the
+    reconfiguring baseline (columns >= rf are lane padding).  qmaj/nrep
+    are then evaluated over those ranks instead of the first rf lanes."""
     P, n_pad = up_succ.shape
     block_p = min(block_p, P)
     if P % block_p:
@@ -129,14 +177,23 @@ def downtime_eval(up_succ, full_succ, *, rf: int, n_real: int,
     valid = (jnp.arange(n_pad) < n_real)[None, :].astype(jnp.bool_)
     valid = jnp.broadcast_to(valid, (block_p, n_pad))
 
-    kernel = functools.partial(_downtime_kernel, rf=rf, n_real=n_real)
     row_spec = pl.BlockSpec((block_p,), lambda i: (i,))
     tile_spec = pl.BlockSpec((block_p, n_pad), lambda i: (i, 0))
+    in_specs = [tile_spec, tile_spec,
+                pl.BlockSpec((block_p, n_pad), lambda i: (0, 0))]
+    operands = [up_succ, full_succ, valid]
+    if roster is None:
+        kernel = functools.partial(_downtime_kernel, rf=rf, n_real=n_real)
+    else:
+        kernel = functools.partial(_downtime_roster_kernel, rf=rf,
+                                   n_real=n_real)
+        in_specs.append(pl.BlockSpec((block_p, roster.shape[1]),
+                                     lambda i: (i, 0)))
+        operands.append(roster)
     return pl.pallas_call(
         kernel,
         grid=(P // block_p,),
-        in_specs=[tile_spec, tile_spec,
-                  pl.BlockSpec((block_p, n_pad), lambda i: (0, 0))],
+        in_specs=in_specs,
         out_specs=[row_spec, row_spec, row_spec, row_spec, row_spec,
                    tile_spec],
         out_shape=[
@@ -148,4 +205,4 @@ def downtime_eval(up_succ, full_succ, *, rf: int, n_real: int,
             jax.ShapeDtypeStruct((P, n_pad), jnp.bool_),
         ],
         interpret=interpret,
-    )(up_succ, full_succ, valid)
+    )(*operands)

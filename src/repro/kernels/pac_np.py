@@ -32,19 +32,28 @@ def pac_eval_rank_np(up_succ, full_succ, *, rf: int, voters: int,
     return lark, maj, creps
 
 
-def downtime_eval_rank_np(up_succ, full_succ, *, rf: int, n_real: int):
+def downtime_eval_rank_np(up_succ, full_succ, *, rf: int, n_real: int,
+                          roster=None):
     """Per-step protocol evaluation for the downtime engine (§6).
 
     Same (R, n_pad) rank-space tiles as pac_eval_rank_np.  Returns
       lark        (R,)   bool — PAC SimpleMajority (identical math)
       qmaj        (R,)   bool — majority of the f+1-copy replica set
-                         (the first rf succession columns; equal storage)
+                         (the first rf succession columns, or the given
+                         roster's ranks; equal storage either way)
       leader      (R,)   int32 — succession rank of the acting leader
                          (first up node; n_real when no node is up)
       leader_full (R,)   bool — leader holds the latest copy (pre-refresh
                          full mask, so a fresh leader is visibly stale)
       nrep        (R,)   int32 — up-count within the replica set
       creps       (R, n_pad) bool — cluster replicas (holder refresh)
+
+    roster (R, rf) int32, optional: per-row succession ranks (< n_real) of
+    the quorum-log replica set — the reconfiguring baseline's carried
+    state.  When given, qmaj/nrep are evaluated over those ranks instead
+    of the implicit first-rf lanes (roster=None is exactly the static
+    baseline: a roster of [0, ..., rf-1] gives identical outputs).  All
+    other outputs are roster-independent.
     """
     up = np.asarray(up_succ, dtype=bool)
     full = np.asarray(full_succ, dtype=bool)
@@ -54,7 +63,16 @@ def downtime_eval_rank_np(up_succ, full_succ, *, rf: int, n_real: int):
         valid = np.arange(up.shape[1]) < n_real
         up = up & valid
         full = full & valid
-    nrep = up[:, :rf].sum(axis=1).astype(np.int32)
+    if roster is None:
+        nrep = up[:, :rf].sum(axis=1).astype(np.int32)
+    else:
+        roster = np.asarray(roster)
+        if roster.shape != (up.shape[0], rf):
+            raise ValueError(f"roster must have shape (R, rf)="
+                             f"({up.shape[0]}, {rf}); got {roster.shape}")
+        nrep = np.take_along_axis(up, roster, axis=1) \
+            .sum(axis=1).astype(np.int32)
+    qmaj = 2 * nrep > rf
     lanes = np.arange(up.shape[1], dtype=np.int32)
     leader = np.where(up, lanes[None, :], np.int32(up.shape[1])) \
         .min(axis=1).astype(np.int32)

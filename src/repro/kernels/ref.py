@@ -198,18 +198,26 @@ def pac_eval_rank_ref(up_succ, full_succ, *, rf: int, voters: int,
     return lark, maj, creps
 
 
-def downtime_eval_rank_ref(up_succ, full_succ, *, rf: int, n_real: int):
+def downtime_eval_rank_ref(up_succ, full_succ, *, rf: int, n_real: int,
+                           roster=None):
     """Pure-jnp oracle of kernels.pac_np.downtime_eval_rank_np (§6 downtime
-    engine per-step evaluation) — see that function for the contract.  All
-    outputs are comparisons/cumsums over the same masked tiles, so the two
-    implementations (and the Pallas kernel) are bit-identical."""
+    engine per-step evaluation) — see that function for the contract,
+    including the optional (R, rf) `roster` of replica-set ranks for the
+    reconfiguring baseline.  All outputs are comparisons/cumsums over the
+    same masked tiles, so the two implementations (and the Pallas kernel)
+    are bit-identical."""
     n_pad = up_succ.shape[1]
     valid = (jnp.arange(n_pad) < n_real)[None, :]
     up = up_succ & valid
     full = full_succ & valid
     lark, qmaj, creps = pac_eval_rank_ref(up_succ, full_succ, rf=rf,
                                           voters=rf, n_real=n_real)
-    nrep = jnp.sum(up[:, :rf], axis=1).astype(jnp.int32)
+    if roster is None:
+        nrep = jnp.sum(up[:, :rf], axis=1).astype(jnp.int32)
+    else:
+        nrep = jnp.sum(jnp.take_along_axis(up, roster, axis=1),
+                       axis=1).astype(jnp.int32)
+    qmaj = 2 * nrep > rf
     lanes = jnp.arange(n_pad, dtype=jnp.int32)
     leader = jnp.min(jnp.where(up, lanes[None, :], jnp.int32(n_pad)),
                      axis=1).astype(jnp.int32)

@@ -66,6 +66,28 @@ def test_forced_measurement_path_runs_off_tpu():
     assert set(r.timings_us) == {64, 128}
 
 
+@pytest.mark.slow
+@pytest.mark.parametrize("kernel", ["downtime", "downtime_roster"])
+def test_forced_measurement_races_the_downtime_kernels(kernel):
+    """--metric downtime autotunes the kernel the grid actually runs (and
+    the roster variant under --rebuild-model reconfig), not pac_eval."""
+    r = autotune_block_p(128, 64, rf=3, voters=5, n_real=31,
+                         candidates=(64, 128), iters=1, force=True,
+                         kernel=kernel)
+    assert r.source == "measured"
+    assert set(r.timings_us) == {64, 128}
+
+
+def test_kernel_selection_is_part_of_the_cache_key_and_validated():
+    fake = lambda R, n, bp: float(bp)
+    kw = dict(rf=2, voters=3, n_real=63, candidates=(32, 64), measure=fake)
+    a = autotune_block_p(512, 64, kernel="pac", **kw)
+    b = autotune_block_p(512, 64, kernel="downtime", **kw)
+    assert a.block_p == b.block_p == 32          # same fake, same choice
+    with pytest.raises(ValueError, match="autotune kernel"):
+        autotune_block_p(512, 64, kernel="mystery", **kw)
+
+
 def test_block_size_does_not_change_kernel_results():
     R, n = 512, 64
     up = jnp.asarray(RNG.random((R, n)) < 0.9)

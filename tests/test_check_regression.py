@@ -41,3 +41,74 @@ def test_missing_baseline_row_fails_and_new_row_is_noted():
     assert any("missing" in f for f in failures)
     assert any("flapping" in s for s in notes)
     assert checked == 1          # only the shared iid row is gated
+
+
+def _dt_row(model=None, pause=0.4, ci=1e-3):
+    r = {"kind": "downtime", "scenario": "iid", "rf": 2, "p": 1e-3,
+         "pause_lark": 1e-3, "pause_quorum": pause,
+         "ci_pause_lark": ci, "ci_pause_quorum": ci}
+    if model is not None:
+        r["rebuild_model"] = model
+    return r
+
+
+def test_downtime_rows_keyed_by_rebuild_model():
+    # a reconfig row never gates against a fixed row at the same (rf, p),
+    # and a baseline without the field is a fixed-model row
+    base = {"rows": [_dt_row(model=None, pause=0.4)]}
+    new = {"rows": [_dt_row(model="fixed", pause=0.4),
+                    _dt_row(model="reconfig", pause=0.9)]}
+    failures, notes, checked = check_regression.compare(new, base, 2.0)
+    assert not failures
+    assert checked == 1                       # only the fixed row is shared
+    assert any("reconfig" in s for s in notes)
+
+
+def test_null_gated_value_skips_the_gate_with_a_note():
+    good = _dt_row(model="fixed")
+    nulled = dict(_dt_row(model="fixed"), pause_quorum=None)
+    failures, notes, checked = check_regression.compare(
+        {"rows": [nulled]}, {"rows": [good]}, 2.0)
+    assert not failures and checked == 1
+    assert any("null pause_quorum" in s for s in notes)
+    # symmetric: a null in the baseline is skipped too
+    failures, notes, _ = check_regression.compare(
+        {"rows": [good]}, {"rows": [nulled]}, 2.0)
+    assert not failures
+    assert any("null pause_quorum" in s for s in notes)
+
+
+def test_loader_rejects_non_finite_json(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text('{"rows": [{"kind": "iid", "rf": 2, "p": 1e-3, '
+                   '"ratio": Infinity}]}')
+    import pytest
+    with pytest.raises(ValueError, match="non-finite"):
+        check_regression.load_rows(str(bad))
+    ok = tmp_path / "ok.json"
+    ok.write_text('{"rows": [{"kind": "iid", "rf": 2, "p": 1e-3, '
+                  '"ratio": null}]}')
+    doc = check_regression.load_rows(str(ok))
+    assert doc["rows"][0]["ratio"] is None
+
+
+def test_sweep_json_serializes_non_finite_as_null(tmp_path):
+    """End to end: a ratio over a zero denominator reaches --json as
+    null, never as the non-RFC Infinity token."""
+    import importlib.util
+    import json
+    from pathlib import Path
+    spec = importlib.util.spec_from_file_location(
+        "availability_sweep",
+        Path(__file__).resolve().parents[1] / "benchmarks" /
+        "availability_sweep.py")
+    sweep = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(sweep)
+    row = {"kind": "downtime", "ratio": float("inf"), "pause_lark": 0.0}
+    safe = sweep._json_safe(row)
+    assert safe["ratio"] is None and safe["pause_lark"] == 0.0
+    out = tmp_path / "dump.json"
+    with open(out, "w") as fh:
+        json.dump({"rows": [safe]}, fh, allow_nan=False)
+    assert "Infinity" not in out.read_text()
+    assert check_regression.load_rows(str(out))["rows"][0]["ratio"] is None
