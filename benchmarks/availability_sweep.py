@@ -14,7 +14,10 @@ the pause-duration histograms, and the dup-res / rebuild knobs
 "fixed" (static first-rf replica set, constant rebuild pause) or
 "reconfig" (replica-set reconfiguration onto live nodes with a
 data-sized catch-up, --rebuild-ticks-per-gib per GiB of per-partition
-data).  Downtime rows are batched-only ("event" maps to "numpy").  See
+data; --size-dist/--size-skew shape the per-partition sizes — uniform,
+zipf, lognormal at a pinned 1.5 GiB mean — and --node-bandwidth-gibps
+makes concurrent catch-ups share each recruit node's ingest bandwidth).
+Downtime rows are batched-only ("event" maps to "numpy").  See
 docs/BENCHMARKS.md for the full CLI surface.
 
 Backends (--backend):
@@ -53,7 +56,9 @@ from repro.core.analytical import (improvement_factor, lark_unavailability,
                                    node_unavailability)
 from repro.core.availability import simulate_availability
 from repro.core.availability_batched import simulate_availability_batched
-from repro.core.downtime_batched import simulate_downtime_batched
+from repro.core.downtime_batched import (_REB_SCALE, _SIZE_SKEW_MAX,
+                                         SIZE_DISTS,
+                                         simulate_downtime_batched)
 from repro.core.scenarios import get_scenario, scenario_names
 
 REDUCED_GRID = [(2, 1e-3), (2, 3e-3), (2, 1e-2), (3, 1e-2), (4, 3e-2)]
@@ -200,6 +205,9 @@ def _downtime_row(r, *, kind: str, scenario: str):
         "dupres_ticks": r.dupres_ticks, "rebuild_steps": r.rebuild_steps,
         "rebuild_model": r.rebuild_model,
         "rebuild_ticks_per_gib": r.rebuild_ticks_per_gib,
+        "size_dist": r.size_dist, "size_skew": r.size_skew,
+        # inf (no sharing) serializes as null — _json_safe
+        "node_bandwidth_gibps": r.node_bandwidth_gibps,
         "ticks": r.ticks,
     }
 
@@ -208,7 +216,9 @@ def run_downtime(full: bool = False, trials: int = 4, backend: str = "jax",
                  seed: int = 0, devices: int = 1, smoke: bool = False,
                  pac_block_p=None, dupres_ticks: int = 1,
                  rebuild_steps: int = 100, rebuild_model: str = "fixed",
-                 rebuild_ticks_per_gib: int = 100):
+                 rebuild_ticks_per_gib: int = 100,
+                 size_dist: str = "uniform", size_skew: float = 1.0,
+                 node_bandwidth_gibps: float = math.inf):
     """§6 commit-pause rows over the i.i.d. grid."""
     backend, devices = _batched_backend(backend, devices)
     grid = _iid_grid(full, smoke)
@@ -221,7 +231,9 @@ def run_downtime(full: bool = False, trials: int = 4, backend: str = "jax",
             backend=backend, devices=devices, pac_block_p=pac_block_p,
             dupres_ticks=dupres_ticks, rebuild_steps=rebuild_steps,
             rebuild_model=rebuild_model,
-            rebuild_ticks_per_gib=rebuild_ticks_per_gib)
+            rebuild_ticks_per_gib=rebuild_ticks_per_gib,
+            size_dist=size_dist, size_skew=size_skew,
+            node_bandwidth_gibps=node_bandwidth_gibps)
         rows.append(_downtime_row(r, kind="downtime", scenario="iid"))
     return rows
 
@@ -232,7 +244,10 @@ def run_downtime_scenarios(names, full: bool = False, trials: int = 4,
                            pac_block_p=None, dupres_ticks: int = 1,
                            rebuild_steps: int = 100,
                            rebuild_model: str = "fixed",
-                           rebuild_ticks_per_gib: int = 100):
+                           rebuild_ticks_per_gib: int = 100,
+                           size_dist: str = "uniform",
+                           size_skew: float = 1.0,
+                           node_bandwidth_gibps: float = math.inf):
     backend, devices = _batched_backend(backend, devices)
     n, parts, max_ticks, min_ticks = _run_scale(full, smoke, scenario=True)
     rows = []
@@ -246,6 +261,8 @@ def run_downtime_scenarios(names, full: bool = False, trials: int = 4,
                 dupres_ticks=dupres_ticks, rebuild_steps=rebuild_steps,
                 rebuild_model=rebuild_model,
                 rebuild_ticks_per_gib=rebuild_ticks_per_gib,
+                size_dist=size_dist, size_skew=size_skew,
+                node_bandwidth_gibps=node_bandwidth_gibps,
                 **sc.kwargs(n=n, rf=rf, p=p))
             rows.append(_downtime_row(r, kind="downtime_scenario",
                                       scenario=name))
@@ -299,6 +316,21 @@ def main(argv=None, *, strict: bool = True):
                     help="reconfig catch-up cost per GiB of partition "
                          "data (--rebuild-model reconfig only; "
                          "default 100)")
+    ap.add_argument("--size-dist", default=None, choices=SIZE_DISTS,
+                    help="per-partition data-size distribution for the "
+                         "reconfig catch-ups (default uniform [1, 2) "
+                         "GiB; zipf/lognormal skew hot partitions while "
+                         "pinning the same 1.5 GiB mean; "
+                         "--rebuild-model reconfig only)")
+    ap.add_argument("--size-skew", type=float, default=None,
+                    help="skew shape of --size-dist zipf/lognormal "
+                         "(Pareto exponent / log-sigma; 0 = constant "
+                         "sizes; default 1)")
+    ap.add_argument("--node-bandwidth-gibps", type=float, default=None,
+                    help="per-node catch-up ingest bandwidth in "
+                         "full-speed streams; concurrent rebuilds on one "
+                         "recruit share it ('inf' disables sharing, the "
+                         "default; --rebuild-model reconfig only)")
     ap.add_argument("--trials", type=int, default=1,
                     help="seeds (event) or batch size (batched backends)")
     ap.add_argument("--devices", type=int, default=1,
@@ -333,9 +365,13 @@ def main(argv=None, *, strict: bool = True):
     if args.metric != "downtime":
         if args.dupres_ticks is not None or args.rebuild_steps is not None \
                 or args.rebuild_model is not None \
-                or args.rebuild_ticks_per_gib is not None:
+                or args.rebuild_ticks_per_gib is not None \
+                or args.size_dist is not None \
+                or args.size_skew is not None \
+                or args.node_bandwidth_gibps is not None:
             ap.error("--dupres-ticks/--rebuild-steps/--rebuild-model/"
-                     "--rebuild-ticks-per-gib only apply to "
+                     "--rebuild-ticks-per-gib/--size-dist/--size-skew/"
+                     "--node-bandwidth-gibps only apply to "
                      "--metric downtime")
     if args.rebuild_model is None:
         args.rebuild_model = "fixed"
@@ -346,16 +382,38 @@ def main(argv=None, *, strict: bool = True):
             and args.rebuild_ticks_per_gib is not None:
         ap.error("--rebuild-ticks-per-gib is the reconfig-model knob; use "
                  "--rebuild-steps with --rebuild-model fixed")
+    if args.rebuild_model == "fixed" \
+            and (args.size_dist is not None or args.size_skew is not None
+                 or args.node_bandwidth_gibps is not None):
+        ap.error("--size-dist/--size-skew/--node-bandwidth-gibps model "
+                 "the reconfiguring baseline's data-sized catch-ups; use "
+                 "--rebuild-model reconfig")
+    if args.size_skew is not None \
+            and args.size_dist not in ("zipf", "lognormal"):
+        ap.error("--size-skew shapes the zipf/lognormal size "
+                 "distributions; pass --size-dist zipf|lognormal")
     if args.dupres_ticks is None:
         args.dupres_ticks = 1
     if args.rebuild_steps is None:
         args.rebuild_steps = 100
     if args.rebuild_ticks_per_gib is None:
         args.rebuild_ticks_per_gib = 100
+    if args.size_dist is None:
+        args.size_dist = "uniform"
+    if args.size_skew is None:
+        args.size_skew = 1.0
+    if args.node_bandwidth_gibps is None:
+        args.node_bandwidth_gibps = math.inf
     if args.dupres_ticks < 0 or args.rebuild_steps < 0 \
             or args.rebuild_ticks_per_gib < 0:
         ap.error("--dupres-ticks/--rebuild-steps/--rebuild-ticks-per-gib "
                  "must be >= 0")
+    if not 0 <= args.size_skew <= _SIZE_SKEW_MAX:
+        ap.error(f"--size-skew must be in [0, {_SIZE_SKEW_MAX:g}] (larger "
+                 "exponents overflow the size table)")
+    if not args.node_bandwidth_gibps >= 1.0 / _REB_SCALE:
+        ap.error(f"--node-bandwidth-gibps must be >= 1/{_REB_SCALE}, the "
+                 "engine's fixed-point rate quantum (or 'inf')")
 
     names = _resolve_scenarios(args, ap)
     rows = []
@@ -380,7 +438,9 @@ def main(argv=None, *, strict: bool = True):
                       dupres_ticks=args.dupres_ticks,
                       rebuild_steps=args.rebuild_steps,
                       rebuild_model=args.rebuild_model,
-                      rebuild_ticks_per_gib=args.rebuild_ticks_per_gib)
+                      rebuild_ticks_per_gib=args.rebuild_ticks_per_gib,
+                      size_dist=args.size_dist, size_skew=args.size_skew,
+                      node_bandwidth_gibps=args.node_bandwidth_gibps)
         if not args.scenarios_only:
             for r in run_downtime(**common):
                 rows.append(r)
@@ -423,6 +483,14 @@ def main(argv=None, *, strict: bool = True):
                 "metric": args.metric}
         if args.metric == "downtime":
             meta["rebuild_model"] = args.rebuild_model
+            meta["size_dist"] = args.size_dist
+            # match the result rows' normalization: the skew knob is
+            # inert under uniform, so record it as 0 there
+            meta["size_skew"] = args.size_skew \
+                if args.size_dist in ("zipf", "lognormal") else 0.0
+            meta["node_bandwidth_gibps"] = \
+                None if math.isinf(args.node_bandwidth_gibps) \
+                else args.node_bandwidth_gibps
         doc = {"meta": meta,
                "rows": [_json_safe(r) for r in rows]}
         with open(args.json, "w") as fh:

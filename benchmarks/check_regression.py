@@ -28,6 +28,12 @@ semantic change that should come with a refreshed baseline:
     python benchmarks/availability_sweep.py --backend jax --trials 8 \
         --devices 8 --metric downtime --smoke --rebuild-model reconfig \
         --scenario all --json benchmarks/BENCH_downtime_reconfig.json
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python benchmarks/availability_sweep.py --backend jax --trials 8 \
+        --devices 8 --metric downtime --smoke --rebuild-model reconfig \
+        --size-dist zipf --size-skew 1 --node-bandwidth-gibps 1 \
+        --scenario all --json benchmarks/BENCH_downtime_skew.json
 """
 from __future__ import annotations
 
@@ -56,9 +62,14 @@ def row_key(r: dict):
     if r.get("kind") in ("downtime", "downtime_scenario"):
         # the two quorum-log baselines measure different things; rows from
         # different rebuild models must never be compared (pre-roster
-        # baselines carry no rebuild_model field and are all "fixed")
+        # baselines carry no rebuild_model field and are all "fixed") —
+        # and likewise for the size-distribution / bandwidth knobs (rows
+        # predating them are uniform/unshared, matching the defaults; a
+        # serialized null bandwidth is the unshared inf)
         return ("downtime", r.get("scenario", "iid"), r["rf"], r["p"],
-                r.get("rebuild_model", "fixed"))
+                r.get("rebuild_model", "fixed"),
+                r.get("size_dist", "uniform"), r.get("size_skew", 0.0),
+                r.get("node_bandwidth_gibps"))
     return None                      # autotune/meta rows are not gated
 
 

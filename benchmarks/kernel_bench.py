@@ -17,7 +17,7 @@ import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.ops import (autotune_block_p, downtime_eval_batch,
-                               pac_eval_batch)
+                               pac_eval_batch, rebuild_node_counts)
 
 
 def _time(fn, *args, iters=5) -> float:
@@ -96,6 +96,20 @@ def main(argv=None, *, strict: bool = True):
         u, f, rf=3, n_real=155, backend="jax", roster=ro))
     print(f"kernel_downtime_roster_jax,r{R}n155,"
           f"{_time(dt_r, upj, fullj, roster):.0f},trials=8xp4096")
+
+    # per-node in-flight rebuild counts (the bandwidth-contended rebuild
+    # model's cross-partition reduction; trials x partitions -> nodes)
+    rec = rng.integers(0, 156, (8, 4096)).astype(np.int32)
+    act = rng.random((8, 4096)) < 0.1
+    nc_np = lambda r, a: rebuild_node_counts(r, a, n_real=155,
+                                             backend="numpy")
+    print(f"kernel_node_counts_numpy,b8p4096n155,"
+          f"{_time(nc_np, rec, act):.0f},scatter_add")
+    recj, actj = jnp.asarray(rec), jnp.asarray(act)
+    nc_j = jax.jit(lambda r, a: rebuild_node_counts(r, a, n_real=155,
+                                                    backend="jax"))
+    print(f"kernel_node_counts_jax,b8p4096n155,"
+          f"{_time(nc_j, recj, actj):.0f},scatter_add")
     if args.autotune:
         res = autotune_block_p(R, 155, rf=3, voters=5, n_real=155)
         print(f"kernel_pac_autotune,r{R}n155,0,"

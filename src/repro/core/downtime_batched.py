@@ -39,18 +39,29 @@ protocol state machines per step instead of an instantaneous average:
                          catch-up countdown is proportional to the
                          partition's data size: `rebuild_ticks_per_gib`
                          x a per-partition size in GiB drawn
-                         deterministically at t=0 (uniform in [1, 2),
-                         shared by all trials — one cluster dataset,
-                         many failure trajectories).  A loss during
-                         catch-up restarts the clock; a down roster
-                         member with no up replacement available keeps
-                         its seat until one appears (late recruitment
-                         does not restart the clock — the catch-up was
-                         already charged to the loss).  Sizes come from
-                         the same counter-hash family as the trajectory
-                         RNG under a dedicated salt, so the node-advance
-                         randomness stream is untouched and trajectories
-                         stay bit-identical to the fixed model's.
+                         deterministically at t=0 (shared by all trials
+                         — one cluster dataset, many failure
+                         trajectories) from a configurable `size_dist`:
+                         uniform [1, 2) GiB, or hot-partition-skewed
+                         zipf / lognormal shapes (`size_skew`), all
+                         pinned to the same 1.5 GiB mean so skew moves
+                         bytes between partitions without changing the
+                         equal-storage total.  Concurrent catch-ups
+                         ingesting on one recruit node share its
+                         `node_bandwidth_gibps` evenly (each advances
+                         min(1, bandwidth / k) countdown-ticks per tick
+                         in 1/256 fixed-point quanta; inf — the default
+                         — is the unshared parallel-rebuild model, bit
+                         for bit).  A loss during catch-up restarts the
+                         clock; a down roster member with no up
+                         replacement available keeps its seat until one
+                         appears (late recruitment does not restart the
+                         clock — the catch-up was already charged to the
+                         loss).  Sizes come from the same counter-hash
+                         family as the trajectory RNG under a dedicated
+                         salt, so the node-advance randomness stream is
+                         untouched and trajectories stay bit-identical
+                         to the fixed model's.
 
 Outputs per protocol: the mean commit-pause fraction (paused
 partition-ticks / total partition-ticks — with dupres_ticks=0 and
@@ -79,7 +90,7 @@ from typing import Dict, Optional
 
 import numpy as np
 
-from ..kernels.ops import downtime_eval_batch
+from ..kernels.ops import downtime_eval_batch, rebuild_node_counts
 from .availability import t975
 from .availability_batched import (_default_max_steps, _engine_setup,
                                    _initial_full_state, _initial_node_state,
@@ -91,32 +102,137 @@ _SIZE_SALT = 0x94D049BB
 
 REBUILD_MODELS = ("fixed", "reconfig")
 
+#: per-partition data-size distributions for the reconfiguring baseline.
+#: All three pin the same mean (the uniform model's 1.5 GiB), so every
+#: distribution describes the same total dataset under the §6
+#: equal-storage budget — skew moves bytes between partitions, never
+#: adds them.
+SIZE_DISTS = ("uniform", "zipf", "lognormal")
 
-def partition_sizes_gib(seed: int, partitions: int) -> np.ndarray:
-    """Deterministic per-partition data sizes in GiB, uniform in [1, 2).
+_SIZE_MEAN_GIB = 1.5      # the uniform [1, 2) mean every dist is pinned to
 
-    Drawn once at t=0 from the same counter-hash family as the trajectory
-    RNG but under a dedicated salt and partition-indexed lanes, so the
-    node-advance randomness stream is untouched (invariant 3 in
-    docs/ARCHITECTURE.md) and the reconfiguring baseline replays the
-    exact node trajectories of the fixed one.  Always computed host-side
-    in numpy — every backend receives the identical int32 tick table.
+#: largest accepted size_skew: (1 - u)^(-skew) reaches 2^(24 * skew) at
+#: the 24-bit uniform's top draw, which overflows float64 (and silently
+#: NaN-poisons the mean rescale) just past skew ~42 — cap well below it
+_SIZE_SKEW_MAX = 32.0
+
+#: fixed-point scale for bandwidth-shared catch-up countdowns: one
+#: countdown tick = _REB_SCALE work units, so a contended rebuild can
+#: advance in 1/_REB_SCALE-tick quanta while staying pure int32 math
+#: (invariant 4 in docs/ARCHITECTURE.md).  An uncontended rebuild
+#: advances _REB_SCALE units/tick — arithmetically identical to the
+#: plain-tick countdown, which is what makes node_bandwidth_gibps=inf
+#: bit-exact against the unshared model.
+_REB_SCALE = 256
+_REB_BIG = np.int32(2 ** 30)   # "never finishes" remaining-ticks sentinel
+
+
+def _norm_ppf(u: np.ndarray) -> np.ndarray:
+    """Inverse standard-normal CDF (Acklam's rational approximation,
+    |rel err| < 1.2e-9) — vectorized host-side numpy, no scipy.  Only
+    used to shape the deterministic lognormal size table, so approximation
+    error just perturbs the (arbitrary) distribution shape; determinism
+    is what matters."""
+    a = (-3.969683028665376e+01, 2.209460984245205e+02,
+         -2.759285104469687e+02, 1.383577518672690e+02,
+         -3.066479806614716e+01, 2.506628277459239e+00)
+    b = (-5.447609879822406e+01, 1.615858368580409e+02,
+         -1.556989798598866e+02, 6.680131188771972e+01,
+         -1.328068155288572e+01)
+    c = (-7.784894002430293e-03, -3.223964580411365e-01,
+         -2.400758277161838e+00, -2.549732539343734e+00,
+         4.374664141464968e+00, 2.938163982698783e+00)
+    d = (7.784695709041462e-03, 3.224671290700398e-01,
+         2.445134137142996e+00, 3.754408661907416e+00)
+    u = np.clip(np.asarray(u, dtype=np.float64), 2.0 ** -25, 1 - 2.0 ** -25)
+    lo, hi = u < 0.02425, u > 1 - 0.02425
+    mid = ~(lo | hi)
+    z = np.empty_like(u)
+    q = np.sqrt(-2.0 * np.log(np.where(lo, u, 0.5)))
+    z_lo = (((((c[0] * q + c[1]) * q + c[2]) * q + c[3]) * q + c[4]) * q
+            + c[5]) / ((((d[0] * q + d[1]) * q + d[2]) * q + d[3]) * q + 1)
+    q = np.sqrt(-2.0 * np.log(np.where(hi, 1 - u, 0.5)))
+    z_hi = -(((((c[0] * q + c[1]) * q + c[2]) * q + c[3]) * q + c[4]) * q
+             + c[5]) / ((((d[0] * q + d[1]) * q + d[2]) * q + d[3]) * q + 1)
+    q = u - 0.5
+    r = q * q
+    z_mid = (((((a[0] * r + a[1]) * r + a[2]) * r + a[3]) * r + a[4]) * r
+             + a[5]) * q / \
+        (((((b[0] * r + b[1]) * r + b[2]) * r + b[3]) * r + b[4]) * r + 1)
+    z[lo] = z_lo[lo]
+    z[hi] = z_hi[hi]
+    z[mid] = z_mid[mid]
+    return z
+
+
+def partition_sizes_gib(seed: int, partitions: int, *,
+                        dist: str = "uniform",
+                        skew: float = 1.0) -> np.ndarray:
+    """Deterministic per-partition data sizes in GiB.
+
+    dist selects the shape (SIZE_DISTS):
+      uniform    uniform in [1, 2) — the original baseline, byte-identical
+                 to the pre-skew table (the skew knob is inert here).
+      zipf       bounded Pareto hot-partition skew: raw = (1 - u)^(-skew),
+                 rescaled so the sample mean is exactly the uniform mean
+                 (1.5 GiB).  skew=0 degenerates to every partition at
+                 exactly 1.5 GiB; larger skews concentrate the dataset in
+                 a few huge partitions and push the rest below 1 GiB.
+      lognormal  raw = exp(skew * z(u)) with z the inverse normal CDF,
+                 mean-rescaled the same way (skew is the log-space sigma).
+
+    The mean pin keeps the total dataset — the §6 equal-storage budget —
+    identical across distributions: skew redistributes bytes, never adds
+    them.  Draws come once at t=0 from the same counter-hash family as
+    the trajectory RNG but under a dedicated salt and partition-indexed
+    lanes, so the node-advance randomness stream is untouched (invariant
+    3 in docs/ARCHITECTURE.md) and every size distribution replays the
+    exact node trajectories of every other.  Always computed host-side in
+    numpy — every backend receives the identical table.
     """
+    if dist not in SIZE_DISTS:
+        raise ValueError(f"dist must be one of {SIZE_DISTS}; got {dist!r}")
+    if not 0 <= skew <= _SIZE_SKEW_MAX:
+        raise ValueError(f"skew must be in [0, {_SIZE_SKEW_MAX:g}] "
+                         f"(larger Pareto exponents overflow the float64 "
+                         f"size table); got {skew!r}")
     seed_mix = _mix32(np.asarray([(seed & 0xFFFFFFFF) ^ 0x6A09E667],
                                  dtype=np.uint32), np)
     u = _uniforms(seed_mix, np.asarray(0, dtype=np.uint32), _SIZE_SALT,
-                  np.zeros(1, dtype=np.uint32), partitions, np)[0]
-    return 1.0 + u.astype(np.float64)
+                  np.zeros(1, dtype=np.uint32), partitions, np)[0] \
+        .astype(np.float64)
+    if dist == "uniform":
+        return 1.0 + u
+    if dist == "zipf":
+        raw = (1.0 - u) ** (-skew)
+    else:                                        # lognormal
+        raw = np.exp(skew * _norm_ppf(u))
+    return raw * (_SIZE_MEAN_GIB / raw.mean())
 
 
 def _partition_rebuild_ticks(seed: int, partitions: int,
-                             ticks_per_gib: int) -> np.ndarray:
+                             ticks_per_gib: int, *,
+                             dist: str = "uniform", skew: float = 1.0,
+                             cap: Optional[int] = None) -> np.ndarray:
     """(P,) int32 catch-up countdowns for the reconfiguring baseline:
-    floor(ticks_per_gib x size_gib).  Sizes are >= 1 GiB, so with
-    ticks_per_gib == rebuild_steps every reconfig catch-up is at least as
-    long as the fixed model's constant."""
-    return np.floor(ticks_per_gib *
-                    partition_sizes_gib(seed, partitions)).astype(np.int32)
+    floor(ticks_per_gib x size_gib), clamped to >= 1 tick whenever a
+    rebuild costs anything at all (skewed draws push partitions below
+    1 GiB, and a catch-up of epsilon bytes still takes one tick — without
+    the clamp a sub-GiB partition would rebuild for free and its pause
+    run would degenerate to the dropped zero-length case).  `cap`
+    (the engine passes horizon + 1) bounds the table so the fixed-point
+    work units stay in int32; a countdown beyond the horizon can never
+    complete in-simulation, so the clamp is observationally invisible.
+    With the uniform dist and ticks_per_gib == rebuild_steps every
+    catch-up is >= the fixed model's constant (sizes >= 1 GiB), and both
+    clamps are no-ops — the pre-skew table, bit for bit."""
+    t = np.floor(ticks_per_gib *
+                 partition_sizes_gib(seed, partitions, dist=dist, skew=skew))
+    if ticks_per_gib > 0:
+        t = np.maximum(t, 1.0)
+    if cap is not None:
+        t = np.minimum(t, float(cap))
+    return t.astype(np.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -144,6 +260,9 @@ class BatchedDowntimeResult:
     devices: int = 1
     rebuild_model: str = "fixed"
     rebuild_ticks_per_gib: int = 0   # reconfig only; 0 under "fixed"
+    size_dist: str = "uniform"       # reconfig only; "uniform" under "fixed"
+    size_skew: float = 0.0           # zipf/lognormal only; 0 elsewhere
+    node_bandwidth_gibps: float = math.inf   # reconfig only; inf = unshared
     hist_edges: np.ndarray = field(repr=False, default=None)   # (nbins,)
     hist_lark: np.ndarray = field(repr=False, default=None)    # (nbins,)
     hist_quorum: np.ndarray = field(repr=False, default=None)
@@ -181,7 +300,8 @@ def _hist_add(xp, hist_bins: int, hist, mask, d):
 
 def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
                dupres_ticks: int, rebuild_steps: int, hist_bins: int,
-               rebuild_model: str = "fixed", rebuild_ticks=None):
+               rebuild_model: str = "fixed", rebuild_ticks=None,
+               bandwidth_fp=None, cnt_fn=None):
     def hist_add(hist, mask, d):
         return _hist_add(xp, hist_bins, hist, mask, d)
 
@@ -192,24 +312,49 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
     # pins in tests/test_downtime_batched.py depend on that.
 
     def interval_pause(now, dt, dt_i, ldn, qrep, qreb, qdn, qt0, lpt, qpt,
-                       qhist):
+                       qhist, rate=None):
         """Pause time over [now, t_clamp) from interval-start state.
         LARK matches the availability engine's lpt arithmetic exactly
         (count * dt in float32); quorum adds the rebuild overlap —
         min(remaining, dt) extra paused ticks per majority-up partition —
         and a rebuild expiring mid-interval ends a quorum pause run
         between events (PAC state can only flip at events, so LARK runs
-        never end mid-interval)."""
+        never end mid-interval).
+
+        rate=None is the fixed model's plain-tick countdown (qreb in
+        ticks, one tick of progress per tick).  A rate array puts qreb in
+        _REB_SCALE fixed-point work units: each partition's catch-up
+        advances dt * rate units over the interval (rate is the
+        bandwidth share its recruit node grants, <= _REB_SCALE), finishes
+        when cumulative progress covers the remaining units, and its
+        remaining wall-ticks are ceil(units / rate) — at rate ==
+        _REB_SCALE every expression reduces to the plain-tick arithmetic
+        exactly, which is what keeps node_bandwidth_gibps=inf
+        bit-identical to the unshared model."""
         lpt = lpt + xp.sum(ldn, axis=1).astype(xp.float32) * dt
         qmaj_prev = 2 * xp.sum(qrep, axis=2) > rf             # (B, P)
         qpt = qpt + xp.sum(~qmaj_prev, axis=1).astype(xp.float32) * dt
+        if rate is None:
+            rem = qreb                       # remaining wall-ticks
+            prog = dt_i[:, None]             # progress over the interval
+        else:
+            # the divisor is floored at 1 only to keep numpy's eager
+            # where-evaluation from dividing by zero; rate == 0 (a
+            # starved rebuild) still selects the never-finishes sentinel
+            safe_rate = xp.maximum(rate, 1)
+            rem = xp.where(qreb > 0,
+                           xp.where(rate > 0,
+                                    (qreb + safe_rate - 1) // safe_rate,
+                                    _REB_BIG),
+                           0)
+            prog = dt_i[:, None] * rate
         qpt = qpt + xp.sum(xp.where(
-            qmaj_prev, xp.minimum(qreb, dt_i[:, None]), 0)
+            qmaj_prev, xp.minimum(rem, dt_i[:, None]), 0)
             .astype(xp.float32), axis=1)
-        ends_mid = qdn & qmaj_prev & (qreb > 0) & (qreb <= dt_i[:, None])
-        qhist = hist_add(qhist, ends_mid, (now[:, None] + qreb) - qt0)
+        ends_mid = qdn & qmaj_prev & (qreb > 0) & (prog >= qreb)
+        qhist = hist_add(qhist, ends_mid, (now[:, None] + rem) - qt0)
         qdn = qdn & ~ends_mid
-        qreb = xp.maximum(qreb - dt_i[:, None], 0)
+        qreb = xp.maximum(qreb - prog, 0)
         return lpt, qpt, qreb, qdn, qhist
 
     def lark_transitions(t_clamp, lark, ldr, lfull, ldn, lt0, leader, lpt,
@@ -298,18 +443,45 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
         protocol blocks) except the quorum-log replica set is the carried
         per-partition roster of succession ranks (reconfigured onto live
         nodes after losses) and the catch-up countdown is the
-        per-partition `rebuild_ticks` table.  LARK's code path is
-        untouched, so LARK outputs are bit-identical across rebuild
-        models."""
+        per-partition `rebuild_ticks` table, in _REB_SCALE fixed-point
+        work units so concurrent catch-ups ingesting on one recruit node
+        can share its bandwidth (rate = min(full speed, bandwidth / k)
+        recomputed at every event boundary from the carried recruit node
+        ids; bandwidth_fp=None skips the reduction and runs every rebuild
+        at full speed — the unshared model, bit for bit).  LARK's code
+        path is untouched, so LARK outputs are bit-identical across
+        rebuild models and bandwidth settings."""
         (now, up, ev_t, full, rr_t, rr_idx, lane0, ldn, lt0, qrep, qreb,
          qdn, qt0, leader, lpt, qpt, lev, qev, lhist, qhist,
-         roster) = carry
+         roster, recruit) = carry
         B = up.shape[0]               # local trials (a shard of the batch)
         t_clamp, dt, active, up, ev_t, rr_t, rr_idx = advance(
             now, up, ev_t, rr_t, rr_idx, lane0, s)
         dt_i = t_clamp - now                                  # (B,) int32
+        # -- per-node bandwidth contention over this interval: in-flight
+        # catch-ups ingesting on the same recruit node split its
+        # bandwidth evenly (the in-flight set only changes at events, so
+        # the share is constant within an interval; a catch-up whose
+        # recruit is unknown — lost during a no-candidate stretch — runs
+        # uncontended).  The node-count reduction is the engine's only
+        # cross-partition coupling; it stays within each trial, so
+        # trials-axis sharding commutes with it (docs/ARCHITECTURE.md).
+        if bandwidth_fp is None:
+            rate = xp.full((B, P), _REB_SCALE, dtype=xp.int32)
+        else:
+            inflight = (qreb > 0) & (recruit < n)
+            counts = cnt_fn(recruit, inflight)                # (B, n)
+            k = xp.take_along_axis(counts,
+                                   xp.clip(recruit, 0, n - 1), axis=1)
+            # sentinel-recruit partitions must not inherit node n-1's
+            # in-flight count from the clipped gather: no known ingest
+            # node means no contention
+            k = xp.where(recruit < n, xp.maximum(k, 1), 1)
+            rate = xp.minimum(xp.int32(_REB_SCALE),
+                              xp.int32(bandwidth_fp) // k)
         lpt, qpt, qreb, qdn, qhist = interval_pause(
-            now, dt, dt_i, ldn, qrep, qreb, qdn, qt0, lpt, qpt, qhist)
+            now, dt, dt_i, ldn, qrep, qreb, qdn, qt0, lpt, qpt, qhist,
+            rate=rate)
         now = t_clamp
 
         # -- post-event cluster state; fresh losses are roster members
@@ -326,6 +498,8 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
             in_roster = in_roster | (lanes_n[None, None, :]
                                      == roster[:, :, j, None])
         slot = xp.arange(rf, dtype=xp.int32)
+        new_rank = xp.full((B, P), n, dtype=xp.int32)
+        took = xp.zeros((B, P), dtype=bool)
         for j in range(rf):
             need = ~rup[:, :, j]
             cand = up_succ & ~in_roster
@@ -342,9 +516,20 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
                                       == new_j[:, :, None]))
             roster = xp.where((slot == j)[None, None, :],
                               new_j[:, :, None], roster)
+            new_rank = xp.where(take, repl, new_rank)
+            took = took | take
 
         # -- each fresh loss (re)starts the data-sized catch-up countdown
         qreb = xp.where(loss_any, rebuild_ticks[None, :], qreb)
+        # -- the ingesting node is the most recently recruited member
+        # (ranks are per-partition succession indices; bandwidth is per
+        # physical node, so map through the succession matrix).  A loss
+        # with no candidate leaves the seat — and the ingest node —
+        # unknown until late recruitment fills it.
+        new_node = succ[xp.arange(P, dtype=xp.int32)[None, :],
+                        xp.clip(new_rank, 0, n - 1)]
+        recruit = xp.where(took, new_node,
+                           xp.where(loss_any, xp.int32(n), recruit))
 
         # -- roster-aware per-step evaluation on the reconfigured roster
         lark, qmaj, ldr, lfull, _nrep, creps = dt_fn(
@@ -364,7 +549,7 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
 
         carry = (now, up, ev_t, full, rr_t, rr_idx, lane0, ldn, lt0,
                  qrep, qreb, qdn, qt0, leader, lpt, qpt, lev, qev,
-                 lhist, qhist, roster)
+                 lhist, qhist, roster, recruit)
         out = (t_clamp, xp.sum(ldn, axis=1).astype(xp.int32),
                xp.sum(qdn, axis=1).astype(xp.int32),
                xp.sum(up, axis=1).astype(xp.int32))
@@ -386,6 +571,8 @@ def simulate_downtime_batched(
         dupres_ticks: int = 1, rebuild_steps: int = 100,
         hist_bins: int = 16,
         rebuild_model: str = "fixed", rebuild_ticks_per_gib: int = 100,
+        size_dist: str = "uniform", size_skew: float = 1.0,
+        node_bandwidth_gibps: float = math.inf,
         pair_fail_prob: float = 0.0, restart_period: int = 0,
         wave_width: int = 1, p_node=None, downtime_node=None,
         devices: int = 1, pac_block_p: Optional[int] = None,
@@ -414,10 +601,32 @@ def simulate_downtime_batched(
                    Ignored under rebuild_model="reconfig".
     rebuild_ticks_per_gib
                    reconfig-model catch-up cost per GiB of partition
-                   data; per-partition sizes are uniform in [1, 2) GiB
-                   (partition_sizes_gib), so countdowns span
-                   [ticks_per_gib, 2*ticks_per_gib).  Ignored under
+                   data; per-partition sizes come from `size_dist`
+                   (partition_sizes_gib).  Ignored under
                    rebuild_model="fixed".
+    size_dist      per-partition data-size distribution for the reconfig
+                   catch-ups (SIZE_DISTS): "uniform" (the [1, 2) GiB
+                   baseline, default), "zipf" (hot-partition Pareto
+                   skew), or "lognormal" — all pinned to the uniform
+                   mean of 1.5 GiB so the equal-storage budget is
+                   identical across distributions.  Reconfig only.
+    size_skew      shape parameter of the skewed dists (Pareto exponent /
+                   log-space sigma); 0 collapses either to a constant
+                   1.5 GiB.  Inert under size_dist="uniform".
+    node_bandwidth_gibps
+                   per-node catch-up ingest bandwidth, in units of
+                   full-speed catch-up streams (1 stream == 1 GiB/s at
+                   one tick per second; `rebuild_ticks_per_gib` prices a
+                   GiB at that full-speed rate).  Concurrent catch-ups
+                   recruited onto the same node split it evenly: each
+                   advances min(1, bandwidth / k) countdown-ticks per
+                   tick, quantized to 1/256 (pure int32 fixed-point, so
+                   cross-backend bit-identity holds; a share below the
+                   quantum — k > 256 x bandwidth — rounds to zero and
+                   the catch-up stalls until contention eases, which is
+                   why bandwidth itself must be >= 1/256).  The default
+                   inf disables sharing and is bit-identical to the
+                   unshared parallel-rebuild model.  Reconfig only.
     hist_bins      power-of-two duration buckets ([1,2), [2,4), ...,
                    top bucket open-ended).
 
@@ -434,7 +643,25 @@ def simulate_downtime_batched(
         raise ValueError(f"rebuild_model must be one of {REBUILD_MODELS}")
     if rebuild_ticks_per_gib < 0:
         raise ValueError("rebuild_ticks_per_gib must be >= 0")
+    if size_dist not in SIZE_DISTS:
+        raise ValueError(f"size_dist must be one of {SIZE_DISTS}")
+    if not 0 <= size_skew <= _SIZE_SKEW_MAX:
+        raise ValueError(f"size_skew must be in [0, {_SIZE_SKEW_MAX:g}]")
+    if not node_bandwidth_gibps >= 1.0 / _REB_SCALE:
+        raise ValueError(f"node_bandwidth_gibps must be >= 1/{_REB_SCALE} "
+                         "(the fixed-point rate quantum — below it even an "
+                         "uncontended catch-up rounds to zero progress; "
+                         "inf disables bandwidth sharing)")
     reconfig = rebuild_model == "reconfig"
+    bandwidth_shared = math.isfinite(node_bandwidth_gibps)
+    if not reconfig and (size_dist != "uniform" or bandwidth_shared):
+        raise ValueError("size_dist and node_bandwidth_gibps model the "
+                         "reconfiguring baseline's data-sized catch-ups; "
+                         "use rebuild_model='reconfig'")
+    if reconfig and max_ticks > (2 ** 31 - 1) // _REB_SCALE - 2:
+        raise ValueError("max_ticks too large for the fixed-point "
+                         f"catch-up countdowns (<= "
+                         f"{(2 ** 31 - 1) // _REB_SCALE - 2})")
     shard = use_shard_map if use_shard_map is not None else devices > 1
     B, P, horizon = trials, partitions, max_ticks
     (xp, succ, seed_mix, geo_masks, geo_tables, dt_vec, pair_perm,
@@ -445,7 +672,12 @@ def simulate_downtime_batched(
         u, f, rf=rf, n_real=n, backend=backend, block_p=pac_block_p,
         roster=roster)
     rebuild_ticks = xp.asarray(_partition_rebuild_ticks(
-        seed, P, rebuild_ticks_per_gib)) if reconfig else None
+        seed, P, rebuild_ticks_per_gib, dist=size_dist, skew=size_skew,
+        cap=max_ticks + 1) * np.int32(_REB_SCALE)) if reconfig else None
+    bandwidth_fp = int(min(math.floor(_REB_SCALE * node_bandwidth_gibps),
+                           int(_REB_BIG))) if bandwidth_shared else None
+    cnt_fn = (lambda rec, act: rebuild_node_counts(
+        rec, act, n_real=n, backend=backend)) if bandwidth_shared else None
     advance = _make_node_advance(
         xp, n=n, horizon=horizon, dt_vec=dt_vec, geo_masks=geo_masks,
         geo_tables=geo_tables, seed_mix=seed_mix,
@@ -455,7 +687,8 @@ def simulate_downtime_batched(
                       dupres_ticks=dupres_ticks,
                       rebuild_steps=rebuild_steps, hist_bins=hist_bins,
                       rebuild_model=rebuild_model,
-                      rebuild_ticks=rebuild_ticks)
+                      rebuild_ticks=rebuild_ticks,
+                      bandwidth_fp=bandwidth_fp, cnt_fn=cnt_fn)
 
     # initial state: everyone up, roster replicas full, both protocols
     # evaluated once at t=0 (identical to the availability engine's init;
@@ -484,7 +717,9 @@ def simulate_downtime_batched(
             xp.arange(rf, dtype=xp.int32)[None, None, :], (B, P, rf))
         if backend == "numpy":
             roster0 = np.ascontiguousarray(roster0)
-        carry = carry + (roster0,)
+        # no catch-up in flight at t=0, so no recruit node to ingest on
+        recruit0 = xp.full((B, P), n, dtype=xp.int32)
+        carry = carry + (roster0, recruit0)
 
     if backend != "numpy":
         import jax.numpy as jnp
@@ -569,6 +804,10 @@ def simulate_downtime_batched(
         stopped_early=stopped, devices=devices,
         rebuild_model=rebuild_model,
         rebuild_ticks_per_gib=rebuild_ticks_per_gib if reconfig else 0,
+        size_dist=size_dist if reconfig else "uniform",
+        size_skew=size_skew if size_dist in ("zipf", "lognormal") else 0.0,
+        node_bandwidth_gibps=node_bandwidth_gibps if reconfig
+        else math.inf,
         hist_edges=np.asarray([1 << k for k in range(hist_bins)],
                               dtype=np.int64),
         hist_lark=lhist_tot, hist_quorum=qhist_tot,

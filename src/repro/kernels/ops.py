@@ -108,7 +108,7 @@ def pac_eval(up, succ, full, rf: int, *, voters=None,
 # ---------------------------------------------------------------------------
 
 from .pac_np import (downtime_eval_rank_np,  # noqa: E402  (re-export)
-                     pac_eval_rank_np)
+                     pac_eval_rank_np, rebuild_node_counts_np)
 
 
 def _pallas_block_p(R: int) -> int:
@@ -357,5 +357,35 @@ def downtime_eval_batch(up_succ, full_succ, *, rf: int, n_real: int,
             block_p=block_p or _pallas_block_p(R), interpret=interpret,
             roster=roster)
         return lark, qmaj, leader, lfull, nrep, creps[:, :n_pad]
+    raise ValueError(f"unknown PAC backend {backend!r}; "
+                     f"expected one of {PAC_BACKENDS}")
+
+
+def rebuild_node_counts(recruit, active, *, n_real: int,
+                        backend: str = "jax"):
+    """Per-node in-flight rebuild counts for the §6 bandwidth-contended
+    rebuild model: recruit (B, P) int32 node ids (values outside
+    [0, n_real) — the engine's no-recruit sentinel — are ignored), active
+    (B, P) bool -> counts (B, n_real) int32, where counts[b, node] is the
+    number of partitions of trial b whose active catch-up ingests on
+    `node`.
+
+    This is the downtime engine's first *cross-partition* reduction
+    inside a step — but it stays strictly within a trial (rows never
+    mix), so it commutes with trials-axis sharding; the 8-device proof
+    lives in tests/test_sharded.py.  All three backends are bit-identical:
+    the numpy/jnp implementations scatter-add, the Pallas kernel
+    (kernels/pac_eval.py: node_count) accumulates one-hot compares over
+    the partition columns — pure integer work either way.
+    """
+    if backend == "numpy":
+        return rebuild_node_counts_np(recruit, active, n_real=n_real)
+    if backend == "jax":
+        return ref.rebuild_node_counts_ref(recruit, active, n_real=n_real)
+    if backend == "pallas":
+        from . import pac_eval as pk
+        counts = pk.node_count(recruit, active, n_real=n_real,
+                               interpret=jax.default_backend() != "tpu")
+        return counts[:, :n_real]
     raise ValueError(f"unknown PAC backend {backend!r}; "
                      f"expected one of {PAC_BACKENDS}")

@@ -159,6 +159,69 @@ def _downtime_roster_kernel(up_ref, full_ref, valid_ref, roster_ref,
     creps_ref[...] = (up > 0) & (rank <= rf)
 
 
+def _node_count_kernel(rec_ref, act_ref, cnt_ref, *, P: int):
+    """Per-node in-flight rebuild counts for one (block_b, P) tile of
+    recruit node ids — the §6 bandwidth-contended rebuild reduction.
+    cnt[b, node] = #{p : act[b, p] and rec[b, p] == node}.  A fori_loop of
+    (block_b, n_lanes) one-hot compare-accumulates over the partition
+    columns: pure VPU integer work with no scatter, so the result is
+    bit-identical to the numpy/jnp scatter-add implementations.  Ids
+    outside [0, n_lanes) never match a lane and ids in [n_real, n_lanes)
+    land in padding columns the wrapper slices off — both vanish, exactly
+    as the other backends mask them."""
+    block_b, n_lanes = cnt_ref.shape
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (block_b, n_lanes), 1)
+
+    def body(j, cnt):
+        rec_j = rec_ref[:, pl.ds(j, 1)]               # (block_b, 1)
+        act_j = act_ref[:, pl.ds(j, 1)].astype(jnp.int32)
+        return cnt + jnp.where(lanes == rec_j, act_j, 0)
+
+    cnt_ref[...] = jax.lax.fori_loop(
+        0, P, body, jnp.zeros((block_b, n_lanes), dtype=jnp.int32))
+
+
+def _node_count_block_b(B: int) -> int:
+    """Largest power-of-two row-block <= 8 that divides the trial count
+    (trials per device are small; 8 keeps the (block_b, P) tile under the
+    VMEM budget at the paper's P=4096)."""
+    bb = 1
+    while bb < 8 and B % (bb * 2) == 0:
+        bb *= 2
+    return bb
+
+
+def node_count(recruit, active, *, n_real: int, interpret: bool = False,
+               block_b: int = 0):
+    """recruit (B, P) int32 node ids, active (B, P) bool ->
+    (B, n_lanes) int32 per-node counts (columns >= n_real are padding the
+    caller slices off; see ops.rebuild_node_counts)."""
+    B, P = recruit.shape
+    n_lanes = n_real + (-n_real % 128)
+    ppad = -P % 128                    # partition axis to a lane multiple
+    if ppad:
+        # pad columns carry an id no lane matches and are inactive anyway
+        recruit = jnp.pad(recruit, ((0, 0), (0, ppad)),
+                          constant_values=n_lanes)
+        active = jnp.pad(active, ((0, 0), (0, ppad)))
+    block_b = block_b or _node_count_block_b(B)
+    if B % block_b:
+        raise ValueError(f"block_b={block_b} must tile the trial count "
+                         f"B={B} exactly")
+    kernel = functools.partial(_node_count_kernel, P=P + ppad)
+    return pl.pallas_call(
+        kernel,
+        grid=(B // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, P + ppad), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, P + ppad), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, n_lanes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, n_lanes), jnp.int32),
+        interpret=interpret,
+    )(recruit.astype(jnp.int32), active)
+
+
 def downtime_eval(up_succ, full_succ, *, rf: int, n_real: int,
                   block_p: int = 256, interpret: bool = False,
                   roster=None):

@@ -80,3 +80,26 @@ def downtime_eval_rank_np(up_succ, full_succ, *, rf: int, n_real: int,
     leader_full = ((full & up) & (lanes[None, :] == leader[:, None])) \
         .any(axis=1)
     return lark, qmaj, leader, leader_full, nrep, creps
+
+
+def rebuild_node_counts_np(recruit, active, *, n_real: int):
+    """(B, P) recruit node ids + (B, P) active mask -> (B, n_real) int32.
+
+    counts[b, node] = number of partitions in trial b whose active
+    catch-up is ingesting on `node` — the per-node reduction behind the
+    downtime engine's bandwidth-contended rebuild model (§6).  Ids outside
+    [0, n_real) (the engine's no-recruit sentinel) and inactive entries
+    contribute nothing.  The reduction never crosses trials (rows), so it
+    commutes with trials-axis sharding.
+    """
+    recruit = np.asarray(recruit)
+    active = np.asarray(active, dtype=bool)
+    if recruit.shape != active.shape or recruit.ndim != 2:
+        raise ValueError(f"recruit/active must share a (B, P) shape; got "
+                         f"{recruit.shape} vs {active.shape}")
+    ok = active & (recruit >= 0) & (recruit < n_real)
+    counts = np.zeros((recruit.shape[0], n_real), dtype=np.int32)
+    rows = np.arange(recruit.shape[0])[:, None]
+    np.add.at(counts, (rows, np.clip(recruit, 0, n_real - 1)),
+              ok.astype(np.int32))
+    return counts

@@ -11,6 +11,8 @@ Contents
   downtime_eval_rank_ref rank-space per-step protocol eval for the §6
                          downtime engine (PAC + quorum-log replica set +
                          acting leader)
+  rebuild_node_counts_ref per-node in-flight rebuild counts (oracle for
+                         the bandwidth-contended rebuild reduction)
 """
 from __future__ import annotations
 
@@ -225,6 +227,20 @@ def downtime_eval_rank_ref(up_succ, full_succ, *, rf: int, n_real: int,
     leader_full = jnp.any((full & up) & (lanes[None, :] == leader[:, None]),
                           axis=1)
     return lark, qmaj, leader, leader_full, nrep, creps
+
+
+def rebuild_node_counts_ref(recruit, active, *, n_real: int):
+    """Pure-jnp oracle of pac_np.rebuild_node_counts_np: (B, P) recruit
+    node ids + active mask -> (B, n_real) int32 per-node in-flight rebuild
+    counts.  A row-wise scatter-add — it reduces across *partitions* of
+    one trial, never across trials, which is why the downtime engine's
+    bandwidth model still commutes with trials-axis sharding."""
+    ok = active & (recruit >= 0) & (recruit < n_real)
+    idx = jnp.clip(recruit, 0, n_real - 1)
+    rows = jnp.arange(recruit.shape[0], dtype=jnp.int32)[:, None]
+    counts = jnp.zeros((recruit.shape[0], n_real), dtype=jnp.int32)
+    return counts.at[rows, idx].add(ok.astype(jnp.int32))
+
 
 def pac_eval_ref(up, succ, full, rf: int, *, voters: Optional[int] = None,
                  conditions: Tuple[str, ...] = ("simple_majority",)):

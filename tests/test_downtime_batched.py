@@ -10,11 +10,13 @@ import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
 from repro.core.availability_batched import simulate_availability_batched
-from repro.core.downtime_batched import (_hist_add, _partition_rebuild_ticks,
+from repro.core.downtime_batched import (SIZE_DISTS, _hist_add,
+                                         _partition_rebuild_ticks,
                                          partition_sizes_gib,
                                          simulate_downtime_batched)
 from repro.core.scenarios import get_scenario, scenario_names
-from repro.kernels.ops import PAC_BACKENDS, downtime_eval_batch
+from repro.kernels.ops import (PAC_BACKENDS, downtime_eval_batch,
+                               rebuild_node_counts)
 
 RNG = np.random.default_rng(17)
 
@@ -408,3 +410,266 @@ def test_reconfig_validation():
     with pytest.raises(ValueError, match="rebuild_ticks_per_gib"):
         simulate_downtime_batched(rebuild_model="reconfig",
                                   rebuild_ticks_per_gib=-1, **_KW)
+
+
+# ---------------------------------------------------------------------------
+# hot-partition size distributions
+# ---------------------------------------------------------------------------
+
+def test_size_dists_share_the_uniform_mean_budget():
+    """Every distribution pins the uniform model's 1.5 GiB mean: skew
+    redistributes bytes between partitions, never changes the total
+    dataset the §6 equal-storage comparison is about."""
+    for dist, skew in [("zipf", 0.0), ("zipf", 1.0), ("zipf", 2.5),
+                       ("lognormal", 0.0), ("lognormal", 1.5)]:
+        s = partition_sizes_gib(11, 1024, dist=dist, skew=skew)
+        assert s.shape == (1024,)
+        assert (s >= 0).all()
+        assert abs(s.mean() - 1.5) < 1e-12, (dist, skew)
+        assert np.array_equal(s, partition_sizes_gib(11, 1024, dist=dist,
+                                                     skew=skew))
+
+
+def test_uniform_dist_is_the_original_table_bit_for_bit():
+    base = partition_sizes_gib(11, 256)
+    assert np.array_equal(base, partition_sizes_gib(11, 256,
+                                                    dist="uniform"))
+    # the skew knob is inert under uniform
+    assert np.array_equal(base, partition_sizes_gib(11, 256,
+                                                    dist="uniform",
+                                                    skew=7.0))
+
+
+def test_zero_skew_collapses_to_constant_uniform_mean():
+    """Satellite: --size-skew 0 zipf matches the uniform moments — the
+    mean is *exactly* the uniform 1.5 GiB (every partition constant)."""
+    for dist in ("zipf", "lognormal"):
+        s = partition_sizes_gib(11, 256, dist=dist, skew=0.0)
+        assert (s == 1.5).all(), dist
+
+
+def test_skew_produces_hot_partitions_and_sub_gib_tails():
+    uni = partition_sizes_gib(11, 2048, dist="uniform")
+    zipf = partition_sizes_gib(11, 2048, dist="zipf", skew=1.0)
+    logn = partition_sizes_gib(11, 2048, dist="lognormal", skew=1.0)
+    for s in (zipf, logn):
+        assert s.max() > uni.max()        # a few hot partitions...
+        assert (s < 1.0).mean() > 0.25    # ...push the bulk below 1 GiB
+    # more skew = hotter head, at the same total
+    zipf2 = partition_sizes_gib(11, 2048, dist="zipf", skew=2.0)
+    assert zipf2.max() > zipf.max()
+
+
+def test_size_dist_validation():
+    with pytest.raises(ValueError, match="dist"):
+        partition_sizes_gib(11, 64, dist="pareto")
+    with pytest.raises(ValueError, match="skew"):
+        partition_sizes_gib(11, 64, dist="zipf", skew=-0.5)
+    # skews past the float64 overflow point are rejected, not NaN-poisoned
+    with pytest.raises(ValueError, match="skew"):
+        partition_sizes_gib(11, 64, dist="zipf", skew=100.0)
+    with pytest.raises(ValueError, match="size_skew"):
+        simulate_downtime_batched(rebuild_model="reconfig",
+                                  size_dist="zipf", size_skew=100.0, **_KW)
+    with pytest.raises(ValueError, match="size_dist"):
+        simulate_downtime_batched(rebuild_model="reconfig",
+                                  size_dist="pareto", **_KW)
+    # the skew/bandwidth knobs describe reconfig catch-ups only
+    with pytest.raises(ValueError, match="reconfig"):
+        simulate_downtime_batched(size_dist="zipf", **_KW)
+    with pytest.raises(ValueError, match="reconfig"):
+        simulate_downtime_batched(node_bandwidth_gibps=1.0, **_KW)
+    with pytest.raises(ValueError, match="node_bandwidth_gibps"):
+        simulate_downtime_batched(rebuild_model="reconfig",
+                                  node_bandwidth_gibps=0.0, **_KW)
+    # below the 1/256 fixed-point quantum every catch-up would round to
+    # zero progress and silently never finish — rejected, not degenerate
+    with pytest.raises(ValueError, match="quantum"):
+        simulate_downtime_batched(rebuild_model="reconfig",
+                                  node_bandwidth_gibps=0.003, **_KW)
+    simulate_downtime_batched(rebuild_model="reconfig",
+                              node_bandwidth_gibps=1.0 / 256, **_KW)
+    assert "uniform" in SIZE_DISTS and "zipf" in SIZE_DISTS
+
+
+def test_sub_gib_countdowns_clamp_to_one_tick():
+    """Satellite: skewed draws go below 1 GiB; a catch-up of any size
+    still costs at least one tick (ticks_per_gib > 0), while a free
+    rebuild (ticks_per_gib == 0) stays free."""
+    sizes = partition_sizes_gib(11, 2048, dist="zipf", skew=2.0)
+    assert (sizes * 100 < 1.0).any()      # sub-tick raw countdowns exist
+    t = _partition_rebuild_ticks(11, 2048, 100, dist="zipf", skew=2.0)
+    assert t.dtype == np.int32
+    assert (t >= 1).all()
+    assert (t == 1).any()                 # the clamp actually fired
+    assert (_partition_rebuild_ticks(11, 2048, 0, dist="zipf",
+                                     skew=2.0) == 0).all()
+    # the cap keeps huge hot-partition countdowns in int32 territory
+    capped = _partition_rebuild_ticks(11, 2048, 10**6, dist="zipf",
+                                      skew=2.5, cap=4_001)
+    assert capped.max() == 4_001
+
+
+def test_one_tick_rebuilds_bin_into_the_first_bucket():
+    """Edge-binning satellite: with every partition sub-GiB enough that
+    its clamped countdown is exactly 1 tick, completed single-loss
+    quorum pauses are real 1-tick pauses — counted in bucket [1, 2),
+    never dropped with the zero-length runs."""
+    kw = dict(n=12, partitions=32, rf=3, p=1e-3, trials=2, max_ticks=20_000,
+              min_ticks=10**9, seed=7, backend="numpy", dupres_ticks=0,
+              rebuild_model="reconfig", rebuild_ticks_per_gib=1,
+              size_dist="zipf", size_skew=3.0)
+    t = _partition_rebuild_ticks(7, 32, 1, dist="zipf", skew=3.0)
+    assert (t == 1).mean() > 0.7          # the bulk clamps to one tick
+    assert (1 * partition_sizes_gib(7, 32, dist="zipf",
+                                    skew=3.0) < 1).any()
+    r = simulate_downtime_batched(**kw)
+    assert int(r.hist_quorum.sum()) > 0
+    assert r.hist_quorum[0] > 0           # mass in [1, 2)
+
+
+# ---------------------------------------------------------------------------
+# the per-node reduction op (bandwidth-contended rebuilds)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,P,n_real", [(3, 32, 13), (4, 100, 31)])
+def test_rebuild_node_counts_backends_agree(B, P, n_real):
+    rec = RNG.integers(0, n_real + 1, (B, P)).astype(np.int32)  # incl sentinel
+    act = RNG.random((B, P)) < 0.4
+    outs = {}
+    for b in PAC_BACKENDS:
+        r = rec if b == "numpy" else jnp.asarray(rec)
+        a = act if b == "numpy" else jnp.asarray(act)
+        outs[b] = np.asarray(rebuild_node_counts(r, a, n_real=n_real,
+                                                 backend=b))
+    exp = np.zeros((B, n_real), np.int32)
+    for i in range(B):
+        for p_ in range(P):
+            if act[i, p_] and rec[i, p_] < n_real:
+                exp[i, rec[i, p_]] += 1
+    for b in PAC_BACKENDS:
+        assert np.array_equal(outs[b], exp), b
+    # inactive partitions and sentinel/out-of-range ids contribute nothing
+    assert outs["numpy"].sum() == int((act & (rec < n_real)).sum())
+
+
+def test_rebuild_node_counts_never_crosses_trials():
+    """The reduction that makes bandwidth contention work is per-trial:
+    permuting whole trial rows permutes the output rows and nothing
+    else — the property that lets trials-axis sharding commute with it."""
+    rec = RNG.integers(0, 9, (4, 64)).astype(np.int32)
+    act = RNG.random((4, 64)) < 0.5
+    base = rebuild_node_counts(rec, act, n_real=8, backend="numpy")
+    perm = np.array([2, 0, 3, 1])
+    swapped = rebuild_node_counts(rec[perm], act[perm], n_real=8,
+                                  backend="numpy")
+    assert np.array_equal(swapped, base[perm])
+
+
+# ---------------------------------------------------------------------------
+# bandwidth-contended rebuilds (engine level)
+# ---------------------------------------------------------------------------
+
+_SKEW_KW = dict(_KW, rebuild_model="reconfig", rebuild_ticks_per_gib=64,
+                size_dist="zipf", size_skew=1.2, node_bandwidth_gibps=1.0)
+
+
+def test_skewed_contended_trajectory_identical_across_backends():
+    """The full tentpole configuration — zipf sizes + per-node bandwidth
+    sharing — stays bit-identical across numpy / jax / pallas-interpret
+    (the contention rate math is pure int32 fixed-point)."""
+    results = {b: simulate_downtime_batched(backend=b, **_SKEW_KW)
+               for b in PAC_BACKENDS}
+    base = results[PAC_BACKENDS[0]]
+    for b in PAC_BACKENDS[1:]:
+        r = results[b]
+        for k in base.trajectory:
+            assert np.array_equal(base.trajectory[k], r.trajectory[k]), \
+                (b, k)
+        assert r.pause_lark == base.pause_lark
+        assert r.pause_quorum == base.pause_quorum
+        assert np.array_equal(r.hist_quorum, base.hist_quorum)
+        assert r.quorum_events == base.quorum_events
+    assert base.size_dist == "zipf"
+    assert base.node_bandwidth_gibps == 1.0
+
+
+def test_infinite_bandwidth_is_the_unshared_model_bit_for_bit():
+    """Satellite degenerate limit: --size-dist uniform
+    --node-bandwidth-gibps inf is the PR-4 reconfig baseline (the
+    committed BENCH_downtime_reconfig.json pins the same thing at sweep
+    scale, across devices 1 vs 8)."""
+    import math
+    kw = dict(_KW, rebuild_model="reconfig", rebuild_ticks_per_gib=64)
+    base = simulate_downtime_batched(**kw)
+    expl = simulate_downtime_batched(size_dist="uniform",
+                                     node_bandwidth_gibps=math.inf, **kw)
+    for k in base.trajectory:
+        assert np.array_equal(base.trajectory[k], expl.trajectory[k]), k
+    assert base.pause_lark == expl.pause_lark
+    assert base.pause_quorum == expl.pause_quorum
+    assert np.array_equal(base.hist_quorum, expl.hist_quorum)
+    assert np.array_equal(base.hist_lark, expl.hist_lark)
+    assert base.quorum_events == expl.quorum_events
+    assert base.node_bandwidth_gibps == math.inf
+    assert base.size_skew == 0.0          # knob inert under uniform
+
+
+def test_zero_skew_zipf_matches_uniform_within_ci():
+    """Satellite: zipf at skew 0 (constant 1.5 GiB) must land within the
+    runs' combined CI of the uniform baseline — same mean catch-up cost,
+    same trajectories, only the per-partition spread differs."""
+    kw = dict(_KW, rebuild_model="reconfig", rebuild_ticks_per_gib=64)
+    uni = simulate_downtime_batched(**kw)
+    z0 = simulate_downtime_batched(size_dist="zipf", size_skew=0.0, **kw)
+    assert np.array_equal(uni.trajectory["times"], z0.trajectory["times"])
+    assert z0.pause_lark == uni.pause_lark         # LARK has no sizes
+    assert abs(z0.pause_quorum - uni.pause_quorum) <= \
+        uni.ci_quorum + z0.ci_quorum
+
+
+def test_bandwidth_contention_only_adds_quorum_pause():
+    """Sharing a recruit's ingest bandwidth can only stretch catch-ups:
+    quorum pause is monotone down in bandwidth, per trial, and LARK —
+    which rebuilds nothing — is bit-identical at every setting."""
+    kw = dict(_KW, rebuild_model="reconfig", rebuild_ticks_per_gib=64,
+              size_dist="zipf", size_skew=1.2)
+    inf_r = simulate_downtime_batched(**kw)
+    bw2 = simulate_downtime_batched(node_bandwidth_gibps=2.0, **kw)
+    bw1 = simulate_downtime_batched(node_bandwidth_gibps=1.0, **kw)
+    assert bw1.pause_quorum >= bw2.pause_quorum >= inf_r.pause_quorum
+    assert bw1.pause_quorum > inf_r.pause_quorum   # contention really bites
+    assert (bw1.pause_quorum_trials >= inf_r.pause_quorum_trials).all()
+    for r in (bw1, bw2):
+        assert r.pause_lark == inf_r.pause_lark
+        assert np.array_equal(r.hist_lark, inf_r.hist_lark)
+        assert np.array_equal(r.trajectory["paused_lark"],
+                              inf_r.trajectory["paused_lark"])
+        assert np.array_equal(r.trajectory["times"],
+                              inf_r.trajectory["times"])
+
+
+def test_skew_plus_contention_heavier_pause_tail():
+    """The acceptance criterion at test scale: zipf sizes + unit
+    bandwidth shift quorum pause-duration mass into strictly higher
+    power-of-two buckets than the uniform/inf baseline on the same
+    trajectory (hot partitions rebuild for longer, and concurrent
+    catch-ups serialize)."""
+    kw = dict(_KW, rebuild_model="reconfig", rebuild_ticks_per_gib=64)
+    base = simulate_downtime_batched(**kw)
+    skew = simulate_downtime_batched(size_dist="zipf", size_skew=1.2,
+                                     node_bandwidth_gibps=1.0, **kw)
+    top = lambda h: max(i for i, v in enumerate(h) if v)
+    assert top(skew.hist_quorum) > top(base.hist_quorum)
+    cut = top(base.hist_quorum)
+    assert skew.hist_quorum[cut:].sum() > base.hist_quorum[cut:].sum()
+
+
+def test_shard_map_path_identical_with_bandwidth_contention():
+    plain = simulate_downtime_batched(backend="jax", **_SKEW_KW)
+    mesh1 = simulate_downtime_batched(backend="jax", devices=1,
+                                      use_shard_map=True, **_SKEW_KW)
+    for k in plain.trajectory:
+        assert np.array_equal(plain.trajectory[k], mesh1.trajectory[k]), k
+    assert plain.pause_quorum == mesh1.pause_quorum
+    assert np.array_equal(plain.hist_quorum, mesh1.hist_quorum)

@@ -58,6 +58,134 @@ def test_real_time_order_enforced():
 
 
 # ---------------------------------------------------------------------------
+# adversarial histories: crafted schedules the checker must reject
+# ---------------------------------------------------------------------------
+
+def test_read_of_never_written_value_rejected():
+    ops = [Op(1, "write", "a", 0, 1, True),
+           Op(2, "read", "ghost", 2, 3, True)]
+    assert not check_linearizable(ops)
+
+
+def test_initial_value_cannot_reappear_after_mandatory_write():
+    ops = [Op(1, "write", "a", 0, 1, True), Op(2, "read", None, 2, 3, True)]
+    assert not check_linearizable(ops)
+    # ...but observing the initial value before the write is fine
+    assert check_linearizable([Op(2, "read", None, 0, 1, True),
+                               Op(1, "write", "a", 2, 3, True)])
+
+
+def test_fresh_then_stale_read_rejected():
+    """Once any reader observed the newer version, the older one is gone
+    for good — a later read of it has no linearization point."""
+    ops = [Op(1, "write", "a", 0, 1, True), Op(2, "write", "b", 2, 3, True),
+           Op(3, "read", "b", 4, 5, True), Op(4, "read", "a", 6, 7, True)]
+    assert not check_linearizable(ops)
+
+
+def test_readers_cannot_disagree_on_concurrent_write_order():
+    """Two writes race; both complete before any read.  Sequential
+    readers then observing a-then-b would need the second write to
+    linearize between the two reads — after its response — so no total
+    order exists."""
+    ops = [Op(1, "write", "a", 0, 10, True), Op(2, "write", "b", 0, 10, True),
+           Op(3, "read", "a", 11, 12, True), Op(4, "read", "b", 13, 14, True)]
+    assert not check_linearizable(ops)
+
+
+def test_interleaved_overlap_has_a_witness_order():
+    """Contrast case: while a write is still in flight, readers may
+    straddle it — same observations as above become legal when the
+    second write's interval covers the second read."""
+    ops = [Op(1, "write", "a", 0, 10, True), Op(2, "write", "b", 0, 14, True),
+           Op(3, "read", "a", 11, 12, True), Op(4, "read", "b", 13, 14, True)]
+    assert check_linearizable(ops)
+
+
+# ---------------------------------------------------------------------------
+# duplicate-resolution reorderings (LARK's optional-write semantics)
+# ---------------------------------------------------------------------------
+
+def test_failed_write_may_win_duplicate_resolution_later():
+    """A client-visible write failure whose replica later wins dup-res:
+    the value surfaces to a subsequent read, and that is linearizable —
+    the optional op linearizes inside its interval."""
+    ops = [Op(1, "write", "a", 0, 1, True),
+           Op(2, "write", "b", 2, INF, False),     # failed at the client
+           Op(3, "read", "b", 5, 6, True)]
+    assert check_linearizable(ops)
+
+
+def test_resurfaced_failed_write_cannot_unapply():
+    """Dup-res reordering limit: once the failed write's version was
+    observed, a later read cannot roll back to the pre-failure value."""
+    ops = [Op(1, "write", "a", 0, 1, True),
+           Op(2, "write", "b", 2, INF, False),
+           Op(3, "read", "b", 5, 6, True),
+           Op(4, "read", "a", 7, 8, True)]
+    assert not check_linearizable(ops)
+
+
+def test_indeterminate_write_cannot_take_effect_before_invocation():
+    ops = [Op(1, "write", "a", 0, 1, True),
+           Op(2, "read", "b", 3, 4, True),
+           Op(3, "write", "b", 5, INF, False)]     # invoked after the read
+    assert not check_linearizable(ops)
+
+
+def test_two_failed_writes_resolve_in_either_order():
+    """Two dup-res candidates with open intervals: reads may observe
+    them in whichever order resolution picked — both orders have a
+    witness, including one value being dropped entirely."""
+    base = [Op(1, "write", "a", 0, 1, True),
+            Op(2, "write", "b", 2, INF, False),
+            Op(3, "write", "c", 3, INF, False)]
+    assert check_linearizable(base + [Op(4, "read", "b", 10, 11, True),
+                                      Op(5, "read", "c", 12, 13, True)])
+    assert check_linearizable(base + [Op(4, "read", "c", 10, 11, True),
+                                      Op(5, "read", "b", 12, 13, True)])
+    assert check_linearizable(base + [Op(4, "read", "c", 10, 11, True)])
+    # but an observed resolution still pins real-time order afterwards
+    assert not check_linearizable(base +
+                                  [Op(4, "read", "c", 10, 11, True),
+                                   Op(5, "read", "b", 12, 13, True),
+                                   Op(6, "read", "c", 14, 15, True)])
+
+
+# ---------------------------------------------------------------------------
+# property: sequential histories are always linearizable
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=0, max_value=10 ** 6))
+def test_random_sequential_histories_linearizable(seed):
+    """Any non-overlapping history whose reads return the latest
+    completed write (with optional writes either applied at their slot
+    or dropped) has the trivial witness order — the checker must accept
+    every one of them, regardless of op-list order."""
+    rng = random.Random(seed)
+    t, last, ops, vcount = 0.0, None, [], 0
+    for i in range(rng.randint(1, 12)):
+        t += 1.0
+        roll = rng.random()
+        if roll < 0.45:
+            vcount += 1
+            ops.append(Op(i, "write", f"v{vcount}", t, t + 0.5, True))
+            last = f"v{vcount}"
+        elif roll < 0.6:
+            vcount += 1
+            applied = rng.random() < 0.5       # dup-res keeps or drops it
+            ops.append(Op(i, "write", f"v{vcount}", t,
+                          t + 0.5 if rng.random() < 0.5 else INF, False))
+            if applied:
+                last = f"v{vcount}"
+        else:
+            ops.append(Op(i, "read", last, t, t + 0.5, True))
+    rng.shuffle(ops)                            # checker is order-free
+    assert check_linearizable(ops)
+
+
+# ---------------------------------------------------------------------------
 # randomized protocol schedules
 # ---------------------------------------------------------------------------
 

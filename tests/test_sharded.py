@@ -84,6 +84,58 @@ def test_eight_device_run_bit_identical_to_single():
 
 
 @pytest.mark.slow
+def test_eight_device_bandwidth_contended_run_bit_identical():
+    """The bandwidth-contended reconfig model specifically: its per-node
+    in-flight-rebuild scatter-add is the engine's first cross-partition
+    coupling inside a step, so this pins that the reduction still
+    commutes with trials-axis sharding — devices 8 == devices 4 ==
+    devices 1, bit for bit, and the sharded jax run equals the
+    unsharded numpy and pallas-interpret runs."""
+    script = textwrap.dedent("""
+        import numpy as np
+        from repro.core.downtime_batched import simulate_downtime_batched
+        kw = dict(n=13, partitions=32, rf=2, p=5e-3, trials=8,
+                  max_ticks=4_000, min_ticks=10**9, chunk_steps=64,
+                  max_steps=600, seed=11, trajectory=True,
+                  pair_fail_prob=0.3, restart_period=900,
+                  rebuild_model="reconfig", rebuild_ticks_per_gib=64,
+                  size_dist="zipf", size_skew=1.2,
+                  node_bandwidth_gibps=1.0)
+        r1 = simulate_downtime_batched(backend="jax", devices=1, **kw)
+        for backend in ("numpy", "pallas"):
+            rb = simulate_downtime_batched(backend=backend, devices=1,
+                                           **kw)
+            for k in r1.trajectory:
+                assert np.array_equal(r1.trajectory[k],
+                                      rb.trajectory[k]), (backend, k)
+            assert r1.pause_quorum == rb.pause_quorum
+            assert np.array_equal(r1.hist_quorum, rb.hist_quorum)
+        for d in (4, 8):
+            rd = simulate_downtime_batched(backend="jax", devices=d, **kw)
+            for k in r1.trajectory:
+                assert np.array_equal(r1.trajectory[k],
+                                      rd.trajectory[k]), (d, k)
+            assert r1.pause_lark == rd.pause_lark
+            assert r1.pause_quorum == rd.pause_quorum
+            assert np.array_equal(r1.hist_lark, rd.hist_lark)
+            assert np.array_equal(r1.hist_quorum, rd.hist_quorum)
+            assert r1.lark_events == rd.lark_events
+            assert r1.quorum_events == rd.quorum_events
+            assert np.array_equal(r1.pause_quorum_trials,
+                                  rd.pause_quorum_trials)
+        print("OK")
+    """)
+    env = dict(os.environ,
+               JAX_PLATFORMS="cpu",
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=str(Path(__file__).resolve().parents[1] / "src"))
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr
+    assert "OK" in out.stdout
+
+
+@pytest.mark.slow
 def test_eight_device_downtime_run_bit_identical_to_single():
     """The §6 engine under the same acceptance criterion, for BOTH
     quorum-log rebuild models: pause fractions, histograms, and
