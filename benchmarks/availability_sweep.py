@@ -56,8 +56,7 @@ from repro.core.analytical import (improvement_factor, lark_unavailability,
                                    node_unavailability)
 from repro.core.availability import simulate_availability
 from repro.core.availability_batched import simulate_availability_batched
-from repro.core.downtime_batched import (_REB_SCALE, _SIZE_SKEW_MAX,
-                                         SIZE_DISTS,
+from repro.core.downtime_batched import (SIZE_DISTS, DowntimeParams,
                                          simulate_downtime_batched)
 from repro.core.scenarios import get_scenario, scenario_names
 
@@ -102,11 +101,34 @@ def _batched_backend(backend: str, devices: int):
 
 def _autotune_row(n: int, parts: int, trials: int, devices: int, *,
                   metric: str = "availability", rf: int = 2,
-                  rebuild_model: str = "fixed"):
-    """Race block_p candidates on the per-device sweep tile shape, timing
-    the kernel the grid will actually run: pac_eval for the availability
-    metric, downtime_eval (or its roster-carrying reconfig variant) for
-    --metric downtime — at the grid's rf, not a hardcoded rf=2/voters=3."""
+                  rebuild_model: str = "fixed", packed: bool = False):
+    """Race kernel block candidates on the per-device sweep tile shape,
+    timing the kernel the grid will actually run — at the grid's rf, not
+    a hardcoded rf=2/voters=3.  Unpacked: the 1-D block_p race over
+    pac_eval / downtime_eval (or its roster-carrying reconfig variant).
+    --packed: the 2-D (block_t x block_p) race over the fused step
+    megakernel of the same metric/model (the tagged cache keys guarantee
+    the two families can never return each other's entries).  Returns
+    (block_p, block_t, row); block_t is None for the unpacked race."""
+    voters = 2 * (rf - 1) + 1
+    if packed:
+        from repro.kernels.ops import autotune_fused_blocks
+        if metric == "downtime":
+            kernel = "fused_downtime_roster" if rebuild_model == "reconfig" \
+                else "fused_downtime"
+        else:
+            kernel = "fused_pac"
+        res = autotune_fused_blocks(trials // devices, parts, n, rf=rf,
+                                    voters=voters, n_real=n, kernel=kernel)
+        row = {"kind": "autotune", "block_p": res.block_p,
+               "block_t": res.block_t, "source": res.source,
+               "kernel": kernel, "rf": rf,
+               "timings_us": {f"{bt}x{bp}": v
+                              for (bt, bp), v in res.timings_us.items()}}
+        print(f"autotune,fused_blocks,0,choice={res.block_t}x{res.block_p};"
+              f"source={res.source};kernel={kernel};rf={rf};"
+              f"candidates={len(res.timings_us)}")
+        return res.block_p, res.block_t, row
     from repro.kernels.ops import autotune_block_p
     R = (trials // devices) * parts
     if metric == "downtime":
@@ -114,18 +136,19 @@ def _autotune_row(n: int, parts: int, trials: int, devices: int, *,
             else "downtime"
     else:
         kernel = "pac"
-    res = autotune_block_p(R, n, rf=rf, voters=2 * (rf - 1) + 1, n_real=n,
+    res = autotune_block_p(R, n, rf=rf, voters=voters, n_real=n,
                            kernel=kernel)
     row = {"kind": "autotune", "block_p": res.block_p, "source": res.source,
            "kernel": kernel, "rf": rf,
            "timings_us": {str(k): v for k, v in res.timings_us.items()}}
     print(f"autotune,block_p,0,choice={res.block_p};source={res.source};"
           f"kernel={kernel};rf={rf};candidates={len(res.timings_us)}")
-    return res.block_p, row
+    return res.block_p, None, row
 
 
 def run(full: bool = False, seeds=(0,), backend: str = "event",
-        devices: int = 1, smoke: bool = False, pac_block_p=None):
+        devices: int = 1, smoke: bool = False, pac_block_p=None,
+        packed: bool = False, block_t=None):
     grid = _iid_grid(full, smoke)
     n, parts, max_ticks, min_ticks = _run_scale(full, smoke, scenario=False)
     rows = []
@@ -153,7 +176,8 @@ def run(full: bool = False, seeds=(0,), backend: str = "event",
             r = simulate_availability_batched(
                 n=n, partitions=parts, rf=rf, p=p, trials=len(seeds),
                 max_ticks=max_ticks, min_ticks=min_ticks, seed=min(seeds),
-                backend=backend, devices=devices, pac_block_p=pac_block_p)
+                backend=backend, devices=devices, pac_block_p=pac_block_p,
+                packed=packed, block_t=block_t)
             u_l, u_m, ticks = r.u_lark, r.u_maj, r.ticks
             ci_l, ci_m = r.ci_lark, r.ci_maj
         f = rf - 1
@@ -170,7 +194,8 @@ def run(full: bool = False, seeds=(0,), backend: str = "event",
 
 def run_scenarios(names, full: bool = False, trials: int = 4,
                   backend: str = "jax", seed: int = 0, devices: int = 1,
-                  smoke: bool = False, pac_block_p=None):
+                  smoke: bool = False, pac_block_p=None,
+                  packed: bool = False, block_t=None):
     backend, devices = _batched_backend(backend, devices)
     n, parts, max_ticks, min_ticks = _run_scale(full, smoke, scenario=True)
     rows = []
@@ -181,6 +206,7 @@ def run_scenarios(names, full: bool = False, trials: int = 4,
                 n=n, partitions=parts, rf=rf, p=p, trials=trials,
                 max_ticks=max_ticks, min_ticks=min_ticks, seed=seed,
                 backend=backend, devices=devices, pac_block_p=pac_block_p,
+                packed=packed, block_t=block_t,
                 **sc.kwargs(n=n, rf=rf, p=p))
             rows.append({
                 "kind": "scenario", "scenario": name, "rf": rf, "p": p,
@@ -214,12 +240,13 @@ def _downtime_row(r, *, kind: str, scenario: str):
 
 def run_downtime(full: bool = False, trials: int = 4, backend: str = "jax",
                  seed: int = 0, devices: int = 1, smoke: bool = False,
-                 pac_block_p=None, dupres_ticks: int = 1,
-                 rebuild_steps: int = 100, rebuild_model: str = "fixed",
-                 rebuild_ticks_per_gib: int = 100,
-                 size_dist: str = "uniform", size_skew: float = 1.0,
-                 node_bandwidth_gibps: float = math.inf):
-    """§6 commit-pause rows over the i.i.d. grid."""
+                 pac_block_p=None,
+                 params: DowntimeParams = DowntimeParams(),
+                 packed: bool = False, block_t=None):
+    """§6 commit-pause rows over the i.i.d. grid.  The protocol/rebuild
+    knobs travel as one pre-validated DowntimeParams — main() builds it
+    exactly once from the CLI flags, so every invalid combination is
+    rejected in one place (the dataclass) before any engine runs."""
     backend, devices = _batched_backend(backend, devices)
     grid = _iid_grid(full, smoke)
     n, parts, max_ticks, min_ticks = _run_scale(full, smoke, scenario=False)
@@ -229,11 +256,7 @@ def run_downtime(full: bool = False, trials: int = 4, backend: str = "jax",
             n=n, partitions=parts, rf=rf, p=p, trials=trials,
             max_ticks=max_ticks, min_ticks=min_ticks, seed=seed,
             backend=backend, devices=devices, pac_block_p=pac_block_p,
-            dupres_ticks=dupres_ticks, rebuild_steps=rebuild_steps,
-            rebuild_model=rebuild_model,
-            rebuild_ticks_per_gib=rebuild_ticks_per_gib,
-            size_dist=size_dist, size_skew=size_skew,
-            node_bandwidth_gibps=node_bandwidth_gibps)
+            params=params, packed=packed, block_t=block_t)
         rows.append(_downtime_row(r, kind="downtime", scenario="iid"))
     return rows
 
@@ -241,13 +264,9 @@ def run_downtime(full: bool = False, trials: int = 4, backend: str = "jax",
 def run_downtime_scenarios(names, full: bool = False, trials: int = 4,
                            backend: str = "jax", seed: int = 0,
                            devices: int = 1, smoke: bool = False,
-                           pac_block_p=None, dupres_ticks: int = 1,
-                           rebuild_steps: int = 100,
-                           rebuild_model: str = "fixed",
-                           rebuild_ticks_per_gib: int = 100,
-                           size_dist: str = "uniform",
-                           size_skew: float = 1.0,
-                           node_bandwidth_gibps: float = math.inf):
+                           pac_block_p=None,
+                           params: DowntimeParams = DowntimeParams(),
+                           packed: bool = False, block_t=None):
     backend, devices = _batched_backend(backend, devices)
     n, parts, max_ticks, min_ticks = _run_scale(full, smoke, scenario=True)
     rows = []
@@ -258,11 +277,7 @@ def run_downtime_scenarios(names, full: bool = False, trials: int = 4,
                 n=n, partitions=parts, rf=rf, p=p, trials=trials,
                 max_ticks=max_ticks, min_ticks=min_ticks, seed=seed,
                 backend=backend, devices=devices, pac_block_p=pac_block_p,
-                dupres_ticks=dupres_ticks, rebuild_steps=rebuild_steps,
-                rebuild_model=rebuild_model,
-                rebuild_ticks_per_gib=rebuild_ticks_per_gib,
-                size_dist=size_dist, size_skew=size_skew,
-                node_bandwidth_gibps=node_bandwidth_gibps,
+                params=params, packed=packed, block_t=block_t,
                 **sc.kwargs(n=n, rf=rf, p=p))
             rows.append(_downtime_row(r, kind="downtime_scenario",
                                       scenario=name))
@@ -342,8 +357,14 @@ def main(argv=None, *, strict: bool = True):
                     help="legacy alias for --scenario all")
     ap.add_argument("--scenarios-only", action="store_true",
                     help="skip the i.i.d. grid (scenario rows only)")
+    ap.add_argument("--packed", action="store_true",
+                    help="carry cluster state as bit-packed uint32 words; "
+                         "on --backend pallas every step runs the fused "
+                         "megakernel (bit-identical to unpacked)")
     ap.add_argument("--autotune", action="store_true",
-                    help="race pallas block_p candidates before the sweep")
+                    help="race pallas kernel block candidates before the "
+                         "sweep (block_p; with --packed the 2-D fused "
+                         "block_t x block_p race)")
     ap.add_argument("--json", metavar="PATH",
                     help="also dump rows + CI half-widths as JSON")
     args, extra = ap.parse_known_args(argv if argv is not None
@@ -362,6 +383,9 @@ def main(argv=None, *, strict: bool = True):
     if args.autotune and args.backend != "pallas":
         ap.error("--autotune tunes the pallas kernel block size; "
                  "use --backend pallas")
+    if args.packed and args.backend == "event":
+        ap.error("--packed runs the batched engines; use --backend "
+                 "numpy, jax, or pallas")
     if args.metric != "downtime":
         if args.dupres_ticks is not None or args.rebuild_steps is not None \
                 or args.rebuild_model is not None \
@@ -404,20 +428,24 @@ def main(argv=None, *, strict: bool = True):
         args.size_skew = 1.0
     if args.node_bandwidth_gibps is None:
         args.node_bandwidth_gibps = math.inf
-    if args.dupres_ticks < 0 or args.rebuild_steps < 0 \
-            or args.rebuild_ticks_per_gib < 0:
-        ap.error("--dupres-ticks/--rebuild-steps/--rebuild-ticks-per-gib "
-                 "must be >= 0")
-    if not 0 <= args.size_skew <= _SIZE_SKEW_MAX:
-        ap.error(f"--size-skew must be in [0, {_SIZE_SKEW_MAX:g}] (larger "
-                 "exponents overflow the size table)")
-    if not args.node_bandwidth_gibps >= 1.0 / _REB_SCALE:
-        ap.error(f"--node-bandwidth-gibps must be >= 1/{_REB_SCALE}, the "
-                 "engine's fixed-point rate quantum (or 'inf')")
+    # the knob *values* are validated in exactly one place — the
+    # DowntimeParams dataclass the engine itself consumes — so the CLI,
+    # direct simulate_downtime_batched() calls, and the CI smoke lane
+    # all raise the identical errors
+    try:
+        dt_params = DowntimeParams(
+            dupres_ticks=args.dupres_ticks,
+            rebuild_steps=args.rebuild_steps,
+            rebuild_model=args.rebuild_model,
+            rebuild_ticks_per_gib=args.rebuild_ticks_per_gib,
+            size_dist=args.size_dist, size_skew=args.size_skew,
+            node_bandwidth_gibps=args.node_bandwidth_gibps)
+    except ValueError as e:
+        ap.error(str(e))
 
     names = _resolve_scenarios(args, ap)
     rows = []
-    pac_block_p = None
+    pac_block_p = block_t = None
     if args.autotune:
         n, parts = _grid_scale(args.full, args.smoke)
         # rf of the first row the sweep will actually run (scenario grid
@@ -426,21 +454,18 @@ def main(argv=None, *, strict: bool = True):
             tune_rf = get_scenario(names[0]).grid[0][0]
         else:
             tune_rf = _iid_grid(args.full, args.smoke)[0][0]
-        pac_block_p, row = _autotune_row(
+        pac_block_p, block_t, row = _autotune_row(
             n, parts, args.trials, args.devices, metric=args.metric,
-            rf=tune_rf, rebuild_model=args.rebuild_model)
+            rf=tune_rf, rebuild_model=args.rebuild_model,
+            packed=args.packed)
         rows.append(row)
 
     if args.metric == "downtime":
         common = dict(full=args.full, trials=args.trials,
                       backend=args.backend, devices=args.devices,
                       smoke=args.smoke, pac_block_p=pac_block_p,
-                      dupres_ticks=args.dupres_ticks,
-                      rebuild_steps=args.rebuild_steps,
-                      rebuild_model=args.rebuild_model,
-                      rebuild_ticks_per_gib=args.rebuild_ticks_per_gib,
-                      size_dist=args.size_dist, size_skew=args.size_skew,
-                      node_bandwidth_gibps=args.node_bandwidth_gibps)
+                      params=dt_params, packed=args.packed,
+                      block_t=block_t)
         if not args.scenarios_only:
             for r in run_downtime(**common):
                 rows.append(r)
@@ -459,7 +484,8 @@ def main(argv=None, *, strict: bool = True):
         if not args.scenarios_only:
             for r in run(full=args.full, seeds=tuple(range(args.trials)),
                          backend=args.backend, devices=args.devices,
-                         smoke=args.smoke, pac_block_p=pac_block_p):
+                         smoke=args.smoke, pac_block_p=pac_block_p,
+                         packed=args.packed, block_t=block_t):
                 rows.append(r)
                 print(f"availability,rf{r['rf']}_p{r['p']:g},0,"
                       f"u_lark={r['u_lark']:.3e};u_maj={r['u_maj']:.3e};"
@@ -471,7 +497,8 @@ def main(argv=None, *, strict: bool = True):
                                    backend=args.backend,
                                    devices=args.devices,
                                    smoke=args.smoke,
-                                   pac_block_p=pac_block_p):
+                                   pac_block_p=pac_block_p,
+                                   packed=args.packed, block_t=block_t):
                 rows.append(r)
                 print(f"availability_scenario,{r['scenario']}_rf{r['rf']}_"
                       f"p{r['p']:g},0,u_lark={r['u_lark']:.3e};"
@@ -480,7 +507,7 @@ def main(argv=None, *, strict: bool = True):
         meta = {"backend": args.backend, "trials": args.trials,
                 "devices": args.devices, "full": args.full,
                 "smoke": args.smoke, "scenarios": names,
-                "metric": args.metric}
+                "metric": args.metric, "packed": args.packed}
         if args.metric == "downtime":
             meta["rebuild_model"] = args.rebuild_model
             meta["size_dist"] = args.size_dist

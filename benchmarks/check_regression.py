@@ -34,6 +34,14 @@ semantic change that should come with a refreshed baseline:
         --devices 8 --metric downtime --smoke --rebuild-model reconfig \
         --size-dist zipf --size-skew 1 --node-bandwidth-gibps 1 \
         --scenario all --json benchmarks/BENCH_downtime_skew.json
+
+Fused-megakernel rows (--packed, bit-packed state + the fused pallas
+step kernel) are keyed identically to their unpacked counterparts ON
+PURPOSE: packing is layout-only, so a --packed run gated against an
+unpacked baseline must land at zero drift — the CI fused lane uses this
+as its bit-identity gate, and any nonzero drift on a fused row is a
+fusion bug, not noise.  Autotune rows (1-D block_p and the fused 2-D
+block_t x block_p race) carry kind "autotune" and are never gated.
 """
 from __future__ import annotations
 

@@ -1,9 +1,17 @@
 """Kernel micro-benchmarks: µs/call of the jnp oracle paths on CPU (the
 Pallas kernels themselves target TPU; interpret mode is not a timing proxy).
 
+The kernel_step_* rows time the same per-step evaluation through the
+unified kernels.ops.step_eval entry point in both layouts — boolean
+(R, n) tiles vs bit-packed (B, W, P) words — and the kernel_step_hbm_*
+rows print the analytic HBM bytes each layout's pipeline moves per step
+(ops.step_hbm_bytes): the fused megakernel's round-trip win, measurable
+on CPU because it is a pure function of the shapes.
+
 --autotune additionally races the Pallas PAC block_p candidates on the
 Monte Carlo tile shape (measured on TPU; deterministic heuristic fallback
-on CPU, where interpret-mode timings would measure the interpreter).
+on CPU, where interpret-mode timings would measure the interpreter), plus
+the fused megakernel's 2-D (block_t x block_p) race.
 """
 from __future__ import annotations
 
@@ -15,9 +23,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ref
-from repro.kernels.ops import (autotune_block_p, downtime_eval_batch,
-                               pac_eval_batch, rebuild_node_counts)
+from repro.kernels import bitpack, ref
+from repro.kernels.ops import (StepSpec, autotune_block_p,
+                               autotune_fused_blocks, step_eval,
+                               step_hbm_bytes)
 
 
 def _time(fn, *args, iters=5) -> float:
@@ -64,52 +73,80 @@ def main(argv=None, *, strict: bool = True):
     print(f"kernel_pac_ref,p4096n155,{_time(pc, up, full):.0f},per_tick_eval")
 
     # batched Monte Carlo tile: trials*partitions rows through the unified
-    # PAC backend layer (the availability_batched.py hot loop)
+    # step_eval entry point (the availability_batched.py hot loop)
     R = 8 * 4096
+    pac_spec = StepSpec(metric="availability", rf=3, voters=5, n_real=155)
     up_b = rng.random((R, 256)) < 0.95
     full_b = rng.random((R, 256)) < 0.3
-    pac_np = lambda u, f: pac_eval_batch(u, f, rf=3, voters=5, n_real=155,
-                                         backend="numpy")
+    pac_np = lambda u, f: step_eval(pac_spec, u, f, backend="numpy")
     print(f"kernel_pac_batch_numpy,r{R}n155,"
           f"{_time(pac_np, up_b, full_b):.0f},trials=8xp4096")
     upj, fullj = jnp.asarray(up_b), jnp.asarray(full_b)
-    pac_j = jax.jit(lambda u, f: pac_eval_batch(u, f, rf=3, voters=5,
-                                                n_real=155, backend="jax"))
+    pac_j = jax.jit(lambda u, f: step_eval(pac_spec, u, f, backend="jax"))
     print(f"kernel_pac_batch_jax,r{R}n155,"
           f"{_time(pac_j, upj, fullj):.0f},trials=8xp4096")
 
     # downtime engine per-step evaluation (PAC + quorum replica set +
     # acting leader) on the same Monte Carlo tile
-    dt_np = lambda u, f: downtime_eval_batch(u, f, rf=3, n_real=155,
-                                             backend="numpy")
+    dt_spec = StepSpec(metric="downtime", rf=3, n_real=155)
+    dt_np = lambda u, f: step_eval(dt_spec, u, f, backend="numpy")
     print(f"kernel_downtime_batch_numpy,r{R}n155,"
           f"{_time(dt_np, up_b, full_b):.0f},trials=8xp4096")
-    dt_j = jax.jit(lambda u, f: downtime_eval_batch(u, f, rf=3, n_real=155,
-                                                    backend="jax"))
+    dt_j = jax.jit(lambda u, f: step_eval(dt_spec, u, f, backend="jax"))
     print(f"kernel_downtime_batch_jax,r{R}n155,"
           f"{_time(dt_j, upj, fullj):.0f},trials=8xp4096")
 
     # roster-aware variant (the reconfiguring quorum-log baseline carries
     # per-partition replica-set ranks instead of the first-rf lanes)
+    rec_spec = StepSpec(metric="downtime", rf=3, n_real=155,
+                        rebuild_model="reconfig")
     roster = jnp.asarray(rng.integers(0, 155, (R, 3)), jnp.int32)
-    dt_r = jax.jit(lambda u, f, ro: downtime_eval_batch(
-        u, f, rf=3, n_real=155, backend="jax", roster=ro))
+    dt_r = jax.jit(lambda u, f, ro: step_eval(rec_spec, u, f, roster=ro,
+                                              backend="jax"))
     print(f"kernel_downtime_roster_jax,r{R}n155,"
           f"{_time(dt_r, upj, fullj, roster):.0f},trials=8xp4096")
 
     # per-node in-flight rebuild counts (the bandwidth-contended rebuild
-    # model's cross-partition reduction; trials x partitions -> nodes)
-    rec = rng.integers(0, 156, (8, 4096)).astype(np.int32)
-    act = rng.random((8, 4096)) < 0.1
-    nc_np = lambda r, a: rebuild_node_counts(r, a, n_real=155,
-                                             backend="numpy")
-    print(f"kernel_node_counts_numpy,b8p4096n155,"
-          f"{_time(nc_np, rec, act):.0f},scatter_add")
+    # model's cross-partition reduction; trials x partitions -> nodes),
+    # folded into the same step_eval call in the packed rows below
+    B, P = 8, 4096
+    rec = rng.integers(0, 156, (B, P)).astype(np.int32)
+    act = rng.random((B, P)) < 0.1
     recj, actj = jnp.asarray(rec), jnp.asarray(act)
-    nc_j = jax.jit(lambda r, a: rebuild_node_counts(r, a, n_real=155,
-                                                    backend="jax"))
-    print(f"kernel_node_counts_jax,b8p4096n155,"
-          f"{_time(nc_j, recj, actj):.0f},scatter_add")
+
+    # bit-packed layout: the same evaluations over (B, W, P) uint32 words
+    # (155 nodes -> 5 words).  On TPU the pallas backend runs these as ONE
+    # fused megakernel per step; the jax rows here time the identical
+    # packed math (bitpack.py) through XLA on CPU.
+    packed_pac = StepSpec(metric="availability", rf=3, voters=5, n_real=155,
+                          packed=True)
+    packed_rec = StepSpec(metric="downtime", rf=3, n_real=155,
+                          rebuild_model="reconfig", packed=True)
+    upw = jnp.moveaxis(bitpack.pack_words(
+        jnp.reshape(upj[:, :155], (B, P, 155)), jnp), -1, 1)
+    fullw = jnp.moveaxis(bitpack.pack_words(
+        jnp.reshape(fullj[:, :155], (B, P, 155)), jnp), -1, 1)
+    roster3 = jnp.reshape(roster, (B, P, 3))
+    pac_pk = jax.jit(lambda u, f: step_eval(packed_pac, u, f,
+                                            backend="jax"))
+    print(f"kernel_pac_packed_jax,b{B}w5p{P},"
+          f"{_time(pac_pk, upw, fullw):.0f},bitpacked")
+    dt_pk = jax.jit(lambda u, f, ro, rc, ac: step_eval(
+        packed_rec, u, f, roster=ro, recruit=rc, active=ac, backend="jax"))
+    print(f"kernel_downtime_fused_packed_jax,b{B}w5p{P},"
+          f"{_time(dt_pk, upw, fullw, roster3, recj, actj):.0f},"
+          f"roster+counts_one_call")
+
+    # analytic HBM traffic per step, unfused-boolean vs fused-packed —
+    # the round-trip reduction the megakernel exists for (exact on any
+    # host; benchmarks/roofline.py sweeps the full grid)
+    for name, spec in (("pac", packed_pac), ("downtime_reconfig",
+                                             packed_rec)):
+        hbm = step_hbm_bytes(spec, B, P, 155)
+        assert hbm["fused_bytes"] <= hbm["unfused_bytes"]
+        print(f"kernel_step_hbm_{name},b{B}p{P}n155,0,"
+              f"unfused={hbm['unfused_bytes']};fused={hbm['fused_bytes']};"
+              f"ratio={hbm['ratio']:.1f}")
     if args.autotune:
         res = autotune_block_p(R, 155, rf=3, voters=5, n_real=155)
         print(f"kernel_pac_autotune,r{R}n155,0,"
@@ -117,6 +154,13 @@ def main(argv=None, *, strict: bool = True):
         for bp in sorted(res.timings_us):
             print(f"kernel_pac_block,bp{bp},{res.timings_us[bp]:.0f},"
                   f"autotune_candidate")
+        fres = autotune_fused_blocks(B, P, 155, rf=3, voters=5, n_real=155,
+                                     kernel="fused_downtime_roster")
+        print(f"kernel_fused_autotune,b{B}p{P}n155,0,"
+              f"choice={fres.block_t}x{fres.block_p};source={fres.source}")
+        for bt, bp in sorted(fres.timings_us):
+            print(f"kernel_fused_block,bt{bt}bp{bp},"
+                  f"{fres.timings_us[(bt, bp)]:.0f},autotune_candidate")
     return 0
 
 

@@ -9,6 +9,14 @@ ratio MODEL_FLOPS / (HLO_FLOPs * chips).
 
 HLO terms come from launch/hlo_analysis.py (loop-trip-aware; XLA's own
 cost_analysis undercounts scan bodies — verified in tests/test_hlo_analysis).
+
+The roofline_mc_step rows cover the Monte Carlo engines' per-step eval
+pipeline over the sweep grid: analytic HBM bytes per step
+(kernels.ops.step_hbm_bytes) for the unfused boolean path vs the fused
+bit-packed megakernel, and the memory-roofline seconds each implies at
+HBM_BW.  The fused path must move no more bytes than the unfused path on
+every grid cell — asserted here, so a fusion regression fails the
+benchmark run itself.
 """
 from __future__ import annotations
 
@@ -112,6 +120,38 @@ def load_cells(mesh: str = "pod16x16") -> List[Dict]:
     return rows
 
 
+#: Monte Carlo step-eval grid: (label, metric, rebuild_model, B, P, n) —
+#: the sweep's reduced/full scales plus the ROADMAP million-trial target
+MC_STEP_GRID = (
+    ("reduced_avail", "availability", "fixed", 8, 512, 63),
+    ("full_avail", "availability", "fixed", 8, 4096, 155),
+    ("full_downtime", "downtime", "fixed", 8, 4096, 155),
+    ("full_reconfig", "downtime", "reconfig", 8, 4096, 155),
+    ("mega_reconfig", "downtime", "reconfig", 1024, 4096, 155),
+)
+
+
+def mc_step_rows() -> List[Dict]:
+    """Analytic unfused-vs-fused HBM traffic of one Monte Carlo step per
+    grid cell, with the memory-roofline time each implies."""
+    from repro.kernels.ops import StepSpec, step_hbm_bytes
+    rows = []
+    for label, metric, model, B, P, n in MC_STEP_GRID:
+        spec = StepSpec(metric=metric, rf=3, n_real=n,
+                        rebuild_model=model, packed=True)
+        hbm = step_hbm_bytes(spec, B, P, n)
+        assert hbm["fused_bytes"] <= hbm["unfused_bytes"], \
+            f"fused step moves more HBM bytes than unfused on {label}"
+        rows.append({
+            "label": label, "kernel": spec.fused_kernel, "B": B, "P": P,
+            "n": n, "unfused_bytes": hbm["unfused_bytes"],
+            "fused_bytes": hbm["fused_bytes"], "ratio": hbm["ratio"],
+            "unfused_memory_s": hbm["unfused_bytes"] / HBM_BW,
+            "fused_memory_s": hbm["fused_bytes"] / HBM_BW,
+        })
+    return rows
+
+
 def main(argv=None, *, strict: bool = True):  # noqa: ARG001 - run.py contract
     rows = load_cells()
     for r in rows:
@@ -123,6 +163,13 @@ def main(argv=None, *, strict: bool = True):  # noqa: ARG001 - run.py contract
               f"collective_s={r['collective_s']:.4f};dominant={r['dominant']};"
               f"useful={r['useful_ratio']:.3f};"
               f"frac={r['roofline_fraction']:.3f};peakGB={r['peak_gb']:.1f}")
+    for r in mc_step_rows():
+        print(f"roofline_mc_step,{r['label']},0,"
+              f"kernel={r['kernel']};b{r['B']}p{r['P']}n{r['n']};"
+              f"unfused_bytes={r['unfused_bytes']};"
+              f"fused_bytes={r['fused_bytes']};ratio={r['ratio']:.1f};"
+              f"unfused_memory_s={r['unfused_memory_s']:.3e};"
+              f"fused_memory_s={r['fused_memory_s']:.3e}")
     return 0
 
 

@@ -69,7 +69,8 @@ from typing import Dict, Optional
 
 import numpy as np
 
-from ..kernels.ops import PAC_BACKENDS, pac_eval_batch
+from ..kernels import bitpack
+from ..kernels.ops import PAC_BACKENDS, StepSpec, step_eval
 from .availability import t975
 from .succession import succession_matrix_fast
 
@@ -267,12 +268,25 @@ def _initial_node_state(xp, *, B: int, n: int, seed_mix, geo_masks,
 
 
 def _initial_full_state(xp, backend: str, eval_fn, up0, succ, *, B: int,
-                        P: int, n: int, rf: int):
+                        P: int, n: int, rf: int, packed: bool = False):
     """t=0 'has the latest copy' mask, shared by both engines: roster
     replicas full, one evaluation on that state, then available (PAC-ok)
     partitions refresh to the committed replica set.  eval_fn is pac_fn or
     dt_fn — both return the LARK mask first and creps last.  Returns
-    (full0, eval outputs)."""
+    (full0, eval outputs).
+
+    packed=True carries the holder mask as (B, W, P) uint32 words instead
+    of (B, P, n) bool; eval_fn then takes/returns word tensors and
+    (B, P)-shaped rows (layout only — same bits)."""
+    if packed:
+        masks = bitpack.prefix_masks(rf, n)
+        full0 = (xp.zeros((B, len(masks), P), dtype=xp.uint32)
+                 + xp.asarray(masks, dtype=xp.uint32)[None, :, None])
+        upw = xp.moveaxis(bitpack.pack_words(up0[:, succ], xp), -1, 1)
+        outs = eval_fn(upw, full0)
+        lark0, creps0 = outs[0], outs[-1]
+        full0 = xp.where(lark0[:, None, :], creps0, full0)
+        return full0, outs
     full0 = xp.zeros((B, P, n), dtype=bool)
     if backend == "numpy":
         full0[:, :, :rf] = True
@@ -398,7 +412,7 @@ def _run_chunk_numpy(step, carry, s0: int, chunk_steps: int):
 def _make_step(xp, pac_fn, succ, *, n: int, P: int, horizon: int,
                dt_vec, geo_masks, geo_tables, seed_mix,
                pair_fail_prob: float, pair_perm, restart_period: int,
-               wave_width: int):
+               wave_width: int, packed: bool = False):
     advance = _make_node_advance(
         xp, n=n, horizon=horizon, dt_vec=dt_vec, geo_masks=geo_masks,
         geo_tables=geo_tables, seed_mix=seed_mix,
@@ -415,11 +429,19 @@ def _make_step(xp, pac_fn, succ, *, n: int, P: int, horizon: int,
         mpt = mpt + xp.sum(dnm, axis=1).astype(xp.float32) * dt
         now = t_clamp
 
-        lark, maj, creps = pac_fn(up[:, succ].reshape(B * P, n),
-                                  full.reshape(B * P, n))
-        lark = lark.reshape(B, P)
-        maj = maj.reshape(B, P)
-        full = xp.where(lark[:, :, None], creps.reshape(B, P, n), full)
+        if packed:
+            # packed variant: the node advance is unchanged (it works in
+            # (B, n) node space); only the per-partition holder state and
+            # its eval move to (B, W, P) uint32 words
+            upw = xp.moveaxis(bitpack.pack_words(up[:, succ], xp), -1, 1)
+            lark, maj, crepsw = pac_fn(upw, full)
+            full = xp.where(lark[:, None, :], crepsw, full)
+        else:
+            lark, maj, creps = pac_fn(up[:, succ].reshape(B * P, n),
+                                      full.reshape(B * P, n))
+            lark = lark.reshape(B, P)
+            maj = maj.reshape(B, P)
+            full = xp.where(lark[:, :, None], creps.reshape(B, P, n), full)
         # outage events are per-partition down-transitions (the downtime
         # engine's lgo/qgo rule): a net per-trial count delta would cancel
         # a partition recovering in the same step another fails and
@@ -452,7 +474,8 @@ def simulate_availability_batched(
         devices: int = 1, pac_block_p: Optional[int] = None,
         chunk_steps: int = 512, max_steps: Optional[int] = None,
         trajectory: bool = False, voters: Optional[int] = None,
-        use_shard_map: Optional[bool] = None) -> BatchedAvailabilityResult:
+        use_shard_map: Optional[bool] = None, packed: bool = False,
+        block_t: Optional[int] = None) -> BatchedAvailabilityResult:
     """Batched Monte Carlo over `trials` trajectories sharing one succession
     matrix (seeded); failure randomness is independent per trial.
 
@@ -466,6 +489,12 @@ def simulate_availability_batched(
     roster replicas — the instantaneous-availability limit of the
     downtime engine's equal-storage quorum-log baseline, which the
     property tests in tests/test_downtime_batched.py pin exactly.
+
+    packed=True switches the carried holder masks and the per-step eval
+    to the bit-packed (B, W, P) uint32 word layout (kernels/bitpack.py);
+    on backend="pallas" the step then runs the fused megakernel
+    (kernels/fused_step.py) with tile (block_t, block_p) — layout and
+    fusion only, trajectories bit-identical to packed=False.
     """
     _validate_batched_args(backend=backend, devices=devices, trials=trials,
                            wave_width=wave_width, n=n)
@@ -478,14 +507,20 @@ def simulate_availability_batched(
      p_arr, dt_arr) = _engine_setup(
         backend, n=n, partitions=P, seed=seed, p=p, downtime=downtime,
         p_node=p_node, downtime_node=downtime_node, max_ticks=max_ticks)
-    pac_fn = lambda u, f: pac_eval_batch(u, f, rf=rf, voters=voters,
-                                         n_real=n, backend=backend,
-                                         block_p=pac_block_p)
+    spec = StepSpec(metric="availability", rf=rf, voters=voters, n_real=n,
+                    packed=packed)
+
+    def pac_fn(u, f):
+        o = step_eval(spec, u, f, backend=backend, block_p=pac_block_p,
+                      block_t=block_t)
+        return o.lark, o.maj, o.creps
+
     step = _make_step(xp, pac_fn, succ, n=n, P=P, horizon=horizon,
                       dt_vec=dt_vec, geo_masks=geo_masks,
                       geo_tables=geo_tables, seed_mix=seed_mix,
                       pair_fail_prob=pair_fail_prob, pair_perm=pair_perm,
-                      restart_period=restart_period, wave_width=wave_width)
+                      restart_period=restart_period, wave_width=wave_width,
+                      packed=packed)
 
     # initial state: everyone up, roster replicas full
     lane0, up0, ev0, rr_t0 = _initial_node_state(
@@ -493,7 +528,8 @@ def simulate_availability_batched(
         geo_tables=geo_tables, restart_period=restart_period,
         horizon=horizon)
     full0, (lark0, maj0, _creps0) = _initial_full_state(
-        xp, backend, pac_fn, up0, succ, B=B, P=P, n=n, rf=rf)
+        xp, backend, pac_fn, up0, succ, B=B, P=P, n=n, rf=rf,
+        packed=packed)
     zi = xp.zeros((B,), dtype=xp.int32)
     zf = xp.zeros((B,), dtype=xp.float32)
     carry = (zi, up0, ev0, full0,

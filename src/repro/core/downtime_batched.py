@@ -90,7 +90,8 @@ from typing import Dict, Optional
 
 import numpy as np
 
-from ..kernels.ops import downtime_eval_batch, rebuild_node_counts
+from ..kernels import bitpack
+from ..kernels.ops import StepSpec, _rebuild_node_counts_impl, step_eval
 from .availability import t975
 from .availability_batched import (_default_max_steps, _engine_setup,
                                    _initial_full_state, _initial_node_state,
@@ -125,6 +126,67 @@ _SIZE_SKEW_MAX = 32.0
 #: bit-exact against the unshared model.
 _REB_SCALE = 256
 _REB_BIG = np.int32(2 ** 30)   # "never finishes" remaining-ticks sentinel
+
+
+@dataclass(frozen=True)
+class DowntimeParams:
+    """The §6 engine's protocol/rebuild knobs, validated in one place.
+
+    These eight values are mutually constrained (the skew/bandwidth knobs
+    describe the reconfiguring baseline's data-sized catch-ups and are
+    rejected under rebuild_model="fixed"; bandwidth has a fixed-point
+    quantum floor; ...), and they used to be threaded as loose keywords
+    from benchmarks/availability_sweep.py all the way into
+    simulate_downtime_batched, with the rules enforced at the bottom.
+    One frozen dataclass now owns both the values and the rules: every
+    entry point (CLI, engine, tests) constructs it and gets the identical
+    ValueError set — see simulate_downtime_batched's docstring for
+    per-knob semantics.
+    """
+    dupres_ticks: int = 1
+    rebuild_steps: int = 100
+    hist_bins: int = 16
+    rebuild_model: str = "fixed"
+    rebuild_ticks_per_gib: int = 100
+    size_dist: str = "uniform"
+    size_skew: float = 1.0
+    node_bandwidth_gibps: float = math.inf
+
+    def __post_init__(self):
+        if self.dupres_ticks < 0 or self.rebuild_steps < 0:
+            raise ValueError("dupres_ticks and rebuild_steps must be >= 0")
+        if not 2 <= self.hist_bins <= 30:
+            raise ValueError("hist_bins must be in [2, 30]")
+        if self.rebuild_model not in REBUILD_MODELS:
+            raise ValueError(
+                f"rebuild_model must be one of {REBUILD_MODELS}")
+        if self.rebuild_ticks_per_gib < 0:
+            raise ValueError("rebuild_ticks_per_gib must be >= 0")
+        if self.size_dist not in SIZE_DISTS:
+            raise ValueError(f"size_dist must be one of {SIZE_DISTS}")
+        if not 0 <= self.size_skew <= _SIZE_SKEW_MAX:
+            raise ValueError(
+                f"size_skew must be in [0, {_SIZE_SKEW_MAX:g}]")
+        if not self.node_bandwidth_gibps >= 1.0 / _REB_SCALE:
+            raise ValueError(
+                f"node_bandwidth_gibps must be >= 1/{_REB_SCALE} "
+                "(the fixed-point rate quantum — below it even an "
+                "uncontended catch-up rounds to zero progress; "
+                "inf disables bandwidth sharing)")
+        if not self.reconfig and (self.size_dist != "uniform"
+                                  or self.bandwidth_shared):
+            raise ValueError(
+                "size_dist and node_bandwidth_gibps model the "
+                "reconfiguring baseline's data-sized catch-ups; "
+                "use rebuild_model='reconfig'")
+
+    @property
+    def reconfig(self) -> bool:
+        return self.rebuild_model == "reconfig"
+
+    @property
+    def bandwidth_shared(self) -> bool:
+        return math.isfinite(self.node_bandwidth_gibps)
 
 
 def _norm_ppf(u: np.ndarray) -> np.ndarray:
@@ -301,7 +363,7 @@ def _hist_add(xp, hist_bins: int, hist, mask, d):
 def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
                dupres_ticks: int, rebuild_steps: int, hist_bins: int,
                rebuild_model: str = "fixed", rebuild_ticks=None,
-               bandwidth_fp=None, cnt_fn=None):
+               bandwidth_fp=None, cnt_fn=None, packed: bool = False):
     def hist_add(hist, mask, d):
         return _hist_add(xp, hist_bins, hist, mask, d)
 
@@ -407,13 +469,19 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
         # -- re-evaluate both protocols on the post-event cluster state
         up_succ = up[:, succ]                                 # (B, P, n)
         rep_new = up_succ[:, :, :rf]                          # replica lanes
-        lark, qmaj, ldr, lfull, _nrep, creps = dt_fn(
-            up_succ.reshape(B * P, n), full.reshape(B * P, n))
-        lark = lark.reshape(B, P)
-        qmaj = qmaj.reshape(B, P)
-        ldr = ldr.reshape(B, P)
-        lfull = lfull.reshape(B, P)
-        full = xp.where(lark[:, :, None], creps.reshape(B, P, n), full)
+        if packed:
+            upw = xp.moveaxis(bitpack.pack_words(up_succ, xp), -1, 1)
+            lark, qmaj, ldr, lfull, _nrep, crepsw = dt_fn(upw, full)
+            full = xp.where(lark[:, None, :], crepsw, full)
+        else:
+            lark, qmaj, ldr, lfull, _nrep, creps = dt_fn(
+                up_succ.reshape(B * P, n), full.reshape(B * P, n))
+            lark = lark.reshape(B, P)
+            qmaj = qmaj.reshape(B, P)
+            ldr = ldr.reshape(B, P)
+            lfull = lfull.reshape(B, P)
+            full = xp.where(lark[:, :, None], creps.reshape(B, P, n),
+                            full)
 
         ldn, lt0, leader, lpt, lev, lhist = lark_transitions(
             t_clamp, lark, ldr, lfull, ldn, lt0, leader, lpt, lev, lhist)
@@ -437,6 +505,39 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
         return carry, out
 
     lanes_n = xp.arange(n, dtype=xp.int32)
+
+    def recruit_roster(up_succ, rup, roster):
+        """Replace every down roster member with the first up node in
+        succession order not already in the roster (if none is up, the
+        seat is kept until a later step finds one).  Returns the new
+        roster plus (new_rank, took) — the most recent recruit's
+        succession rank per partition and whether any seat was filled."""
+        in_roster = xp.zeros(up_succ.shape, dtype=bool)
+        for j in range(rf):
+            in_roster = in_roster | (lanes_n[None, None, :]
+                                     == roster[:, :, j, None])
+        slot = xp.arange(rf, dtype=xp.int32)
+        new_rank = xp.full(rup.shape[:2], n, dtype=xp.int32)
+        took = xp.zeros(rup.shape[:2], dtype=bool)
+        for j in range(rf):
+            need = ~rup[:, :, j]
+            cand = up_succ & ~in_roster
+            repl = xp.min(xp.where(cand, lanes_n[None, None, :],
+                                   xp.int32(n)), axis=2)
+            take = need & (repl < n)
+            old_j = roster[:, :, j]
+            new_j = xp.where(take, repl, old_j)
+            in_roster = in_roster & ~(take[:, :, None] &
+                                      (lanes_n[None, None, :]
+                                       == old_j[:, :, None]))
+            in_roster = in_roster | (take[:, :, None] &
+                                     (lanes_n[None, None, :]
+                                      == new_j[:, :, None]))
+            roster = xp.where((slot == j)[None, None, :],
+                              new_j[:, :, None], roster)
+            new_rank = xp.where(take, repl, new_rank)
+            took = took | take
+        return roster, new_rank, took
 
     def step_reconfig(carry, s):
         """The reconfiguring baseline: identical to `step` (same shared
@@ -491,33 +592,8 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
         loss_any = xp.any(qrep & ~rup, axis=2)
 
         # -- recruit: every down roster member is replaced by the first
-        # up node in succession order not already in the roster (if none
-        # is up, the seat is kept until a later step finds one)
-        in_roster = xp.zeros((B, P, n), dtype=bool)
-        for j in range(rf):
-            in_roster = in_roster | (lanes_n[None, None, :]
-                                     == roster[:, :, j, None])
-        slot = xp.arange(rf, dtype=xp.int32)
-        new_rank = xp.full((B, P), n, dtype=xp.int32)
-        took = xp.zeros((B, P), dtype=bool)
-        for j in range(rf):
-            need = ~rup[:, :, j]
-            cand = up_succ & ~in_roster
-            repl = xp.min(xp.where(cand, lanes_n[None, None, :],
-                                   xp.int32(n)), axis=2)
-            take = need & (repl < n)
-            old_j = roster[:, :, j]
-            new_j = xp.where(take, repl, old_j)
-            in_roster = in_roster & ~(take[:, :, None] &
-                                      (lanes_n[None, None, :]
-                                       == old_j[:, :, None]))
-            in_roster = in_roster | (take[:, :, None] &
-                                     (lanes_n[None, None, :]
-                                      == new_j[:, :, None]))
-            roster = xp.where((slot == j)[None, None, :],
-                              new_j[:, :, None], roster)
-            new_rank = xp.where(take, repl, new_rank)
-            took = took | take
+        # up node in succession order not already in the roster
+        roster, new_rank, took = recruit_roster(up_succ, rup, roster)
 
         # -- each fresh loss (re)starts the data-sized catch-up countdown
         qreb = xp.where(loss_any, rebuild_ticks[None, :], qreb)
@@ -555,7 +631,77 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
                xp.sum(up, axis=1).astype(xp.int32))
         return carry, out
 
-    return step_reconfig if rebuild_model == "reconfig" else step
+    def step_reconfig_packed(carry, s):
+        """step_reconfig over packed (B, W, P) holder words, reordered so
+        the whole post-event evaluation — both protocols, the roster
+        membership, and the bandwidth model's in-flight node counts — is
+        ONE dt_fn call (one fused pallas_call on that backend).  Pure
+        dataflow reorder of the unfused step: the reconfiguration runs
+        first (it needs only the advanced up mask and carried roster
+        state), the counts still see the carried interval-start
+        recruit/qreb, and interval_pause still sees interval-start
+        protocol state — trajectories are bit-identical."""
+        (now, up, ev_t, full, rr_t, rr_idx, lane0, ldn, lt0, qrep, qreb,
+         qdn, qt0, leader, lpt, qpt, lev, qev, lhist, qhist,
+         roster, recruit) = carry
+        B = up.shape[0]               # local trials (a shard of the batch)
+        t_clamp, dt, active, up, ev_t, rr_t, rr_idx = advance(
+            now, up, ev_t, rr_t, rr_idx, lane0, s)
+        dt_i = t_clamp - now                                  # (B,) int32
+
+        # post-event cluster state + reconfiguration up front (same rules
+        # as step_reconfig, via the shared recruit_roster closure)
+        up_succ = up[:, succ]                                 # (B, P, n)
+        rup = xp.take_along_axis(up_succ, roster, axis=2)     # (B, P, rf)
+        loss_any = xp.any(qrep & ~rup, axis=2)
+        roster, new_rank, took = recruit_roster(up_succ, rup, roster)
+
+        # the single per-step eval: packed words + reconfigured roster
+        # (+ carried recruit/in-flight for the contention counts)
+        upw = xp.moveaxis(bitpack.pack_words(up_succ, xp), -1, 1)
+        if bandwidth_fp is None:
+            lark, qmaj, ldr, lfull, _nrep, crepsw = dt_fn(upw, full,
+                                                          roster)
+            rate = xp.full((B, P), _REB_SCALE, dtype=xp.int32)
+        else:
+            inflight = (qreb > 0) & (recruit < n)
+            lark, qmaj, ldr, lfull, _nrep, crepsw, counts = dt_fn(
+                upw, full, roster, recruit, inflight)
+            k = xp.take_along_axis(counts,
+                                   xp.clip(recruit, 0, n - 1), axis=1)
+            k = xp.where(recruit < n, xp.maximum(k, 1), 1)
+            rate = xp.minimum(xp.int32(_REB_SCALE),
+                              xp.int32(bandwidth_fp) // k)
+
+        lpt, qpt, qreb, qdn, qhist = interval_pause(
+            now, dt, dt_i, ldn, qrep, qreb, qdn, qt0, lpt, qpt, qhist,
+            rate=rate)
+        now = t_clamp
+
+        qreb = xp.where(loss_any, rebuild_ticks[None, :], qreb)
+        new_node = succ[xp.arange(P, dtype=xp.int32)[None, :],
+                        xp.clip(new_rank, 0, n - 1)]
+        recruit = xp.where(took, new_node,
+                           xp.where(loss_any, xp.int32(n), recruit))
+
+        full = xp.where(lark[:, None, :], crepsw, full)
+        ldn, lt0, leader, lpt, lev, lhist = lark_transitions(
+            t_clamp, lark, ldr, lfull, ldn, lt0, leader, lpt, lev, lhist)
+        qdn, qt0, qev, qhist = quorum_transitions(
+            t_clamp, qmaj, qreb, qdn, qt0, qev, qhist)
+        qrep = xp.take_along_axis(up_succ, roster, axis=2)
+
+        carry = (now, up, ev_t, full, rr_t, rr_idx, lane0, ldn, lt0,
+                 qrep, qreb, qdn, qt0, leader, lpt, qpt, lev, qev,
+                 lhist, qhist, roster, recruit)
+        out = (t_clamp, xp.sum(ldn, axis=1).astype(xp.int32),
+               xp.sum(qdn, axis=1).astype(xp.int32),
+               xp.sum(up, axis=1).astype(xp.int32))
+        return carry, out
+
+    if rebuild_model == "reconfig":
+        return step_reconfig_packed if packed else step_reconfig
+    return step
 
 
 # ---------------------------------------------------------------------------
@@ -578,11 +724,25 @@ def simulate_downtime_batched(
         devices: int = 1, pac_block_p: Optional[int] = None,
         chunk_steps: int = 512, max_steps: Optional[int] = None,
         trajectory: bool = False,
-        use_shard_map: Optional[bool] = None) -> BatchedDowntimeResult:
+        use_shard_map: Optional[bool] = None,
+        params: Optional[DowntimeParams] = None, packed: bool = False,
+        block_t: Optional[int] = None) -> BatchedDowntimeResult:
     """Batched §6 commit-pause Monte Carlo over `trials` trajectories.
 
     Accepts the availability engine's cluster/scenario knobs unchanged
-    (every core/scenarios.py policy runs here too), plus:
+    (every core/scenarios.py policy runs here too), plus the protocol/
+    rebuild knobs below.  They can be passed individually (legacy
+    keywords) or as one pre-validated `params=DowntimeParams(...)` —
+    when `params` is given it takes precedence and the individual
+    keywords are ignored; either way DowntimeParams owns the validation
+    rules, so every entry point raises the identical errors.
+
+    packed=True carries the holder masks as bit-packed (B, W, P) uint32
+    words and evaluates each step through kernels/bitpack.py — on
+    backend="pallas" via the fused step megakernel (one pallas_call for
+    both protocols + roster + rebuild node counts; tile (block_t,
+    block_p)).  Layout/fusion only: trajectories are bit-identical to
+    packed=False on every backend.
 
     dupres_ticks   LARK's per-leader-change duplicate-resolution cost in
                    ticks (0 disables; then LARK pause == instantaneous
@@ -635,29 +795,20 @@ def simulate_downtime_batched(
     """
     _validate_batched_args(backend=backend, devices=devices, trials=trials,
                            wave_width=wave_width, n=n)
-    if dupres_ticks < 0 or rebuild_steps < 0:
-        raise ValueError("dupres_ticks and rebuild_steps must be >= 0")
-    if not 2 <= hist_bins <= 30:
-        raise ValueError("hist_bins must be in [2, 30]")
-    if rebuild_model not in REBUILD_MODELS:
-        raise ValueError(f"rebuild_model must be one of {REBUILD_MODELS}")
-    if rebuild_ticks_per_gib < 0:
-        raise ValueError("rebuild_ticks_per_gib must be >= 0")
-    if size_dist not in SIZE_DISTS:
-        raise ValueError(f"size_dist must be one of {SIZE_DISTS}")
-    if not 0 <= size_skew <= _SIZE_SKEW_MAX:
-        raise ValueError(f"size_skew must be in [0, {_SIZE_SKEW_MAX:g}]")
-    if not node_bandwidth_gibps >= 1.0 / _REB_SCALE:
-        raise ValueError(f"node_bandwidth_gibps must be >= 1/{_REB_SCALE} "
-                         "(the fixed-point rate quantum — below it even an "
-                         "uncontended catch-up rounds to zero progress; "
-                         "inf disables bandwidth sharing)")
-    reconfig = rebuild_model == "reconfig"
-    bandwidth_shared = math.isfinite(node_bandwidth_gibps)
-    if not reconfig and (size_dist != "uniform" or bandwidth_shared):
-        raise ValueError("size_dist and node_bandwidth_gibps model the "
-                         "reconfiguring baseline's data-sized catch-ups; "
-                         "use rebuild_model='reconfig'")
+    if params is None:
+        params = DowntimeParams(
+            dupres_ticks=dupres_ticks, rebuild_steps=rebuild_steps,
+            hist_bins=hist_bins, rebuild_model=rebuild_model,
+            rebuild_ticks_per_gib=rebuild_ticks_per_gib,
+            size_dist=size_dist, size_skew=size_skew,
+            node_bandwidth_gibps=node_bandwidth_gibps)
+    dupres_ticks, rebuild_steps = params.dupres_ticks, params.rebuild_steps
+    hist_bins, rebuild_model = params.hist_bins, params.rebuild_model
+    rebuild_ticks_per_gib = params.rebuild_ticks_per_gib
+    size_dist, size_skew = params.size_dist, params.size_skew
+    node_bandwidth_gibps = params.node_bandwidth_gibps
+    reconfig = params.reconfig
+    bandwidth_shared = params.bandwidth_shared
     if reconfig and max_ticks > (2 ** 31 - 1) // _REB_SCALE - 2:
         raise ValueError("max_ticks too large for the fixed-point "
                          f"catch-up countdowns (<= "
@@ -668,15 +819,23 @@ def simulate_downtime_batched(
      p_arr, dt_arr) = _engine_setup(
         backend, n=n, partitions=P, seed=seed, p=p, downtime=downtime,
         p_node=p_node, downtime_node=downtime_node, max_ticks=max_ticks)
-    dt_fn = lambda u, f, roster=None: downtime_eval_batch(
-        u, f, rf=rf, n_real=n, backend=backend, block_p=pac_block_p,
-        roster=roster)
+    spec = StepSpec(metric="downtime", rf=rf, n_real=n,
+                    rebuild_model=rebuild_model, packed=packed,
+                    dupres_ticks=dupres_ticks, rebuild_steps=rebuild_steps)
+
+    def dt_fn(u, f, roster=None, recruit=None, active=None):
+        o = step_eval(spec, u, f, roster=roster, recruit=recruit,
+                      active=active, backend=backend, block_p=pac_block_p,
+                      block_t=block_t)
+        base = (o.lark, o.maj, o.leader, o.leader_full, o.nrep, o.creps)
+        return (base + (o.counts,)) if recruit is not None else base
+
     rebuild_ticks = xp.asarray(_partition_rebuild_ticks(
         seed, P, rebuild_ticks_per_gib, dist=size_dist, skew=size_skew,
         cap=max_ticks + 1) * np.int32(_REB_SCALE)) if reconfig else None
     bandwidth_fp = int(min(math.floor(_REB_SCALE * node_bandwidth_gibps),
                            int(_REB_BIG))) if bandwidth_shared else None
-    cnt_fn = (lambda rec, act: rebuild_node_counts(
+    cnt_fn = (lambda rec, act: _rebuild_node_counts_impl(
         rec, act, n_real=n, backend=backend)) if bandwidth_shared else None
     advance = _make_node_advance(
         xp, n=n, horizon=horizon, dt_vec=dt_vec, geo_masks=geo_masks,
@@ -688,7 +847,8 @@ def simulate_downtime_batched(
                       rebuild_steps=rebuild_steps, hist_bins=hist_bins,
                       rebuild_model=rebuild_model,
                       rebuild_ticks=rebuild_ticks,
-                      bandwidth_fp=bandwidth_fp, cnt_fn=cnt_fn)
+                      bandwidth_fp=bandwidth_fp, cnt_fn=cnt_fn,
+                      packed=packed)
 
     # initial state: everyone up, roster replicas full, both protocols
     # evaluated once at t=0 (identical to the availability engine's init;
@@ -699,7 +859,7 @@ def simulate_downtime_batched(
         geo_tables=geo_tables, restart_period=restart_period,
         horizon=horizon)
     full0, (lark0, qmaj0, ldr0, _lf0, _nrep0, _creps0) = _initial_full_state(
-        xp, backend, dt_fn, up0, succ, B=B, P=P, n=n, rf=rf)
+        xp, backend, dt_fn, up0, succ, B=B, P=P, n=n, rf=rf, packed=packed)
     lark0 = lark0.reshape(B, P)
     zi = xp.zeros((B,), dtype=xp.int32)
     zf = xp.zeros((B,), dtype=xp.float32)

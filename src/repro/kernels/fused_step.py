@@ -1,0 +1,229 @@
+"""Fused Pallas step megakernel over bit-packed cluster state.
+
+One ``pallas_call`` per Monte Carlo step evaluates a 2-D
+(block_t x block_p) grid of (trials, partitions) tiles directly on packed
+uint32 words — where the unfused path launches separate PAC/downtime,
+roster-gather and node-count kernels over boolean (R, n) tiles, this
+kernel reads each packed word once and emits every per-step output in a
+single pass:
+
+  * PAC (SimpleMajority) / majority-baseline / quorum-log predicates as
+    mask-AND + SWAR-popcount over the word planes (kernels/bitpack.py —
+    the same functions the numpy and jnp backends run, so bit-identity
+    is by construction, not by parallel implementation);
+  * the reconfiguring baseline's roster membership via one-hot word
+    select + shift (no gather);
+  * the acting-leader rank + latest-copy bit via a lowest-set-bit scan;
+  * the refreshed cluster-replica words via rf rounds of lowest-set-bit
+    extraction;
+  * optionally, the per-(trial, node) in-flight rebuild counts for the
+    bandwidth-contended rebuild model, accumulated *across the partition
+    grid axis* into a (block_t, n_lanes) output block that is revisited
+    by every partition tile of the same trial block (initialized at
+    partition-grid index 0, per the standard Pallas accumulation
+    pattern) — the reduction that previously cost its own kernel launch
+    and an extra HBM round trip.
+
+Array layout: packed state is (B, W, P) uint32 — partitions on the minor
+(lane) axis, words on the sublane axis — so a (block_t, W, block_p) tile
+is VPU-shaped with block_p a lane multiple, and the packed node axis
+never occupies lanes (the boolean kernels pad n to 128 lanes; here five
+words replace 256 bool lanes).  Rosters arrive as (B, rf, P) int32 and
+recruit/active as (B, P).  Validity masking uses compile-time prefix-mask
+constants, so there is no `valid` input tensor at all.
+
+ops.step_eval dispatches here for StepSpec(packed=True) on the pallas
+backend; block sizes come from ops.autotune_step_blocks (2-D fused
+autotuner with fused-kernel VMEM accounting).  Interpret mode runs the
+same kernel on CPU for the CI smoke rows and the bit-identity matrix.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import bitpack
+
+
+def _check_tiles(B: int, P: int, block_t: int, block_p: int):
+    if B % block_t:
+        raise ValueError(
+            f"block_t={block_t} must tile the trial count B={B} exactly — "
+            "pick a candidate from ops.fused_block_candidates")
+    if P % block_p:
+        raise ValueError(
+            f"block_p={block_p} must tile the partition count P={P} "
+            "exactly — pick a candidate from ops.fused_block_candidates")
+
+
+def _fused_pac_kernel(upw_ref, fullw_ref, lark_ref, maj_ref, crepsw_ref, *,
+                      rf: int, voters: int, n_real: int, W: int):
+    upw = upw_ref[...]                         # (bt, W, bp) uint32
+    fullw = fullw_ref[...]
+    u = [upw[:, k, :] for k in range(W)]
+    f = [fullw[:, k, :] for k in range(W)]
+    lark, maj, creps = bitpack.pac_eval_packed(
+        u, f, rf=rf, voters=voters, n_real=n_real, xp=jnp)
+    lark_ref[...] = lark
+    maj_ref[...] = maj
+    crepsw_ref[...] = jnp.stack(creps, axis=1)
+
+
+def fused_pac_eval(upw, fullw, *, rf: int, voters: int, n_real: int,
+                   block_t: int, block_p: int, interpret: bool = False):
+    """upw/fullw: (B, W, P) uint32 packed rank-space state.  Returns
+    (lark (B, P) bool, maj (B, P) bool, crepsw (B, W, P) uint32) — the
+    packed image of kernels/pac_eval.pac_eval, bit for bit."""
+    B, W, P = upw.shape
+    block_t = min(block_t, B)
+    block_p = min(block_p, P)
+    _check_tiles(B, P, block_t, block_p)
+    kernel = functools.partial(_fused_pac_kernel, rf=rf, voters=voters,
+                               n_real=n_real, W=W)
+    word_spec = pl.BlockSpec((block_t, W, block_p), lambda i, j: (i, 0, j))
+    row_spec = pl.BlockSpec((block_t, block_p), lambda i, j: (i, j))
+    return pl.pallas_call(
+        kernel,
+        grid=(B // block_t, P // block_p),
+        in_specs=[word_spec, word_spec],
+        out_specs=[row_spec, row_spec, word_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, P), jnp.bool_),
+            jax.ShapeDtypeStruct((B, P), jnp.bool_),
+            jax.ShapeDtypeStruct((B, W, P), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(upw, fullw)
+
+
+def _node_count_block(rec, act, n_lanes: int, bp_cols: int):
+    """(bt, bp) recruit ids + active mask -> (bt, n_lanes) int32 one-hot
+    accumulation over this tile's partition columns (the same
+    compare-and-sum loop as pac_eval._node_count_kernel, folded into the
+    fused body).  Ids outside [0, n_lanes) match no lane; ids in
+    [n_real, n_lanes) land in padding columns the wrapper slices off."""
+    bt = rec.shape[0]
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (bt, n_lanes), 1)
+
+    def body(j, cnt):
+        rec_j = jax.lax.dynamic_slice_in_dim(rec, j, 1, axis=1)
+        act_j = jax.lax.dynamic_slice_in_dim(act, j, 1, axis=1) \
+            .astype(jnp.int32)
+        return cnt + jnp.where(lanes == rec_j, act_j, 0)
+
+    return jax.lax.fori_loop(
+        0, bp_cols, body, jnp.zeros((bt, n_lanes), dtype=jnp.int32))
+
+
+def _fused_downtime_kernel(refs, *, rf: int, n_real: int, W: int,
+                           with_roster: bool, with_counts: bool,
+                           n_lanes: int, bp_cols: int):
+    it = iter(refs)
+    upw_ref, fullw_ref = next(it), next(it)
+    roster_ref = next(it) if with_roster else None
+    rec_ref, act_ref = (next(it), next(it)) if with_counts else (None, None)
+    lark_ref, qmaj_ref, ldr_ref, lfull_ref, nrep_ref, crepsw_ref = \
+        (next(it) for _ in range(6))
+    cnt_ref = next(it) if with_counts else None
+
+    upw = upw_ref[...]                         # (bt, W, bp) uint32
+    fullw = fullw_ref[...]
+    u = [upw[:, k, :] for k in range(W)]
+    f = [fullw[:, k, :] for k in range(W)]
+    roster = None
+    if with_roster:
+        rost = roster_ref[...]                 # (bt, rf, bp) int32
+        roster = [rost[:, j, :] for j in range(rf)]
+    lark, qmaj, leader, lfull, nrep, creps = bitpack.downtime_eval_packed(
+        u, f, rf=rf, n_real=n_real, roster=roster, xp=jnp)
+    lark_ref[...] = lark
+    qmaj_ref[...] = qmaj
+    ldr_ref[...] = leader
+    lfull_ref[...] = lfull
+    nrep_ref[...] = nrep
+    crepsw_ref[...] = jnp.stack(creps, axis=1)
+
+    if with_counts:
+        # counts accumulate across the (innermost, sequential) partition
+        # grid axis: initialize at the first partition tile of each trial
+        # block, then add this tile's one-hot contribution
+        j_id = pl.program_id(1)
+
+        @pl.when(j_id == 0)
+        def _init():
+            cnt_ref[...] = jnp.zeros(cnt_ref.shape, dtype=jnp.int32)
+
+        cnt_ref[...] = cnt_ref[...] + _node_count_block(
+            rec_ref[...].astype(jnp.int32), act_ref[...], n_lanes, bp_cols)
+
+
+def fused_downtime_eval(upw, fullw, *, rf: int, n_real: int, block_t: int,
+                        block_p: int, interpret: bool = False, roster=None,
+                        recruit=None, active=None):
+    """upw/fullw: (B, W, P) uint32.  Returns (lark, qmaj, leader,
+    leader_full, nrep (all (B, P)), crepsw (B, W, P)[, counts
+    (B, n_lanes)]) — the packed image of kernels/pac_eval.downtime_eval
+    (+ node_count when recruit/active are given), in one pallas_call.
+
+    roster (B, rf, P) int32, optional: the reconfiguring baseline's
+    carried replica-set ranks, words-on-sublanes like the state.
+    recruit (B, P) int32 + active (B, P) bool, optional (together): also
+    emit the per-(trial, node) in-flight rebuild counts, accumulated
+    across partition tiles; counts columns >= n_real are padding for the
+    caller to slice (ops.step_eval does)."""
+    B, W, P = upw.shape
+    block_t = min(block_t, B)
+    block_p = min(block_p, P)
+    _check_tiles(B, P, block_t, block_p)
+    with_roster = roster is not None
+    with_counts = recruit is not None
+    if with_counts and active is None:
+        raise ValueError("recruit and active must be passed together")
+    n_lanes = n_real + (-n_real % 128)
+
+    word_spec = pl.BlockSpec((block_t, W, block_p), lambda i, j: (i, 0, j))
+    row_spec = pl.BlockSpec((block_t, block_p), lambda i, j: (i, j))
+    in_specs = [word_spec, word_spec]
+    operands = [upw, fullw]
+    if with_roster:
+        in_specs.append(pl.BlockSpec((block_t, rf, block_p),
+                                     lambda i, j: (i, 0, j)))
+        operands.append(roster.astype(jnp.int32))
+    if with_counts:
+        in_specs += [row_spec, row_spec]
+        operands += [recruit.astype(jnp.int32), active]
+    out_specs = [row_spec, row_spec, row_spec, row_spec, row_spec,
+                 word_spec]
+    out_shape = [
+        jax.ShapeDtypeStruct((B, P), jnp.bool_),
+        jax.ShapeDtypeStruct((B, P), jnp.bool_),
+        jax.ShapeDtypeStruct((B, P), jnp.int32),
+        jax.ShapeDtypeStruct((B, P), jnp.bool_),
+        jax.ShapeDtypeStruct((B, P), jnp.int32),
+        jax.ShapeDtypeStruct((B, W, P), jnp.uint32),
+    ]
+    if with_counts:
+        # revisited across the partition grid axis (index map pins j -> 0)
+        out_specs.append(pl.BlockSpec((block_t, n_lanes),
+                                      lambda i, j: (i, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((B, n_lanes), jnp.int32))
+
+    kernel = functools.partial(
+        _fused_downtime_kernel, rf=rf, n_real=n_real, W=W,
+        with_roster=with_roster, with_counts=with_counts,
+        n_lanes=n_lanes, bp_cols=block_p)
+
+    def kernel_splat(*refs):
+        kernel(refs)
+
+    return pl.pallas_call(
+        kernel_splat,
+        grid=(B // block_t, P // block_p),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*operands)

@@ -25,18 +25,30 @@ three backends are bit-identical (comparisons/cumsums only, no float
 math); padding columns >= n_real never affect outputs; and the Pallas
 ``block_p`` tiling — including the deterministic ``autotune_block_p``
 choice — changes throughput, never results.
+
+The Monte Carlo ops are consolidated behind one entry point: a frozen
+``StepSpec`` (metric, rf/voters, rebuild model, packed layout) dispatched
+by ``step_eval(spec, up, full, ...)``.  ``StepSpec(packed=True)`` selects
+the bit-packed (B, W, P) uint32 word layout (kernels/bitpack.py) and, on
+the pallas backend, the fused step megakernel (kernels/fused_step.py)
+that folds eval + roster gather + rebuild node counts into one
+pallas_call.  The legacy per-kernel functions ``pac_eval_batch`` /
+``downtime_eval_batch`` / ``rebuild_node_counts`` remain as thin
+deprecated wrappers over step_eval.
 """
 from __future__ import annotations
 
 import functools
 import os
+import warnings
 from dataclasses import dataclass
-from typing import Mapping, Optional, Tuple
+from typing import Mapping, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from . import ref
+from . import bitpack, ref
 
 _FORCE = os.environ.get("REPRO_FORCE_PALLAS", "")
 
@@ -244,8 +256,11 @@ def autotune_block_p(R: int, n_pad: int, *, rf: int, voters: int,
             raise ValueError(f"candidate block_p {bp} does not divide R={R}")
     # injected-measure calls (tests) bypass the cache: a deterministic fake
     # is repeatable on its own, and caching across *different* fakes with
-    # the same shape would return stale choices
-    key = (R, n_pad, rf, voters, n_real, cands, force, kernel)
+    # the same shape would return stale choices.  The key leads with the
+    # tuner family + kernel kind + the full tile geometry, so a fused-2D
+    # race and a block_p race on the same shape can never alias (the PR 4
+    # wrong-kernel race fix, generalized to the fused tuner below)
+    key = ("block_p", kernel, R, n_pad, rf, voters, n_real, cands, force)
     if measure is None and key in _AUTOTUNE_CACHE:
         return _AUTOTUNE_CACHE[key]
     if measure is None:
@@ -269,8 +284,9 @@ def autotune_block_p(R: int, n_pad: int, *, rf: int, voters: int,
                           source="measured")
 
 
-def pac_eval_batch(up_succ, full_succ, *, rf: int, voters: int, n_real: int,
-                   backend: str = "jax", block_p: Optional[int] = None):
+def _pac_eval_unpacked(up_succ, full_succ, *, rf: int, voters: int,
+                       n_real: int, backend: str = "jax",
+                       block_p: Optional[int] = None):
     """Dispatch a (R, n_pad) rank-space PAC tile to the chosen backend.
 
     backend:
@@ -305,9 +321,9 @@ def pac_eval_batch(up_succ, full_succ, *, rf: int, voters: int, n_real: int,
                      f"expected one of {PAC_BACKENDS}")
 
 
-def downtime_eval_batch(up_succ, full_succ, *, rf: int, n_real: int,
-                        backend: str = "jax",
-                        block_p: Optional[int] = None, roster=None):
+def _downtime_eval_unpacked(up_succ, full_succ, *, rf: int, n_real: int,
+                            backend: str = "jax",
+                            block_p: Optional[int] = None, roster=None):
     """Dispatch the §6 downtime engine's per-step evaluation of a
     (R, n_pad) rank-space tile to the chosen backend.
 
@@ -361,8 +377,8 @@ def downtime_eval_batch(up_succ, full_succ, *, rf: int, n_real: int,
                      f"expected one of {PAC_BACKENDS}")
 
 
-def rebuild_node_counts(recruit, active, *, n_real: int,
-                        backend: str = "jax"):
+def _rebuild_node_counts_impl(recruit, active, *, n_real: int,
+                              backend: str = "jax"):
     """Per-node in-flight rebuild counts for the §6 bandwidth-contended
     rebuild model: recruit (B, P) int32 node ids (values outside
     [0, n_real) — the engine's no-recruit sentinel — are ignored), active
@@ -389,3 +405,461 @@ def rebuild_node_counts(recruit, active, *, n_real: int,
         return counts[:, :n_real]
     raise ValueError(f"unknown PAC backend {backend!r}; "
                      f"expected one of {PAC_BACKENDS}")
+
+
+# ---------------------------------------------------------------------------
+# Unified step API: StepSpec -> step_eval.
+#
+# One frozen spec names everything the per-step evaluation depends on —
+# metric, replication/voter counts, rebuild model, and the state layout
+# (boolean tiles vs bit-packed words) — and one dispatcher maps it onto
+# the backend matrix.  The three legacy entry points below are thin
+# deprecated wrappers over this.
+# ---------------------------------------------------------------------------
+
+STEP_METRICS = ("availability", "downtime")
+STEP_REBUILD_MODELS = ("fixed", "reconfig")
+
+
+@dataclass(frozen=True)
+class StepSpec:
+    """Everything the per-step kernel dispatch depends on, in one frozen
+    value (hashable: usable as a cache/jit key).
+
+    metric         "availability" (§5.1 PAC + majority baseline) or
+                   "downtime" (§6 commit-pause: + leader/nrep outputs)
+    rf             replication factor (roster width)
+    n_real         real node count; lanes/bits >= n_real are padding
+    voters         majority-baseline voter count; None resolves to the
+                   paper's 2*(rf-1)+1 for availability and rf for
+                   downtime (the quorum-log replica-set vote)
+    rebuild_model  "fixed" or "reconfig"; reconfig is what carries a
+                   roster into the eval and (with bandwidth contention)
+                   folds rebuild node counts into the step
+    packed         False: boolean (R, n_pad) tiles.  True: bit-packed
+                   (B, W, P) uint32 words (kernels/bitpack.py) — layout
+                   only, every output bit-identical
+    dupres_ticks / rebuild_steps
+                   §6 engine knobs carried for provenance (they shape
+                   the step *around* the eval, not the eval itself;
+                   kept here so one spec names the whole step)
+    """
+    metric: str
+    rf: int
+    n_real: int
+    voters: Optional[int] = None
+    rebuild_model: str = "fixed"
+    packed: bool = False
+    dupres_ticks: int = 0
+    rebuild_steps: int = 0
+
+    def __post_init__(self):
+        if self.metric not in STEP_METRICS:
+            raise ValueError(f"unknown step metric {self.metric!r}; "
+                             f"expected one of {STEP_METRICS}")
+        if self.rebuild_model not in STEP_REBUILD_MODELS:
+            raise ValueError(
+                f"unknown rebuild_model {self.rebuild_model!r}; "
+                f"expected one of {STEP_REBUILD_MODELS}")
+        if not 1 <= self.rf <= self.n_real:
+            raise ValueError(
+                f"rf={self.rf} must be in [1, n_real={self.n_real}]")
+        if self.voters is not None and self.voters < 1:
+            raise ValueError(f"voters={self.voters} must be >= 1")
+        if self.dupres_ticks < 0 or self.rebuild_steps < 0:
+            raise ValueError("dupres_ticks / rebuild_steps must be >= 0")
+
+    @property
+    def resolved_voters(self) -> int:
+        if self.voters is not None:
+            return self.voters
+        return 2 * (self.rf - 1) + 1 if self.metric == "availability" \
+            else self.rf
+
+    @property
+    def fused_kernel(self) -> str:
+        """The fused-kernel kind this spec dispatches to (autotune key)."""
+        if self.metric == "availability":
+            return "fused_pac"
+        return "fused_downtime_roster" if self.rebuild_model == "reconfig" \
+            else "fused_downtime"
+
+
+class StepOutputs(NamedTuple):
+    """step_eval's full output surface; slots a spec doesn't produce are
+    None (availability: leader/leader_full/nrep; no recruit: counts)."""
+    lark: object
+    maj: object
+    leader: object = None
+    leader_full: object = None
+    nrep: object = None
+    creps: object = None
+    counts: object = None
+
+
+def _fused_block_t(B: int) -> int:
+    """Heuristic trial-block: largest power of two <= 8 dividing B."""
+    bt = 1
+    while bt < 8 and B % (bt * 2) == 0:
+        bt *= 2
+    return bt
+
+
+def _packed_planes(words, xp):
+    W = words.shape[1]
+    return [words[:, k, :] for k in range(W)]
+
+
+def step_eval(spec: StepSpec, up, full, *, roster=None, recruit=None,
+              active=None, backend: str = "jax",
+              block_p: Optional[int] = None,
+              block_t: Optional[int] = None) -> StepOutputs:
+    """Evaluate one Monte Carlo step under `spec` on the chosen backend.
+
+    Boolean layout (spec.packed=False): up/full are (R, n_pad) bool
+    rank-space tiles, roster (R, rf) int32, and outputs are (R,) /
+    (R, n_pad) — exactly the legacy pac_eval_batch / downtime_eval_batch
+    contract.  recruit/active ((B, P) int32/bool) additionally request
+    the bandwidth-model node counts (legacy rebuild_node_counts).
+
+    Packed layout (spec.packed=True): up/full are (B, W, P) uint32 word
+    planes (bit b of word k = succession rank 32k+b; pack with
+    bitpack.pack_words + moveaxis), roster is the engine's carried
+    (B, P, rf) int32 rank tensor, and row outputs are (B, P) with creps
+    returned as (B, W, P) words.  backend="pallas" runs the fused step
+    megakernel — one pallas_call for eval + roster + counts; numpy/jax
+    run the identical bitpack.py math plane-wise.  Counts inputs stay
+    unpacked (B, P) in every layout.
+
+    Every cell of the (metric x backend x layout) matrix is bit-identical
+    to every other; packing and fusion change bytes moved, never results
+    (tests/test_bitpack.py, tests/test_step_api.py).
+    """
+    if spec.metric == "downtime" and spec.rebuild_model != "reconfig" \
+            and roster is not None:
+        raise ValueError("roster is only meaningful for "
+                         "rebuild_model='reconfig'")
+    if (recruit is None) != (active is None):
+        raise ValueError("recruit and active must be passed together")
+    if spec.metric == "availability" and recruit is not None:
+        raise ValueError("rebuild node counts are a downtime-engine "
+                         "output; availability spec can't request them")
+
+    if not spec.packed:
+        counts = None
+        if recruit is not None:
+            counts = _rebuild_node_counts_impl(recruit, active,
+                                               n_real=spec.n_real,
+                                               backend=backend)
+        if spec.metric == "availability":
+            lark, maj, creps = _pac_eval_unpacked(
+                up, full, rf=spec.rf, voters=spec.resolved_voters,
+                n_real=spec.n_real, backend=backend, block_p=block_p)
+            return StepOutputs(lark=lark, maj=maj, creps=creps,
+                               counts=counts)
+        lark, qmaj, leader, lfull, nrep, creps = _downtime_eval_unpacked(
+            up, full, rf=spec.rf, n_real=spec.n_real, backend=backend,
+            block_p=block_p, roster=roster)
+        return StepOutputs(lark=lark, maj=qmaj, leader=leader,
+                           leader_full=lfull, nrep=nrep, creps=creps,
+                           counts=counts)
+
+    # ---- packed (B, W, P) word layout ----
+    if backend not in PAC_BACKENDS:
+        raise ValueError(f"unknown PAC backend {backend!r}; "
+                         f"expected one of {PAC_BACKENDS}")
+    B, W, P = up.shape
+    if backend == "pallas":
+        from . import fused_step
+        interpret = jax.default_backend() != "tpu"
+        bt = block_t or _fused_block_t(B)
+        bp = block_p or _pallas_block_p(P)
+        if spec.metric == "availability":
+            lark, maj, crepsw = fused_step.fused_pac_eval(
+                up, full, rf=spec.rf, voters=spec.resolved_voters,
+                n_real=spec.n_real, block_t=bt, block_p=bp,
+                interpret=interpret)
+            return StepOutputs(lark=lark, maj=maj, creps=crepsw)
+        rost = None if roster is None else jnp.moveaxis(roster, -1, 1)
+        outs = fused_step.fused_downtime_eval(
+            up, full, rf=spec.rf, n_real=spec.n_real, block_t=bt,
+            block_p=bp, interpret=interpret, roster=rost,
+            recruit=recruit, active=active)
+        counts = outs[6][:, :spec.n_real] if recruit is not None else None
+        return StepOutputs(lark=outs[0], maj=outs[1], leader=outs[2],
+                           leader_full=outs[3], nrep=outs[4],
+                           creps=outs[5], counts=counts)
+
+    xp = np if backend == "numpy" else jnp
+    u, f = _packed_planes(up, xp), _packed_planes(full, xp)
+    counts = None
+    if recruit is not None:
+        counts = _rebuild_node_counts_impl(recruit, active,
+                                           n_real=spec.n_real,
+                                           backend=backend)
+    if spec.metric == "availability":
+        lark, maj, creps = bitpack.pac_eval_packed(
+            u, f, rf=spec.rf, voters=spec.resolved_voters,
+            n_real=spec.n_real, xp=xp)
+        return StepOutputs(lark=lark, maj=maj,
+                           creps=xp.stack(creps, axis=1), counts=counts)
+    rost = None if roster is None else \
+        [roster[..., j] for j in range(spec.rf)]
+    lark, qmaj, leader, lfull, nrep, creps = bitpack.downtime_eval_packed(
+        u, f, rf=spec.rf, n_real=spec.n_real, roster=rost, xp=xp)
+    return StepOutputs(lark=lark, maj=qmaj, leader=leader,
+                       leader_full=lfull, nrep=nrep,
+                       creps=xp.stack(creps, axis=1), counts=counts)
+
+
+# ---------------------------------------------------------------------------
+# 2-D fused-kernel autotuner (block_trials x block_p) with fused-kernel
+# VMEM accounting — the block_p tuner generalized to the megakernel.
+# ---------------------------------------------------------------------------
+
+#: fused-kernel kinds the 2-D tuner can race (StepSpec.fused_kernel)
+FUSED_KERNELS = ("fused_pac", "fused_downtime", "fused_downtime_roster")
+
+
+def fused_vmem_bytes(block_t: int, block_p: int, n_pad: int, *,
+                     rf: int = 3, kernel: str = "fused_pac") -> int:
+    """VMEM live for one fused (block_t, W, block_p) step tile: packed
+    up/full inputs + creps output (3 word tiles, uint32), the row
+    outputs, and — per kernel kind — the roster tile, recruit/active
+    rows, and the revisited (block_t, n_lanes) counts block.  The packed
+    budget is dominated by 3*W words where the boolean kernel held
+    4 n_lanes-wide int32 tiles — the fusion's VMEM headroom is what lets
+    block_t * block_p grow past the 1-D tuner's ceiling."""
+    W = bitpack.n_words(n_pad)
+    n_lanes = _pac_lane_pad(n_pad)
+    words = 3 * block_t * W * block_p * 4
+    rows = 6 * block_t * block_p * 4
+    if kernel == "fused_downtime_roster":
+        rows += block_t * rf * block_p * 4            # roster tile
+        rows += 2 * block_t * block_p * 4             # recruit + active
+        rows += block_t * n_lanes * 4                 # counts accumulator
+    return words + rows
+
+
+def fused_block_candidates(B: int, P: int, n_pad: int, *, rf: int = 3,
+                           kernel: str = "fused_pac",
+                           max_block_t: int = 16, max_block_p: int = 1024,
+                           vmem_limit_bytes: int = 8 * 2 ** 20):
+    """Power-of-two (block_t, block_p) pairs that tile (B, P) within the
+    fused-kernel VMEM budget — deterministic pure function of the shape,
+    like block_p_candidates."""
+    cands = []
+    bt = 1
+    while bt <= min(B, max_block_t):
+        if B % bt == 0:
+            bp = 8
+            while bp <= min(P, max_block_p):
+                if P % bp == 0 and fused_vmem_bytes(
+                        bt, bp, n_pad, rf=rf,
+                        kernel=kernel) <= vmem_limit_bytes:
+                    cands.append((bt, bp))
+                bp *= 2
+        bt *= 2
+    return tuple(cands) or ((_fused_block_t(B), _pallas_block_p(P)),)
+
+
+@dataclass(frozen=True)
+class FusedAutotuneResult:
+    block_t: int
+    block_p: int
+    timings_us: Mapping[Tuple[int, int], float]
+    source: str                       # "measured" | "heuristic-fallback"
+
+
+def _measure_fused_block(B: int, P: int, n_pad: int, bt: int, bp: int, *,
+                         rf: int, voters: int, n_real: int, iters: int,
+                         kernel: str) -> float:
+    """Median µs/call of the fused megakernel at one (bt, bp) tile, on the
+    same deterministic counter-hash density pattern the 1-D tuner uses,
+    packed to words."""
+    import time
+
+    from . import fused_step
+    idx = (jnp.arange(B * P, dtype=jnp.uint32)[:, None]
+           * jnp.uint32(n_pad)
+           + jnp.arange(n_pad, dtype=jnp.uint32)[None, :])
+    up = ((idx * jnp.uint32(2654435761) % jnp.uint32(97)) < 90) \
+        .reshape(B, P, n_pad)
+    full = ((idx * jnp.uint32(40503) % jnp.uint32(89)) < 30) \
+        .reshape(B, P, n_pad)
+    upw = jnp.moveaxis(bitpack.pack_words(up, jnp), -1, 1)
+    fullw = jnp.moveaxis(bitpack.pack_words(full, jnp), -1, 1)
+    interpret = jax.default_backend() != "tpu"
+    if kernel == "fused_pac":
+        fn = jax.jit(functools.partial(
+            fused_step.fused_pac_eval, rf=rf, voters=voters,
+            n_real=n_real, block_t=bt, block_p=bp, interpret=interpret))
+        args = (upw, fullw)
+    elif kernel in ("fused_downtime", "fused_downtime_roster"):
+        kw = dict(rf=rf, n_real=n_real, block_t=bt, block_p=bp,
+                  interpret=interpret)
+        fn = jax.jit(functools.partial(fused_step.fused_downtime_eval,
+                                       **kw))
+        if kernel == "fused_downtime_roster":
+            roster = jnp.broadcast_to(
+                jnp.arange(rf, dtype=jnp.int32)[None, :, None],
+                (B, rf, P))
+            recruit = (jnp.arange(B * P, dtype=jnp.int32) % (n_real + 1)) \
+                .reshape(B, P)
+            active = (recruit % 3) != 0
+            args = (upw, fullw)
+            fn = jax.jit(functools.partial(
+                fused_step.fused_downtime_eval, roster=roster,
+                recruit=recruit, active=active, **kw))
+        else:
+            args = (upw, fullw)
+    else:
+        raise ValueError(f"unknown fused autotune kernel {kernel!r}; "
+                         f"expected one of {FUSED_KERNELS}")
+    jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def autotune_fused_blocks(B: int, P: int, n_pad: int, *, rf: int,
+                          voters: int, n_real: int, candidates=None,
+                          iters: int = 9, measure=None,
+                          force: bool = False,
+                          kernel: str = "fused_pac") -> FusedAutotuneResult:
+    """Pick the fastest (block_t, block_p) pair for the fused megakernel
+    on a (B, P) packed grid.
+
+    Mirrors autotune_block_p's determinism contract: pure-function
+    candidate set, median-of-iters timing, ties toward the smaller tile
+    (block_t then block_p), per-(shape, params, kernel) process cache,
+    heuristic fallback off-TPU unless forced.  The cache key is tagged
+    "fused" and includes the kernel kind and the full 2-D geometry, so it
+    can never alias a 1-D block_p entry — the wrong-kernel race fix
+    extends to the fused family.
+    """
+    if kernel not in FUSED_KERNELS:
+        raise ValueError(f"unknown fused autotune kernel {kernel!r}; "
+                         f"expected one of {FUSED_KERNELS}")
+    cands = tuple(candidates) if candidates is not None else \
+        fused_block_candidates(B, P, n_pad, rf=rf, kernel=kernel)
+    if not cands:
+        raise ValueError("autotune_fused_blocks needs at least one "
+                         "candidate")
+    for bt, bp in cands:
+        if B % bt or P % bp:
+            raise ValueError(f"candidate ({bt}, {bp}) does not tile "
+                             f"(B={B}, P={P})")
+    key = ("fused", kernel, B, P, n_pad, rf, voters, n_real, cands, force)
+    if measure is None and key in _AUTOTUNE_CACHE:
+        return _AUTOTUNE_CACHE[key]
+    if measure is None:
+        if jax.default_backend() != "tpu" and not force:
+            res = FusedAutotuneResult(block_t=_fused_block_t(B),
+                                      block_p=_pallas_block_p(P),
+                                      timings_us={},
+                                      source="heuristic-fallback")
+            _AUTOTUNE_CACHE[key] = res
+            return res
+        measure = functools.partial(_measure_fused_block, rf=rf,
+                                    voters=voters, n_real=n_real,
+                                    iters=iters, kernel=kernel)
+        timings = {c: measure(B, P, n_pad, *c) for c in cands}
+        best = min(sorted(timings), key=lambda c: (timings[c], c))
+        res = FusedAutotuneResult(block_t=best[0], block_p=best[1],
+                                  timings_us=timings, source="measured")
+        _AUTOTUNE_CACHE[key] = res
+        return res
+    timings = {c: float(measure(B, P, n_pad, *c)) for c in cands}
+    best = min(sorted(timings), key=lambda c: (timings[c], c))
+    return FusedAutotuneResult(block_t=best[0], block_p=best[1],
+                               timings_us=timings, source="measured")
+
+
+def step_hbm_bytes(spec: StepSpec, B: int, P: int, n_pad: int) -> dict:
+    """Analytic HBM bytes one step's eval pipeline moves, unfused-boolean
+    vs fused-packed — the roofline story behind the megakernel.
+
+    Unfused counts every separate launch the boolean path pays: the eval
+    kernel reads up/full/valid int32 lane tiles and writes the creps lane
+    tile (+ row outputs), the reconfig roster rides as a lane-padded
+    int32 tile, and the bandwidth model's node-count kernel re-reads
+    recruit/active in its own pass.  Fused-packed moves three W-word
+    uint32 tensors (up, full, creps) plus rows — once.  Ratio ~= the
+    round-trip win the kernel_bench fused rows measure.
+    """
+    R = B * P
+    n_lanes = _pac_lane_pad(n_pad)
+    reconfig = spec.metric == "downtime" and spec.rebuild_model == "reconfig"
+    rows_out = (2 if spec.metric == "availability" else 5) * R * 4
+    # boolean path: pac_eval.py materializes up/full/valid as int32 lanes
+    unfused = 3 * R * n_lanes * 4 + R * n_lanes * 4 + rows_out
+    if reconfig:
+        rf_pad = spec.rf + (-spec.rf % 128)
+        unfused += R * rf_pad * 4                       # roster tile
+        unfused += 2 * R * 4 + B * n_lanes * 4          # node_count pass
+    W = bitpack.n_words(n_pad)
+    fused = 3 * B * W * P * 4 + rows_out
+    if reconfig:
+        fused += B * spec.rf * P * 4                    # unpadded roster
+        fused += 2 * B * P * 4 + B * n_lanes * 4        # folded counts
+    return {"unfused_bytes": unfused, "fused_bytes": fused,
+            "ratio": unfused / fused}
+
+
+# ---------------------------------------------------------------------------
+# Legacy per-kernel entry points — thin deprecated wrappers over step_eval.
+# ---------------------------------------------------------------------------
+
+def _deprecated(old: str):
+    warnings.warn(
+        f"kernels.ops.{old} is deprecated; build a StepSpec and call "
+        "kernels.ops.step_eval (one entry point for every metric/"
+        "backend/layout)", DeprecationWarning, stacklevel=3)
+
+
+def pac_eval_batch(up_succ, full_succ, *, rf: int, voters: int, n_real: int,
+                   backend: str = "jax", block_p: Optional[int] = None):
+    """Deprecated: StepSpec(metric="availability") + step_eval.
+
+    Kept as a thin wrapper so existing callers get the identical
+    (lark, maj, creps) tuple; see _pac_eval_unpacked for the contract.
+    """
+    _deprecated("pac_eval_batch")
+    spec = StepSpec(metric="availability", rf=rf, voters=voters,
+                    n_real=n_real)
+    out = step_eval(spec, up_succ, full_succ, backend=backend,
+                    block_p=block_p)
+    return out.lark, out.maj, out.creps
+
+
+def downtime_eval_batch(up_succ, full_succ, *, rf: int, n_real: int,
+                        backend: str = "jax",
+                        block_p: Optional[int] = None, roster=None):
+    """Deprecated: StepSpec(metric="downtime") + step_eval.
+
+    Kept as a thin wrapper so existing callers get the identical
+    (lark, qmaj, leader, leader_full, nrep, creps) tuple; see
+    _downtime_eval_unpacked for the contract.
+    """
+    _deprecated("downtime_eval_batch")
+    spec = StepSpec(metric="downtime", rf=rf, n_real=n_real,
+                    rebuild_model="reconfig" if roster is not None
+                    else "fixed")
+    out = step_eval(spec, up_succ, full_succ, roster=roster,
+                    backend=backend, block_p=block_p)
+    return (out.lark, out.maj, out.leader, out.leader_full, out.nrep,
+            out.creps)
+
+
+def rebuild_node_counts(recruit, active, *, n_real: int,
+                        backend: str = "jax"):
+    """Deprecated: thin wrapper over the counts path step_eval folds into
+    the fused kernel; see _rebuild_node_counts_impl for the contract."""
+    _deprecated("rebuild_node_counts")
+    return _rebuild_node_counts_impl(recruit, active, n_real=n_real,
+                                     backend=backend)

@@ -29,10 +29,21 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_trials_mesh(devices: int):
     """1-D mesh over the first `devices` devices, axis name "trials".
 
-    The batched availability Monte Carlo shards its independent trials
-    across this axis (shard_map in core/availability_batched.py).  On CPU,
-    validate with XLA_FLAGS=--xla_force_host_platform_device_count=<D> set
-    before any jax import.
+    The batched Monte Carlo engines shard their independent trials across
+    this axis (shard_map in core/availability_batched.py and
+    core/downtime_batched.py).  The sharding proof is layout-independent:
+    every carried tensor — boolean (B, P, n) masks or the packed
+    (B, W, P) uint32 words the fused step megakernel consumes — has
+    trials as its leading axis, the counter-based RNG keys each lane by
+    its *global* trial index (lane0 is carried per shard), and the only
+    cross-partition reduction (the bandwidth model's per-node in-flight
+    counts, fused into the same kernel when packed) stays within one
+    trial.  So splitting the leading axis commutes with every step for
+    both layouts, and devices=D is bit-identical to devices=1
+    (tests/test_sharded.py pins this for unpacked, packed, and the fused
+    pallas path).  On CPU, validate with
+    XLA_FLAGS=--xla_force_host_platform_device_count=<D> set before any
+    jax import.
     """
     import jax
 

@@ -1,0 +1,218 @@
+"""Bit-packed cluster state (kernels/bitpack.py) and the fused step
+megakernel (kernels/fused_step.py): the packing-is-layout-only invariant.
+
+Property tests pin packed-word PAC/downtime evaluation == the boolean
+oracles on random states, rosters, rf and voters (exact equality — the
+math is integer/bit arithmetic, never approximate), and the fused
+pallas_call (interpret mode on CPU) == the same oracles, invariant to the
+(block_t, block_p) tile choice."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import bitpack, fused_step
+from repro.kernels.pac_np import (downtime_eval_rank_np, pac_eval_rank_np,
+                                  rebuild_node_counts_np)
+
+RNG = np.random.default_rng(7)
+
+
+def _state(R, n_pad, n_real, seed):
+    rng = np.random.default_rng(seed)
+    up = rng.random((R, n_pad)) < 0.9
+    full = rng.random((R, n_pad)) < 0.4
+    up[:, n_real:] = False
+    full[:, n_real:] = False
+    return up, full
+
+
+def _planes(bools, xp):
+    words = bitpack.pack_words(bools, xp)
+    return [words[..., k] for k in range(words.shape[-1])]
+
+
+# ---------------------------------------------------------------------------
+# word-level primitives
+# ---------------------------------------------------------------------------
+
+def test_pack_unpack_roundtrip():
+    b = RNG.random((5, 77)) < 0.5
+    w = bitpack.pack_words(b, np)
+    assert w.shape == (5, 3) and w.dtype == np.uint32
+    assert np.array_equal(bitpack.unpack_words(w, 77, np), b)
+
+
+def test_popcount_matches_python_bitcount():
+    v = RNG.integers(0, 2 ** 32, size=257, dtype=np.uint32)
+    want = np.array([int(x).bit_count() for x in v], dtype=np.int32)
+    assert np.array_equal(bitpack.popcount32(v, np), want)
+    assert np.array_equal(np.asarray(bitpack.popcount32(jnp.asarray(v),
+                                                        jnp)), want)
+
+
+def test_prefix_masks_select_first_count_lanes():
+    for count in (0, 1, 31, 32, 33, 64, 155, 160, 200):
+        masks = bitpack.prefix_masks(count, 155)
+        bits = sum(int(m).bit_count() for m in masks)
+        assert bits == min(count, 155)
+        # masks are prefixes: unpacking gives lanes [0, count)
+        w = np.asarray(masks, dtype=np.uint32)[None, :]
+        lanes = bitpack.unpack_words(w, 155, np)[0]
+        assert np.array_equal(lanes, np.arange(155) < count)
+
+
+def test_lowest_set_bits_keeps_first_k_up_lanes():
+    up = RNG.random((64, 96)) < 0.5
+    planes = _planes(up, np)
+    kept = bitpack.lowest_set_bits(planes, 3, np)
+    got = bitpack.unpack_words(np.stack(kept, axis=-1), 96, np)
+    want = up & (np.cumsum(up, axis=1) <= 3)
+    assert np.array_equal(got, want)
+
+
+def test_select_bit_reads_ranks_and_padding():
+    up = RNG.random((32, 40)) < 0.6
+    planes = _planes(up, np)
+    rank = RNG.integers(0, 40, size=32).astype(np.int32)
+    got = bitpack.select_bit(planes, rank, np)
+    want = up[np.arange(32), rank].astype(np.int32)
+    assert np.array_equal(got, want)
+    # out-of-range ranks read as 0, like masked padding lanes
+    assert np.array_equal(
+        bitpack.select_bit(planes, np.full(32, 64, np.int32), np),
+        np.zeros(32, np.int32))
+
+
+# ---------------------------------------------------------------------------
+# packed eval == boolean oracle (property-style, random rosters/rf/voters)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 90), st.integers(1, 5), st.integers(1, 9),
+       st.integers(0, 10 ** 6))
+def test_pac_packed_equals_boolean_oracle(n_real, rf, voters, seed):
+    rf = min(rf, n_real)
+    n_pad = n_real + (-n_real % 8)
+    up, full = _state(64, n_pad, n_real, seed)
+    lark, maj, creps = pac_eval_rank_np(up, full, rf=rf, voters=voters,
+                                        n_real=n_real)
+    pl, pm, pc = bitpack.pac_eval_packed(
+        _planes(up, np), _planes(full, np), rf=rf, voters=voters,
+        n_real=n_real, xp=np)
+    assert np.array_equal(pl, lark)
+    assert np.array_equal(pm, maj)
+    got = bitpack.unpack_words(np.stack(pc, axis=-1), n_pad, np)
+    assert np.array_equal(got, creps)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 90), st.integers(1, 5),
+       st.sampled_from([False, True]), st.integers(0, 10 ** 6))
+def test_downtime_packed_equals_boolean_oracle(n_real, rf, with_roster,
+                                               seed):
+    rf = min(rf, n_real)
+    n_pad = n_real + (-n_real % 8)
+    up, full = _state(64, n_pad, n_real, seed)
+    rng = np.random.default_rng(seed + 1)
+    roster = rng.integers(0, n_real, (64, rf)).astype(np.int32) \
+        if with_roster else None
+    want = downtime_eval_rank_np(up, full, rf=rf, n_real=n_real,
+                                 roster=roster)
+    rost = None if roster is None else \
+        [roster[:, j] for j in range(rf)]
+    got = bitpack.downtime_eval_packed(
+        _planes(up, np), _planes(full, np), rf=rf, n_real=n_real,
+        roster=rost, xp=np)
+    for w, g in zip(want[:5], got[:5]):
+        assert np.array_equal(np.asarray(g), np.asarray(w))
+    creps = bitpack.unpack_words(np.stack(got[5], axis=-1), n_pad, np)
+    assert np.array_equal(creps, want[5])
+
+
+def test_packed_eval_identical_across_numpy_and_jnp():
+    up, full = _state(128, 160, 155, seed=5)
+    args = dict(rf=3, voters=5, n_real=155)
+    a = bitpack.pac_eval_packed(_planes(up, np), _planes(full, np),
+                                xp=np, **args)
+    b = bitpack.pac_eval_packed(_planes(jnp.asarray(up), jnp),
+                                _planes(jnp.asarray(full), jnp),
+                                xp=jnp, **args)
+    assert np.array_equal(np.asarray(b[0]), a[0])
+    assert np.array_equal(np.asarray(b[1]), a[1])
+    for x, y in zip(a[2], b[2]):
+        assert np.array_equal(np.asarray(y), x)
+
+
+# ---------------------------------------------------------------------------
+# fused megakernel (interpret mode) == oracle, block-size invariant
+# ---------------------------------------------------------------------------
+
+def _packed_words(bools):
+    return jnp.moveaxis(bitpack.pack_words(
+        jnp.asarray(bools), jnp), -1, 1)
+
+
+def test_fused_pac_kernel_matches_oracle_any_blocks():
+    B, P, n_real, n_pad = 4, 64, 37, 40
+    up, full = _state(B * P, n_pad, n_real, seed=9)
+    lark, maj, creps = pac_eval_rank_np(up, full, rf=3, voters=5,
+                                        n_real=n_real)
+    upw = _packed_words(up.reshape(B, P, n_pad))
+    fullw = _packed_words(full.reshape(B, P, n_pad))
+    for bt, bp in ((1, 16), (2, 64), (4, 32)):
+        l, m, cw = fused_step.fused_pac_eval(
+            upw, fullw, rf=3, voters=5, n_real=n_real, block_t=bt,
+            block_p=bp, interpret=True)
+        assert np.array_equal(np.asarray(l).ravel(), lark)
+        assert np.array_equal(np.asarray(m).ravel(), maj)
+        got = bitpack.unpack_words(
+            np.moveaxis(np.asarray(cw), 1, -1), n_pad, np)
+        assert np.array_equal(got.reshape(B * P, n_pad), creps)
+
+
+def test_fused_downtime_kernel_roster_counts_match_oracles():
+    B, P, n_real, n_pad = 4, 64, 37, 40
+    up, full = _state(B * P, n_pad, n_real, seed=11)
+    rng = np.random.default_rng(13)
+    roster = rng.integers(0, n_real, (B * P, 3)).astype(np.int32)
+    recruit = rng.integers(0, n_real + 1, (B, P)).astype(np.int32)
+    active = rng.random((B, P)) < 0.5
+    want = downtime_eval_rank_np(up, full, rf=3, n_real=n_real,
+                                 roster=roster)
+    want_counts = rebuild_node_counts_np(recruit, active, n_real=n_real)
+    upw = _packed_words(up.reshape(B, P, n_pad))
+    fullw = _packed_words(full.reshape(B, P, n_pad))
+    rost = jnp.moveaxis(jnp.asarray(roster.reshape(B, P, 3)), -1, 1)
+    outs = fused_step.fused_downtime_eval(
+        upw, fullw, rf=3, n_real=n_real, block_t=2, block_p=32,
+        interpret=True, roster=rost, recruit=jnp.asarray(recruit),
+        active=jnp.asarray(active))
+    for w, g in zip(want[:5], outs[:5]):
+        assert np.array_equal(np.asarray(g).ravel(), np.asarray(w))
+    creps = bitpack.unpack_words(
+        np.moveaxis(np.asarray(outs[5]), 1, -1), n_pad, np)
+    assert np.array_equal(creps.reshape(B * P, n_pad), want[5])
+    # counts accumulate across partition tiles; columns >= n_real are
+    # sentinel padding the caller (ops.step_eval) slices off
+    assert np.array_equal(np.asarray(outs[6])[:, :n_real], want_counts)
+
+
+def test_fused_kernel_rejects_non_tiling_blocks():
+    upw = jnp.zeros((4, 2, 48), dtype=jnp.uint32)
+    with pytest.raises(ValueError, match="tile"):
+        fused_step.fused_pac_eval(upw, upw, rf=2, voters=3, n_real=40,
+                                  block_t=3, block_p=16, interpret=True)
+    with pytest.raises(ValueError, match="tile"):
+        fused_step.fused_downtime_eval(upw, upw, rf=2, n_real=40,
+                                       block_t=2, block_p=36,
+                                       interpret=True)
+
+
+def test_packed_state_bytes_reduction():
+    # five uint32 words replace a 256-lane bool tile at n=155: the carry
+    # shrinks ~7.8x, the capacity half of the megakernel story
+    packed = bitpack.packed_state_bytes(1024, 4096, 155)
+    boolean = 1024 * 4096 * 155
+    assert packed == 1024 * 5 * 4096 * 4
+    assert boolean / packed > 7.5

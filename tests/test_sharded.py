@@ -136,6 +136,49 @@ def test_eight_device_bandwidth_contended_run_bit_identical():
 
 
 @pytest.mark.slow
+def test_eight_device_fused_packed_run_bit_identical():
+    """The fused-megakernel acceptance criterion: the packed (B, W, P)
+    carry + fused pallas step on an 8-device trials mesh must land on
+    the exact same trajectories as devices=1 AND as the unpacked boolean
+    jax run — packing/fusion are layout-only, sharding included."""
+    script = textwrap.dedent("""
+        import numpy as np
+        from repro.core.downtime_batched import simulate_downtime_batched
+        kw = dict(n=13, partitions=32, rf=2, p=5e-3, trials=8,
+                  max_ticks=4_000, min_ticks=10**9, chunk_steps=64,
+                  max_steps=600, seed=11, trajectory=True,
+                  pair_fail_prob=0.3, restart_period=900,
+                  rebuild_model="reconfig", rebuild_ticks_per_gib=64,
+                  size_dist="zipf", size_skew=1.2,
+                  node_bandwidth_gibps=1.0)
+        ref = simulate_downtime_batched(backend="jax", devices=1, **kw)
+        for backend in ("jax", "pallas"):
+            for d in (1, 8):
+                rp = simulate_downtime_batched(backend=backend, devices=d,
+                                               packed=True, **kw)
+                for k in ref.trajectory:
+                    assert np.array_equal(ref.trajectory[k],
+                                          rp.trajectory[k]), \\
+                        (backend, d, k)
+                assert ref.pause_lark == rp.pause_lark
+                assert ref.pause_quorum == rp.pause_quorum
+                assert np.array_equal(ref.hist_lark, rp.hist_lark)
+                assert np.array_equal(ref.hist_quorum, rp.hist_quorum)
+                assert np.array_equal(ref.pause_quorum_trials,
+                                      rp.pause_quorum_trials)
+        print("OK")
+    """)
+    env = dict(os.environ,
+               JAX_PLATFORMS="cpu",
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=str(Path(__file__).resolve().parents[1] / "src"))
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr
+    assert "OK" in out.stdout
+
+
+@pytest.mark.slow
 def test_eight_device_downtime_run_bit_identical_to_single():
     """The §6 engine under the same acceptance criterion, for BOTH
     quorum-log rebuild models: pause fractions, histograms, and

@@ -1,0 +1,299 @@
+"""The unified step API (kernels.ops.StepSpec / step_eval), the
+DowntimeParams knob dataclass, and the deprecated legacy wrappers.
+
+Pins: spec/argument validation errors all fire at construction/dispatch
+with the messages callers match on; the packed (bit-word) layout is
+bit-identical to the boolean layout across every backend; params= and
+loose keywords drive simulate_downtime_batched to identical results; the
+legacy per-kernel entry points warn but still return their exact legacy
+tuples."""
+import warnings
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.downtime_batched import (DowntimeParams,
+                                         simulate_downtime_batched)
+from repro.kernels import bitpack
+from repro.kernels.ops import (PAC_BACKENDS, StepSpec, downtime_eval_batch,
+                               pac_eval_batch, rebuild_node_counts,
+                               step_eval, step_hbm_bytes)
+
+RNG = np.random.default_rng(23)
+
+_KW = dict(n=13, partitions=32, rf=2, p=5e-3, trials=3, max_ticks=4_000,
+           min_ticks=10**9, chunk_steps=64, max_steps=600, seed=11,
+           trajectory=True)
+
+
+def _state(R, n_pad, n_real, seed=3):
+    rng = np.random.default_rng(seed)
+    up = rng.random((R, n_pad)) < 0.85
+    full = rng.random((R, n_pad)) < 0.4
+    up[:, n_real:] = False
+    full[:, n_real:] = False
+    return up, full
+
+
+def _pack(bools, B, P, n_pad):
+    return jnp.moveaxis(bitpack.pack_words(
+        jnp.asarray(bools).reshape(B, P, n_pad), jnp), -1, 1)
+
+
+# ---------------------------------------------------------------------------
+# StepSpec construction and derived properties
+# ---------------------------------------------------------------------------
+
+def test_stepspec_validation_errors():
+    ok = dict(metric="downtime", rf=3, n_real=9)
+    StepSpec(**ok)                                   # sanity
+    with pytest.raises(ValueError, match="step metric"):
+        StepSpec(**{**ok, "metric": "latency"})
+    with pytest.raises(ValueError, match="rebuild_model"):
+        StepSpec(**ok, rebuild_model="raid")
+    with pytest.raises(ValueError, match="rf="):
+        StepSpec(metric="downtime", rf=10, n_real=9)
+    with pytest.raises(ValueError, match="rf="):
+        StepSpec(metric="downtime", rf=0, n_real=9)
+    with pytest.raises(ValueError, match="voters"):
+        StepSpec(**ok, voters=0)
+    with pytest.raises(ValueError, match="must be >= 0"):
+        StepSpec(**ok, dupres_ticks=-1)
+    with pytest.raises(ValueError, match="must be >= 0"):
+        StepSpec(**ok, rebuild_steps=-1)
+
+
+def test_stepspec_is_frozen_and_hashable():
+    spec = StepSpec(metric="availability", rf=3, n_real=155)
+    with pytest.raises(Exception):
+        spec.rf = 4
+    assert spec == StepSpec(metric="availability", rf=3, n_real=155)
+    assert len({spec, StepSpec(metric="availability", rf=3, n_real=155,
+                               packed=True)}) == 2
+
+
+def test_stepspec_resolved_voters_follow_the_paper():
+    # availability: 2*(rf-1)+1 majority voters; downtime: rf replicas
+    assert StepSpec(metric="availability", rf=3,
+                    n_real=9).resolved_voters == 5
+    assert StepSpec(metric="downtime", rf=3, n_real=9).resolved_voters == 3
+    assert StepSpec(metric="downtime", rf=3, n_real=9,
+                    voters=7).resolved_voters == 7
+
+
+def test_stepspec_fused_kernel_kinds():
+    assert StepSpec(metric="availability", rf=3,
+                    n_real=9).fused_kernel == "fused_pac"
+    assert StepSpec(metric="downtime", rf=3,
+                    n_real=9).fused_kernel == "fused_downtime"
+    assert StepSpec(metric="downtime", rf=3, n_real=9,
+                    rebuild_model="reconfig").fused_kernel \
+        == "fused_downtime_roster"
+
+
+# ---------------------------------------------------------------------------
+# step_eval argument validation
+# ---------------------------------------------------------------------------
+
+def test_step_eval_rejects_mismatched_arguments():
+    up, full = _state(8, 16, 13)
+    avail = StepSpec(metric="availability", rf=2, n_real=13)
+    fixed = StepSpec(metric="downtime", rf=2, n_real=13)
+    roster = np.zeros((8, 2), np.int32)
+    with pytest.raises(ValueError, match="roster"):
+        step_eval(fixed, up, full, roster=roster, backend="numpy")
+    with pytest.raises(ValueError, match="together"):
+        step_eval(fixed, up, full, recruit=np.zeros((1, 8), np.int32),
+                  backend="numpy")
+    with pytest.raises(ValueError, match="downtime"):
+        step_eval(avail, up, full, recruit=np.zeros((1, 8), np.int32),
+                  active=np.ones((1, 8), bool), backend="numpy")
+    with pytest.raises(ValueError, match="backend"):
+        step_eval(avail, up, full, backend="torch")
+
+
+# ---------------------------------------------------------------------------
+# layout bit-identity: packed x every backend == unpacked numpy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", PAC_BACKENDS)
+def test_step_eval_availability_packed_matches_unpacked(backend):
+    B, P, n_real, n_pad = 4, 32, 13, 16
+    up, full = _state(B * P, n_pad, n_real)
+    spec = StepSpec(metric="availability", rf=2, n_real=n_real)
+    want = step_eval(spec, up, full, backend="numpy")
+    upw, fullw = _pack(up, B, P, n_pad), _pack(full, B, P, n_pad)
+    if backend == "numpy":
+        upw, fullw = np.asarray(upw), np.asarray(fullw)
+    got = step_eval(StepSpec(metric="availability", rf=2, n_real=n_real,
+                             packed=True), upw, fullw, backend=backend)
+    assert np.array_equal(np.asarray(got.lark).ravel(), want.lark)
+    assert np.array_equal(np.asarray(got.maj).ravel(), want.maj)
+    creps = bitpack.unpack_words(
+        np.moveaxis(np.asarray(got.creps), 1, -1), n_pad, np)
+    assert np.array_equal(creps.reshape(B * P, n_pad), want.creps)
+    assert got.leader is None and got.counts is None
+
+
+@pytest.mark.parametrize("backend", PAC_BACKENDS)
+def test_step_eval_reconfig_packed_matches_unpacked(backend):
+    B, P, n_real, n_pad = 4, 32, 13, 16
+    up, full = _state(B * P, n_pad, n_real, seed=5)
+    rng = np.random.default_rng(7)
+    roster = rng.integers(0, n_real, (B * P, 3)).astype(np.int32)
+    recruit = rng.integers(0, n_real + 1, (B, P)).astype(np.int32)
+    active = rng.random((B, P)) < 0.5
+    spec = StepSpec(metric="downtime", rf=3, n_real=n_real,
+                    rebuild_model="reconfig")
+    want = step_eval(spec, up, full, roster=roster, recruit=recruit,
+                     active=active, backend="numpy")
+    upw, fullw = _pack(up, B, P, n_pad), _pack(full, B, P, n_pad)
+    # packed step_eval takes the engine's carried (B, P, rf) roster layout
+    rost = jnp.asarray(roster.reshape(B, P, 3))
+    rec, act = jnp.asarray(recruit), jnp.asarray(active)
+    if backend == "numpy":
+        upw, fullw = np.asarray(upw), np.asarray(fullw)
+        rost, rec, act = roster.reshape(B, P, 3), recruit, active
+    got = step_eval(StepSpec(metric="downtime", rf=3, n_real=n_real,
+                             rebuild_model="reconfig", packed=True),
+                    upw, fullw, roster=rost, recruit=rec, active=act,
+                    backend=backend)
+    for name in ("lark", "maj", "leader", "leader_full", "nrep"):
+        assert np.array_equal(np.asarray(getattr(got, name)).ravel(),
+                              getattr(want, name)), (backend, name)
+    creps = bitpack.unpack_words(
+        np.moveaxis(np.asarray(got.creps), 1, -1), n_pad, np)
+    assert np.array_equal(creps.reshape(B * P, n_pad), want.creps)
+    assert np.array_equal(np.asarray(got.counts), want.counts)
+
+
+def test_step_hbm_bytes_reports_fused_savings():
+    spec = StepSpec(metric="downtime", rf=3, n_real=155,
+                    rebuild_model="reconfig", packed=True)
+    hbm = step_hbm_bytes(spec, 8, 4096, 160)
+    assert hbm["fused_bytes"] <= hbm["unfused_bytes"]
+    assert hbm["ratio"] > 1
+
+
+# ---------------------------------------------------------------------------
+# DowntimeParams: one home for the §6 knob rules
+# ---------------------------------------------------------------------------
+
+def test_downtime_params_defaults_are_valid_and_fixed_model():
+    p = DowntimeParams()
+    assert not p.reconfig and not p.bandwidth_shared
+
+
+def test_downtime_params_validation_errors():
+    with pytest.raises(ValueError, match="dupres_ticks"):
+        DowntimeParams(dupres_ticks=-1)
+    with pytest.raises(ValueError, match="rebuild_steps"):
+        DowntimeParams(rebuild_steps=-1)
+    with pytest.raises(ValueError, match="hist_bins"):
+        DowntimeParams(hist_bins=1)
+    with pytest.raises(ValueError, match="hist_bins"):
+        DowntimeParams(hist_bins=31)
+    with pytest.raises(ValueError, match="rebuild_model"):
+        DowntimeParams(rebuild_model="raid")
+    with pytest.raises(ValueError, match="rebuild_ticks_per_gib"):
+        DowntimeParams(rebuild_model="reconfig", rebuild_ticks_per_gib=-1)
+    with pytest.raises(ValueError, match="size_dist"):
+        DowntimeParams(rebuild_model="reconfig", size_dist="pareto")
+    with pytest.raises(ValueError, match="size_skew"):
+        DowntimeParams(rebuild_model="reconfig", size_skew=-0.1)
+    with pytest.raises(ValueError, match="quantum"):
+        DowntimeParams(rebuild_model="reconfig", node_bandwidth_gibps=0)
+    # skew/bandwidth knobs describe reconfig's data-sized catch-ups only
+    with pytest.raises(ValueError, match="reconfig"):
+        DowntimeParams(size_dist="zipf")
+    with pytest.raises(ValueError, match="reconfig"):
+        DowntimeParams(node_bandwidth_gibps=4.0)
+
+
+def test_downtime_params_reconfig_properties():
+    p = DowntimeParams(rebuild_model="reconfig", size_dist="zipf",
+                       size_skew=1.2, node_bandwidth_gibps=2.0)
+    assert p.reconfig and p.bandwidth_shared
+
+
+def test_engine_accepts_params_identical_to_loose_kwargs():
+    knobs = dict(rebuild_model="reconfig", size_dist="zipf", size_skew=1.0,
+                 node_bandwidth_gibps=2.0, dupres_ticks=2,
+                 rebuild_steps=60)
+    legacy = simulate_downtime_batched(backend="numpy", **knobs, **_KW)
+    via_params = simulate_downtime_batched(
+        backend="numpy", params=DowntimeParams(**knobs), **_KW)
+    for k in legacy.trajectory:
+        assert np.array_equal(legacy.trajectory[k],
+                              via_params.trajectory[k]), k
+    assert legacy.pause_lark == via_params.pause_lark
+    assert legacy.pause_quorum == via_params.pause_quorum
+    assert np.array_equal(legacy.hist_quorum, via_params.hist_quorum)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_engine_packed_layout_is_bit_identical(backend):
+    plain = simulate_downtime_batched(backend=backend, **_KW)
+    packed = simulate_downtime_batched(backend=backend, packed=True, **_KW)
+    for k in plain.trajectory:
+        assert np.array_equal(plain.trajectory[k], packed.trajectory[k]), k
+    assert plain.pause_lark == packed.pause_lark
+    assert plain.pause_quorum == packed.pause_quorum
+    assert np.array_equal(plain.hist_lark, packed.hist_lark)
+    assert np.array_equal(plain.hist_quorum, packed.hist_quorum)
+
+
+# ---------------------------------------------------------------------------
+# deprecated wrappers: warn, but return the exact legacy tuples
+# ---------------------------------------------------------------------------
+
+def test_pac_eval_batch_deprecated_but_faithful():
+    up, full = _state(64, 16, 13)
+    spec = StepSpec(metric="availability", rf=2, voters=3, n_real=13)
+    want = step_eval(spec, up, full, backend="numpy")
+    with pytest.warns(DeprecationWarning, match="step_eval"):
+        lark, maj, creps = pac_eval_batch(up, full, rf=2, voters=3,
+                                          n_real=13, backend="numpy")
+    assert np.array_equal(lark, want.lark)
+    assert np.array_equal(maj, want.maj)
+    assert np.array_equal(creps, want.creps)
+
+
+def test_downtime_eval_batch_deprecated_but_faithful():
+    up, full = _state(64, 16, 13, seed=9)
+    roster = RNG.integers(0, 13, (64, 2)).astype(np.int32)
+    with pytest.warns(DeprecationWarning, match="step_eval"):
+        legacy = downtime_eval_batch(up, full, rf=2, n_real=13,
+                                     backend="numpy", roster=roster)
+    spec = StepSpec(metric="downtime", rf=2, n_real=13,
+                    rebuild_model="reconfig")
+    want = step_eval(spec, up, full, roster=roster, backend="numpy")
+    assert len(legacy) == 6
+    for got, exp in zip(legacy, (want.lark, want.maj, want.leader,
+                                 want.leader_full, want.nrep, want.creps)):
+        assert np.array_equal(got, exp)
+
+
+def test_rebuild_node_counts_deprecated_but_faithful():
+    recruit = RNG.integers(0, 14, (4, 32)).astype(np.int32)
+    active = RNG.random((4, 32)) < 0.5
+    with pytest.warns(DeprecationWarning):
+        counts = rebuild_node_counts(recruit, active, n_real=13,
+                                     backend="numpy")
+    spec = StepSpec(metric="downtime", rf=2, n_real=13,
+                    rebuild_model="reconfig")
+    up = np.zeros((4 * 32, 16), bool)
+    up[:, 0] = True
+    roster = np.zeros((4 * 32, 2), np.int32)
+    want = step_eval(spec, up, up, roster=roster, recruit=recruit,
+                     active=active, backend="numpy")
+    assert np.array_equal(counts, want.counts)
+
+
+def test_new_entry_point_does_not_warn():
+    up, full = _state(16, 16, 13)
+    spec = StepSpec(metric="availability", rf=2, n_real=13)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        step_eval(spec, up, full, backend="numpy")
