@@ -20,6 +20,16 @@ makes concurrent catch-ups share each recruit node's ingest bandwidth).
 Downtime rows are batched-only ("event" maps to "numpy").  See
 docs/BENCHMARKS.md for the full CLI surface.
 
+--metric latency layers the client-traffic request engine
+(core/client_latency.py) over the same trajectories: zipf key popularity
+(--key-zipf) mapped onto partitions, a --read-frac read/write mix at
+--requests-per-tick offered cluster load, per-key dup-res first-touch
+charges for LARK vs full rebuild-wait charges for the quorum-log
+baseline (and the Hermes-style read-local contrast).  Rows carry
+p50/p99/p999 added commit latency, the --slo-ticks violation fraction,
+and the quorum wait histogram.  Latency rows accept every downtime knob
+(the protocol under the workload is the same) and are batched-only.
+
 Backends (--backend):
   event    scalar heapq event engine (core/availability.py); --trials N runs
            N sequential seeds and averages — the seed repo's behavior
@@ -56,6 +66,7 @@ from repro.core.analytical import (improvement_factor, lark_unavailability,
                                    node_unavailability)
 from repro.core.availability import simulate_availability
 from repro.core.availability_batched import simulate_availability_batched
+from repro.core.client_latency import simulate_client_latency
 from repro.core.downtime_batched import (SIZE_DISTS, DowntimeParams,
                                          simulate_downtime_batched)
 from repro.core.scenarios import get_scenario, scenario_names
@@ -111,9 +122,11 @@ def _autotune_row(n: int, parts: int, trials: int, devices: int, *,
     the two families can never return each other's entries).  Returns
     (block_p, block_t, row); block_t is None for the unpacked race."""
     voters = 2 * (rf - 1) + 1
+    # the latency layer rides on the downtime step — same kernels, same
+    # valid block choices, so it reuses the downtime race verbatim
     if packed:
         from repro.kernels.ops import autotune_fused_blocks
-        if metric == "downtime":
+        if metric in ("downtime", "latency"):
             kernel = "fused_downtime_roster" if rebuild_model == "reconfig" \
                 else "fused_downtime"
         else:
@@ -131,7 +144,7 @@ def _autotune_row(n: int, parts: int, trials: int, devices: int, *,
         return res.block_p, res.block_t, row
     from repro.kernels.ops import autotune_block_p
     R = (trials // devices) * parts
-    if metric == "downtime":
+    if metric in ("downtime", "latency"):
         kernel = "downtime_roster" if rebuild_model == "reconfig" \
             else "downtime"
     else:
@@ -284,6 +297,75 @@ def run_downtime_scenarios(names, full: bool = False, trials: int = 4,
     return rows
 
 
+def _latency_row(r, *, kind: str, scenario: str):
+    return {
+        "kind": kind, "scenario": scenario, "rf": r.rf, "p": r.p,
+        "lat_lark": r.lat_lark, "lat_quorum": r.lat_quorum,
+        "lat_hermes": r.lat_hermes,
+        "ci_lat_lark": r.ci_lat_lark, "ci_lat_quorum": r.ci_lat_quorum,
+        "p50_lark": r.p50_lark, "p99_lark": r.p99_lark,
+        "p999_lark": r.p999_lark,
+        "p50_quorum": r.p50_quorum, "p99_quorum": r.p99_quorum,
+        "p999_quorum": r.p999_quorum,
+        "p50_hermes": r.p50_hermes, "p99_hermes": r.p99_hermes,
+        "p999_hermes": r.p999_hermes,
+        "slo_lark": r.slo_lark, "slo_quorum": r.slo_quorum,
+        "slo_hermes": r.slo_hermes,
+        "req_total": r.req_total,
+        "hist_edges": r.hist_edges.tolist(),
+        "hist_quorum_req": r.hist_quorum_req.tolist(),
+        "dupres_ticks": r.dupres_ticks, "rebuild_model": r.rebuild_model,
+        "key_zipf": r.key_zipf, "read_frac": r.read_frac,
+        "requests_per_tick": r.requests_per_tick,
+        "slo_ticks": r.slo_ticks,
+        "ticks": r.ticks,
+    }
+
+
+def run_latency(full: bool = False, trials: int = 4, backend: str = "jax",
+                seed: int = 0, devices: int = 1, smoke: bool = False,
+                pac_block_p=None, params: DowntimeParams = DowntimeParams(),
+                packed: bool = False, block_t=None):
+    """Client-latency rows over the i.i.d. grid — same grid/scale/tick
+    budgets as the downtime metric, so the two row families describe the
+    same trajectories."""
+    backend, devices = _batched_backend(backend, devices)
+    grid = _iid_grid(full, smoke)
+    n, parts, max_ticks, min_ticks = _run_scale(full, smoke, scenario=False)
+    rows = []
+    for rf, p in grid:
+        r = simulate_client_latency(
+            n=n, partitions=parts, rf=rf, p=p, trials=trials,
+            max_ticks=max_ticks, min_ticks=min_ticks, seed=seed,
+            backend=backend, devices=devices, pac_block_p=pac_block_p,
+            params=params, packed=packed, block_t=block_t)
+        rows.append(_latency_row(r, kind="latency", scenario="iid"))
+    return rows
+
+
+def run_latency_scenarios(names, full: bool = False, trials: int = 4,
+                          backend: str = "jax", seed: int = 0,
+                          devices: int = 1, smoke: bool = False,
+                          pac_block_p=None,
+                          params: DowntimeParams = DowntimeParams(),
+                          packed: bool = False, block_t=None):
+    backend, devices = _batched_backend(backend, devices)
+    n, parts, max_ticks, min_ticks = _run_scale(full, smoke, scenario=True)
+    rows = []
+    for name in names:
+        sc = get_scenario(name)
+        for rf, p in sc.grid:
+            r = simulate_client_latency(
+                n=n, partitions=parts, rf=rf, p=p, trials=trials,
+                max_ticks=max_ticks, min_ticks=min_ticks, seed=seed,
+                backend=backend, devices=devices, pac_block_p=pac_block_p,
+                params=params, packed=packed, block_t=block_t,
+                **sc.kwargs(n=n, rf=rf, p=p))
+            rows.append(_latency_row(r, kind="latency_scenario",
+                                     scenario=name))
+    return rows
+
+
 def _resolve_scenarios(args, ap):
     names = []
     for sel in args.scenario or []:
@@ -310,9 +392,10 @@ def main(argv=None, *, strict: bool = True):
     ap.add_argument("--backend", default="event",
                     choices=("event", "numpy", "jax", "pallas"))
     ap.add_argument("--metric", default="availability",
-                    choices=("availability", "downtime"),
-                    help="instantaneous availability (§5.1) or "
-                         "commit-pause durations (§6)")
+                    choices=("availability", "downtime", "latency"),
+                    help="instantaneous availability (§5.1), commit-pause "
+                         "durations (§6), or client-visible commit "
+                         "latency under a keyed request workload")
     ap.add_argument("--dupres-ticks", type=int, default=None,
                     help="LARK dup-res round-trip cost in ticks "
                          "(downtime metric only; default 1)")
@@ -346,6 +429,20 @@ def main(argv=None, *, strict: bool = True):
                          "full-speed streams; concurrent rebuilds on one "
                          "recruit share it ('inf' disables sharing, the "
                          "default; --rebuild-model reconfig only)")
+    ap.add_argument("--key-zipf", type=float, default=None,
+                    help="zipf exponent of the key-popularity workload "
+                         "(0 = exactly uniform traffic; --metric latency "
+                         "only; default 1)")
+    ap.add_argument("--read-frac", type=float, default=None,
+                    help="fraction of requests that are reads (the rest "
+                         "are writes; --metric latency only; default 0.8)")
+    ap.add_argument("--requests-per-tick", type=float, default=None,
+                    help="offered cluster-wide request rate "
+                         "(--metric latency only; default 32)")
+    ap.add_argument("--slo-ticks", type=int, default=None,
+                    help="SLO threshold: rows report the fraction of "
+                         "requests whose added commit latency exceeds "
+                         "this (--metric latency only; default 8)")
     ap.add_argument("--trials", type=int, default=1,
                     help="seeds (event) or batch size (batched backends)")
     ap.add_argument("--devices", type=int, default=1,
@@ -386,7 +483,7 @@ def main(argv=None, *, strict: bool = True):
     if args.packed and args.backend == "event":
         ap.error("--packed runs the batched engines; use --backend "
                  "numpy, jax, or pallas")
-    if args.metric != "downtime":
+    if args.metric not in ("downtime", "latency"):
         if args.dupres_ticks is not None or args.rebuild_steps is not None \
                 or args.rebuild_model is not None \
                 or args.rebuild_ticks_per_gib is not None \
@@ -396,7 +493,31 @@ def main(argv=None, *, strict: bool = True):
             ap.error("--dupres-ticks/--rebuild-steps/--rebuild-model/"
                      "--rebuild-ticks-per-gib/--size-dist/--size-skew/"
                      "--node-bandwidth-gibps only apply to "
-                     "--metric downtime")
+                     "--metric downtime or latency")
+    if args.metric != "latency":
+        if args.key_zipf is not None or args.read_frac is not None \
+                or args.requests_per_tick is not None \
+                or args.slo_ticks is not None:
+            ap.error("--key-zipf/--read-frac/--requests-per-tick/"
+                     "--slo-ticks model the request workload; use "
+                     "--metric latency")
+    elif args.backend == "event":
+        ap.error("--metric latency runs the batched engines; use "
+                 "--backend numpy, jax, or pallas")
+    if args.metric == "latency":
+        if args.key_zipf is None:
+            args.key_zipf = 1.0
+        if args.read_frac is None:
+            args.read_frac = 0.8
+        if args.requests_per_tick is None:
+            args.requests_per_tick = 32.0
+        if args.slo_ticks is None:
+            args.slo_ticks = 8
+    else:
+        # other metrics never read these; keep the DowntimeParams
+        # zero-request defaults so params equality is stable
+        args.key_zipf, args.read_frac = 0.0, 1.0
+        args.requests_per_tick, args.slo_ticks = 0.0, 0
     if args.rebuild_model is None:
         args.rebuild_model = "fixed"
     if args.rebuild_model == "reconfig" and args.rebuild_steps is not None:
@@ -439,7 +560,10 @@ def main(argv=None, *, strict: bool = True):
             rebuild_model=args.rebuild_model,
             rebuild_ticks_per_gib=args.rebuild_ticks_per_gib,
             size_dist=args.size_dist, size_skew=args.size_skew,
-            node_bandwidth_gibps=args.node_bandwidth_gibps)
+            node_bandwidth_gibps=args.node_bandwidth_gibps,
+            key_zipf=args.key_zipf, read_frac=args.read_frac,
+            requests_per_tick=args.requests_per_tick,
+            slo_ticks=args.slo_ticks)
     except ValueError as e:
         ap.error(str(e))
 
@@ -460,7 +584,30 @@ def main(argv=None, *, strict: bool = True):
             packed=args.packed)
         rows.append(row)
 
-    if args.metric == "downtime":
+    if args.metric == "latency":
+        common = dict(full=args.full, trials=args.trials,
+                      backend=args.backend, devices=args.devices,
+                      smoke=args.smoke, pac_block_p=pac_block_p,
+                      params=dt_params, packed=args.packed,
+                      block_t=block_t)
+        if not args.scenarios_only:
+            for r in run_latency(**common):
+                rows.append(r)
+                print(f"latency,rf{r['rf']}_p{r['p']:g},0,"
+                      f"lat_lark={r['lat_lark']:.3e};"
+                      f"lat_quorum={r['lat_quorum']:.3e};"
+                      f"p999_lark={r['p999_lark']:g};"
+                      f"p999_quorum={r['p999_quorum']:g};"
+                      f"slo_quorum={r['slo_quorum']:.3e}")
+        if names:
+            for r in run_latency_scenarios(names, **common):
+                rows.append(r)
+                print(f"latency_scenario,{r['scenario']}_rf{r['rf']}_"
+                      f"p{r['p']:g},0,lat_lark={r['lat_lark']:.3e};"
+                      f"lat_quorum={r['lat_quorum']:.3e};"
+                      f"p999_quorum={r['p999_quorum']:g};"
+                      f"slo_quorum={r['slo_quorum']:.3e}")
+    elif args.metric == "downtime":
         common = dict(full=args.full, trials=args.trials,
                       backend=args.backend, devices=args.devices,
                       smoke=args.smoke, pac_block_p=pac_block_p,
@@ -508,7 +655,12 @@ def main(argv=None, *, strict: bool = True):
                 "devices": args.devices, "full": args.full,
                 "smoke": args.smoke, "scenarios": names,
                 "metric": args.metric, "packed": args.packed}
-        if args.metric == "downtime":
+        if args.metric == "latency":
+            meta["key_zipf"] = args.key_zipf
+            meta["read_frac"] = args.read_frac
+            meta["requests_per_tick"] = args.requests_per_tick
+            meta["slo_ticks"] = args.slo_ticks
+        if args.metric in ("downtime", "latency"):
             meta["rebuild_model"] = args.rebuild_model
             meta["size_dist"] = args.size_dist
             # match the result rows' normalization: the skew knob is

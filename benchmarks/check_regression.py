@@ -3,12 +3,22 @@
 Compares an ``availability_sweep.py --json`` dump row-by-row with a
 baseline produced by the same command and exits 1 when any shared row's
 gated columns (u_lark/u_maj for availability rows, pause_lark /
-pause_quorum for --metric downtime rows) drift more than --sigma combined
-standard errors (CI half-widths are 95% → se = ci/1.96).  Downtime rows
-are additionally keyed by rebuild_model, so fixed and reconfig baselines
-never gate each other.  Loads are strict RFC JSON (``Infinity``/``NaN``
-tokens are rejected); a null gated value (a serialized non-finite) skips
-that column's gate with a note.
+pause_quorum for --metric downtime rows, lat_lark/lat_quorum for
+--metric latency rows) drift more than --sigma combined standard errors
+(CI half-widths are 95% → se = ci/1.96).  Downtime rows are additionally
+keyed by rebuild_model, so fixed and reconfig baselines never gate each
+other; latency rows are further keyed by the workload knobs
+(read_frac/key_zipf/slo_ticks/requests_per_tick/dupres_ticks) — the same
+trajectories under a different workload are a different measurement, not
+drift.  Loads are strict RFC JSON (``Infinity``/``NaN`` tokens are
+rejected); a null gated value (a serialized non-finite) skips that
+column's gate with a note.
+
+--summary-json PATH additionally writes a machine-readable per-column
+verdict list (status ok/fail/null-skipped plus new-row/missing-row
+entries, each with drift, se, and z-score) — the CI workflow renders it
+into the GitHub Actions step summary, and when $GITHUB_STEP_SUMMARY is
+set the script appends a markdown table there directly.
 
 The Monte Carlo draws counter-based randomness, so an unchanged tree
 reproduces the baseline *exactly*; drift within sigma allows for
@@ -35,6 +45,11 @@ semantic change that should come with a refreshed baseline:
         --size-dist zipf --size-skew 1 --node-bandwidth-gibps 1 \
         --scenario all --json benchmarks/BENCH_downtime_skew.json
 
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python benchmarks/availability_sweep.py --backend jax --trials 8 \
+        --devices 8 --metric latency --smoke --scenario all \
+        --json benchmarks/BENCH_latency.json
+
 Fused-megakernel rows (--packed, bit-packed state + the fused pallas
 step kernel) are keyed identically to their unpacked counterparts ON
 PURPOSE: packing is layout-only, so a --packed run gated against an
@@ -48,17 +63,21 @@ from __future__ import annotations
 import argparse
 import json
 import math
+import os
 import sys
 
 _SE_FLOOR = 1e-12   # deterministic RNG: identical runs pass at se == 0
 
 
 #: gated value/CI column pairs per row kind ("availability" covers the
-#: legacy iid/scenario kinds; "downtime" rows carry pause fractions)
+#: legacy iid/scenario kinds; "downtime" rows carry pause fractions;
+#: "latency" rows carry mean added commit latencies)
 _GATED_COLS = {
     "availability": (("u_lark", "ci_lark"), ("u_maj", "ci_maj")),
     "downtime": (("pause_lark", "ci_pause_lark"),
                  ("pause_quorum", "ci_pause_quorum")),
+    "latency": (("lat_lark", "ci_lat_lark"),
+                ("lat_quorum", "ci_lat_quorum")),
 }
 
 
@@ -78,19 +97,37 @@ def row_key(r: dict):
                 r.get("rebuild_model", "fixed"),
                 r.get("size_dist", "uniform"), r.get("size_skew", 0.0),
                 r.get("node_bandwidth_gibps"))
+    if r.get("kind") in ("latency", "latency_scenario"):
+        # the workload knobs select the measurement: a different request
+        # mix / skew / SLO / cost model is a different row family, never
+        # compared against another one's baseline
+        return ("latency", r.get("scenario", "iid"), r["rf"], r["p"],
+                r.get("rebuild_model", "fixed"),
+                r.get("read_frac"), r.get("key_zipf"),
+                r.get("slo_ticks"), r.get("requests_per_tick"),
+                r.get("dupres_ticks"))
     return None                      # autotune/meta rows are not gated
 
 
 def row_cols(r: dict):
-    kind = "downtime" if r.get("kind", "").startswith("downtime") \
-        else "availability"
-    return _GATED_COLS[kind]
+    kind = r.get("kind", "")
+    if kind.startswith("downtime"):
+        return _GATED_COLS["downtime"]
+    if kind.startswith("latency"):
+        return _GATED_COLS["latency"]
+    return _GATED_COLS["availability"]
 
 
 def compare(new: dict, base: dict, sigma: float):
+    """Row-by-row gate.  Returns (failures, notes, checked, records):
+    records is the machine-readable per-column verdict list behind
+    --summary-json — one entry per gated column of every shared row
+    (status "ok"/"fail"/"null-skipped" with drift/se/z), plus one per
+    unmatched row ("new-row"/"missing-row")."""
     base_rows = {row_key(r): r for r in base["rows"]
                  if row_key(r) is not None}
-    failures, notes, checked = [], [], 0
+    failures, notes, records = [], [], []
+    checked = 0
     seen = set()
     for r in new["rows"]:
         k = row_key(r)
@@ -100,6 +137,7 @@ def compare(new: dict, base: dict, sigma: float):
         b = base_rows.get(k)
         if b is None:
             notes.append(f"new row (not in baseline, skipped): {k}")
+            records.append({"key": list(k), "status": "new-row"})
             continue
         checked += 1
         for col, ci_col in row_cols(r):
@@ -108,18 +146,48 @@ def compare(new: dict, base: dict, sigma: float):
                 # a null is a serialized non-finite (e.g. a ratio over a
                 # zero denominator) — there is nothing to gate
                 notes.append(f"null {col} (gate skipped): {k}")
+                records.append({"key": list(k), "column": col,
+                                "status": "null-skipped"})
                 continue
             se = max(math.hypot(r[ci_col] / 1.96, b[ci_col] / 1.96),
                      _SE_FLOOR)
             drift = abs(r[col] - b[col])
-            if drift > sigma * se:
+            z = drift / se
+            status = "fail" if drift > sigma * se else "ok"
+            records.append({"key": list(k), "column": col,
+                            "new": r[col], "baseline": b[col],
+                            "drift": drift, "se": se, "z": z,
+                            "status": status})
+            if status == "fail":
                 failures.append(
                     f"{k} {col}: {b[col]:.4e} -> {r[col]:.4e} "
                     f"(drift {drift:.2e} > {sigma:g}*se {sigma * se:.2e})")
     for k in base_rows:
         if k not in seen:
             failures.append(f"baseline row missing from run: {k}")
-    return failures, notes, checked
+            records.append({"key": list(k), "status": "missing-row"})
+    return failures, notes, checked, records
+
+
+def summary_markdown(records, sigma: float, checked: int) -> str:
+    """GitHub Actions step-summary table: every non-ok verdict in full,
+    ok rows as one roll-up line (a green run should read as one line,
+    a red one should show exactly what moved)."""
+    bad = [c for c in records if c.get("status") != "ok"]
+    n_ok = len(records) - len(bad)
+    lines = ["### Regression gate",
+             f"- gated rows: {checked}; columns ok: {n_ok}; "
+             f"flagged: {len(bad)}; sigma: {sigma:g}", ""]
+    if bad:
+        lines += ["| row | column | baseline | new | z | status |",
+                  "|---|---|---|---|---|---|"]
+        for c in bad:
+            key = " ".join(str(x) for x in c["key"])
+            z = f"{c['z']:.2f}" if "z" in c else "—"
+            lines.append(f"| {key} | {c.get('column', '—')} "
+                         f"| {c.get('baseline', '—')} | {c.get('new', '—')} "
+                         f"| {z} | {c['status']} |")
+    return "\n".join(lines) + "\n"
 
 
 def load_rows(path: str) -> dict:
@@ -142,11 +210,23 @@ def main(argv=None, *, strict: bool = True) -> int:
     ap.add_argument("baseline", help="committed baseline JSON")
     ap.add_argument("--sigma", type=float, default=2.0,
                     help="allowed drift in combined standard errors")
+    ap.add_argument("--summary-json", metavar="PATH",
+                    help="write the per-column verdict list (status / "
+                         "drift / z-score) as a JSON artifact")
     args = ap.parse_args(argv if argv is not None else sys.argv[1:])
 
     new = load_rows(args.results)
     base = load_rows(args.baseline)
-    failures, notes, checked = compare(new, base, args.sigma)
+    failures, notes, checked, records = compare(new, base, args.sigma)
+    if args.summary_json:
+        doc = {"sigma": args.sigma, "checked": checked,
+               "failures": len(failures), "records": records}
+        with open(args.summary_json, "w") as fh:
+            json.dump(doc, fh, indent=1, sort_keys=True)
+    step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if step_summary:
+        with open(step_summary, "a") as fh:
+            fh.write(summary_markdown(records, args.sigma, checked))
     for s in notes:
         print(f"note: {s}")
     if failures:

@@ -91,7 +91,8 @@ from typing import Dict, Optional
 import numpy as np
 
 from ..kernels import bitpack
-from ..kernels.ops import StepSpec, _rebuild_node_counts_impl, step_eval
+from ..kernels.ops import (StepSpec, _rebuild_node_counts_impl,
+                           client_latency_step, step_eval)
 from .availability import t975
 from .availability_batched import (_default_max_steps, _engine_setup,
                                    _initial_full_state, _initial_node_state,
@@ -127,6 +128,12 @@ _SIZE_SKEW_MAX = 32.0
 _REB_SCALE = 256
 _REB_BIG = np.int32(2 ** 30)   # "never finishes" remaining-ticks sentinel
 
+#: largest accepted key_zipf (the client-latency workload's key-popularity
+#: exponent): beyond this the zipf mass is so concentrated that the
+#: float64 rank weights r^-s underflow for all but the first few keys and
+#: the partition weight table degenerates to a handful of point masses
+_KEY_ZIPF_MAX = 8.0
+
 
 @dataclass(frozen=True)
 class DowntimeParams:
@@ -151,6 +158,12 @@ class DowntimeParams:
     size_dist: str = "uniform"
     size_skew: float = 1.0
     node_bandwidth_gibps: float = math.inf
+    # client-latency workload knobs (core/client_latency.py; inert for the
+    # plain downtime metric — the defaults are the zero-request limit)
+    key_zipf: float = 0.0
+    read_frac: float = 1.0
+    requests_per_tick: float = 0.0
+    slo_ticks: int = 0
 
     def __post_init__(self):
         if self.dupres_ticks < 0 or self.rebuild_steps < 0:
@@ -179,6 +192,17 @@ class DowntimeParams:
                 "size_dist and node_bandwidth_gibps model the "
                 "reconfiguring baseline's data-sized catch-ups; "
                 "use rebuild_model='reconfig'")
+        if not 0 <= self.key_zipf <= _KEY_ZIPF_MAX:
+            raise ValueError(
+                f"key_zipf must be in [0, {_KEY_ZIPF_MAX:g}] (the zipf "
+                "key-popularity exponent; 0 is uniform)")
+        if not 0 <= self.read_frac <= 1:
+            raise ValueError("read_frac must be in [0, 1]")
+        if not (self.requests_per_tick >= 0
+                and math.isfinite(self.requests_per_tick)):
+            raise ValueError("requests_per_tick must be finite and >= 0")
+        if self.slo_ticks < 0:
+            raise ValueError("slo_ticks must be >= 0")
 
     @property
     def reconfig(self) -> bool:
@@ -332,6 +356,14 @@ class BatchedDowntimeResult:
     pause_quorum_trials: np.ndarray = field(repr=False, default=None)
     trajectory: Optional[Dict[str, np.ndarray]] = field(repr=False,
                                                         default=None)
+    #: raw per-trial client-latency accumulators (only when the engine is
+    #: driven through core/client_latency.py): dup (B, NB) expected LARK
+    #: first-touch charges per key bucket, qhist (B, nbins) quorum
+    #: rebuild-wait requests per power-of-two latency bucket, qslo (B,)
+    #: requests over the SLO, qsum (B,) total latency ticks, now (B,)
+    #: elapsed ticks — all pooled over partitions host-side in float64
+    latency_raw: Optional[Dict[str, np.ndarray]] = field(repr=False,
+                                                         default=None)
 
     @property
     def availability_ratio(self) -> float:
@@ -363,9 +395,29 @@ def _hist_add(xp, hist_bins: int, hist, mask, d):
 def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
                dupres_ticks: int, rebuild_steps: int, hist_bins: int,
                rebuild_model: str = "fixed", rebuild_ticks=None,
-               bandwidth_fp=None, cnt_fn=None, packed: bool = False):
+               bandwidth_fp=None, cnt_fn=None, packed: bool = False,
+               lat_fn=None):
     def hist_add(hist, mask, d):
         return _hist_add(xp, hist_bins, hist, mask, d)
+
+    def lat_interval(lat, dt_i, ldn, qmaj_prev, rem):
+        """Charge the client-latency layer for one event interval from
+        interval-start state (requests in [now, t_clamp) see the carried
+        protocol state; both protocols only flip at events).  The lat
+        leaves ride at the tail of the scan carry; layout-independent
+        (consumes only (B, P) row state), so packed and unpacked carries
+        charge identically."""
+        if lat_fn is None:
+            return lat
+        return lat_fn(lat, dt_i, ~ldn, qmaj_prev, rem)
+
+    def lat_dirty_reset(lat, pen):
+        """A leader change onto a stale leader makes every key of the
+        partition dirty: its next touch pays the dup-res round."""
+        if lat_fn is None or pen is None:
+            return lat
+        return (xp.where(pen[:, :, None], xp.float32(1.0), lat[0]),) \
+            + lat[1:]
 
     # -- shared protocol blocks.  Both rebuild models run these verbatim
     # (the models differ only in how the replica set and the rebuild
@@ -417,7 +469,10 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
         qhist = hist_add(qhist, ends_mid, (now[:, None] + rem) - qt0)
         qdn = qdn & ~ends_mid
         qreb = xp.maximum(qreb - prog, 0)
-        return lpt, qpt, qreb, qdn, qhist
+        # qmaj_prev / rem are the interval-start majority mask and
+        # remaining rebuild wall-ticks — the client-latency layer charges
+        # this interval's requests from exactly these values
+        return lpt, qpt, qreb, qdn, qhist, qmaj_prev, rem
 
     def lark_transitions(t_clamp, lark, ldr, lfull, ldn, lt0, leader, lpt,
                          lev, lhist):
@@ -433,6 +488,7 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
         lt0 = xp.where(lgo, t_clamp[:, None], lt0)
         lev = lev + xp.sum(lgo, axis=1).astype(xp.int32)
         ldn = ~lark
+        pen = None
         if dupres_ticks > 0:
             pen = (ldr != leader) & lark & ~lfull
             npen = xp.sum(pen, axis=1).astype(xp.int32)
@@ -442,7 +498,7 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
                              xp.full(pen.shape, dupres_ticks,
                                      dtype=xp.int32))
         leader = xp.where(lark, ldr, leader)
-        return ldn, lt0, leader, lpt, lev, lhist
+        return ldn, lt0, leader, lpt, lev, lhist, pen
 
     def quorum_transitions(t_clamp, qmaj, qreb, qdn, qt0, qev, qhist):
         """Close quorum runs whose pause condition cleared, open new ones
@@ -457,13 +513,15 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
 
     def step(carry, s):
         (now, up, ev_t, full, rr_t, rr_idx, lane0, ldn, lt0, qrep, qreb,
-         qdn, qt0, leader, lpt, qpt, lev, qev, lhist, qhist) = carry
+         qdn, qt0, leader, lpt, qpt, lev, qev, lhist, qhist) = carry[:20]
+        lat = carry[20:]
         B = up.shape[0]               # local trials (a shard of the batch)
         t_clamp, dt, active, up, ev_t, rr_t, rr_idx = advance(
             now, up, ev_t, rr_t, rr_idx, lane0, s)
         dt_i = t_clamp - now                                  # (B,) int32
-        lpt, qpt, qreb, qdn, qhist = interval_pause(
+        lpt, qpt, qreb, qdn, qhist, qmaj_prev, rem0 = interval_pause(
             now, dt, dt_i, ldn, qrep, qreb, qdn, qt0, lpt, qpt, qhist)
+        lat = lat_interval(lat, dt_i, ldn, qmaj_prev, rem0)
         now = t_clamp
 
         # -- re-evaluate both protocols on the post-event cluster state
@@ -483,8 +541,9 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
             full = xp.where(lark[:, :, None], creps.reshape(B, P, n),
                             full)
 
-        ldn, lt0, leader, lpt, lev, lhist = lark_transitions(
+        ldn, lt0, leader, lpt, lev, lhist, pen = lark_transitions(
             t_clamp, lark, ldr, lfull, ldn, lt0, leader, lpt, lev, lhist)
+        lat = lat_dirty_reset(lat, pen)
 
         # -- any replica loss (a replica-set lane going up -> down, even
         # if masked by a simultaneous recovery of another lane)
@@ -498,7 +557,7 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
 
         carry = (now, up, ev_t, full, rr_t, rr_idx, lane0, ldn, lt0,
                  qrep, qreb, qdn, qt0, leader, lpt, qpt, lev, qev,
-                 lhist, qhist)
+                 lhist, qhist) + lat
         out = (t_clamp, xp.sum(ldn, axis=1).astype(xp.int32),
                xp.sum(qdn, axis=1).astype(xp.int32),
                xp.sum(up, axis=1).astype(xp.int32))
@@ -554,7 +613,8 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
         rebuild models and bandwidth settings."""
         (now, up, ev_t, full, rr_t, rr_idx, lane0, ldn, lt0, qrep, qreb,
          qdn, qt0, leader, lpt, qpt, lev, qev, lhist, qhist,
-         roster, recruit) = carry
+         roster, recruit) = carry[:22]
+        lat = carry[22:]
         B = up.shape[0]               # local trials (a shard of the batch)
         t_clamp, dt, active, up, ev_t, rr_t, rr_idx = advance(
             now, up, ev_t, rr_t, rr_idx, lane0, s)
@@ -580,9 +640,10 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
             k = xp.where(recruit < n, xp.maximum(k, 1), 1)
             rate = xp.minimum(xp.int32(_REB_SCALE),
                               xp.int32(bandwidth_fp) // k)
-        lpt, qpt, qreb, qdn, qhist = interval_pause(
+        lpt, qpt, qreb, qdn, qhist, qmaj_prev, rem0 = interval_pause(
             now, dt, dt_i, ldn, qrep, qreb, qdn, qt0, lpt, qpt, qhist,
             rate=rate)
+        lat = lat_interval(lat, dt_i, ldn, qmaj_prev, rem0)
         now = t_clamp
 
         # -- post-event cluster state; fresh losses are roster members
@@ -617,15 +678,16 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
         lfull = lfull.reshape(B, P)
         full = xp.where(lark[:, :, None], creps.reshape(B, P, n), full)
 
-        ldn, lt0, leader, lpt, lev, lhist = lark_transitions(
+        ldn, lt0, leader, lpt, lev, lhist, pen = lark_transitions(
             t_clamp, lark, ldr, lfull, ldn, lt0, leader, lpt, lev, lhist)
+        lat = lat_dirty_reset(lat, pen)
         qdn, qt0, qev, qhist = quorum_transitions(
             t_clamp, qmaj, qreb, qdn, qt0, qev, qhist)
         qrep = xp.take_along_axis(up_succ, roster, axis=2)
 
         carry = (now, up, ev_t, full, rr_t, rr_idx, lane0, ldn, lt0,
                  qrep, qreb, qdn, qt0, leader, lpt, qpt, lev, qev,
-                 lhist, qhist, roster, recruit)
+                 lhist, qhist, roster, recruit) + lat
         out = (t_clamp, xp.sum(ldn, axis=1).astype(xp.int32),
                xp.sum(qdn, axis=1).astype(xp.int32),
                xp.sum(up, axis=1).astype(xp.int32))
@@ -643,7 +705,8 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
         protocol state — trajectories are bit-identical."""
         (now, up, ev_t, full, rr_t, rr_idx, lane0, ldn, lt0, qrep, qreb,
          qdn, qt0, leader, lpt, qpt, lev, qev, lhist, qhist,
-         roster, recruit) = carry
+         roster, recruit) = carry[:22]
+        lat = carry[22:]
         B = up.shape[0]               # local trials (a shard of the batch)
         t_clamp, dt, active, up, ev_t, rr_t, rr_idx = advance(
             now, up, ev_t, rr_t, rr_idx, lane0, s)
@@ -673,9 +736,10 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
             rate = xp.minimum(xp.int32(_REB_SCALE),
                               xp.int32(bandwidth_fp) // k)
 
-        lpt, qpt, qreb, qdn, qhist = interval_pause(
+        lpt, qpt, qreb, qdn, qhist, qmaj_prev, rem0 = interval_pause(
             now, dt, dt_i, ldn, qrep, qreb, qdn, qt0, lpt, qpt, qhist,
             rate=rate)
+        lat = lat_interval(lat, dt_i, ldn, qmaj_prev, rem0)
         now = t_clamp
 
         qreb = xp.where(loss_any, rebuild_ticks[None, :], qreb)
@@ -685,15 +749,16 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
                            xp.where(loss_any, xp.int32(n), recruit))
 
         full = xp.where(lark[:, None, :], crepsw, full)
-        ldn, lt0, leader, lpt, lev, lhist = lark_transitions(
+        ldn, lt0, leader, lpt, lev, lhist, pen = lark_transitions(
             t_clamp, lark, ldr, lfull, ldn, lt0, leader, lpt, lev, lhist)
+        lat = lat_dirty_reset(lat, pen)
         qdn, qt0, qev, qhist = quorum_transitions(
             t_clamp, qmaj, qreb, qdn, qt0, qev, qhist)
         qrep = xp.take_along_axis(up_succ, roster, axis=2)
 
         carry = (now, up, ev_t, full, rr_t, rr_idx, lane0, ldn, lt0,
                  qrep, qreb, qdn, qt0, leader, lpt, qpt, lev, qev,
-                 lhist, qhist, roster, recruit)
+                 lhist, qhist, roster, recruit) + lat
         out = (t_clamp, xp.sum(ldn, axis=1).astype(xp.int32),
                xp.sum(qdn, axis=1).astype(xp.int32),
                xp.sum(up, axis=1).astype(xp.int32))
@@ -726,7 +791,8 @@ def simulate_downtime_batched(
         trajectory: bool = False,
         use_shard_map: Optional[bool] = None,
         params: Optional[DowntimeParams] = None, packed: bool = False,
-        block_t: Optional[int] = None) -> BatchedDowntimeResult:
+        block_t: Optional[int] = None,
+        _lat_plan=None) -> BatchedDowntimeResult:
     """Batched §6 commit-pause Monte Carlo over `trials` trajectories.
 
     Accepts the availability engine's cluster/scenario knobs unchanged
@@ -792,6 +858,12 @@ def simulate_downtime_batched(
 
     devices > 1 shards trials over the same 1-D "trials" mesh as the
     availability engine — bit-identical to devices=1 for the same seed.
+
+    _lat_plan (private; set by core/client_latency.py) appends the
+    client-latency layer's per-(trial, partition) float32 accumulators to
+    the scan carry and fills `latency_raw` on the result — the downtime
+    outputs themselves are untouched (the layer reads protocol state,
+    never writes it).
     """
     _validate_batched_args(backend=backend, devices=devices, trials=trials,
                            wave_width=wave_width, n=n)
@@ -842,13 +914,27 @@ def simulate_downtime_batched(
         geo_tables=geo_tables, seed_mix=seed_mix,
         pair_fail_prob=pair_fail_prob, pair_perm=pair_perm,
         restart_period=restart_period, wave_width=wave_width)
+    lat_fn = None
+    if _lat_plan is not None:
+        lat_pow = xp.asarray(_lat_plan.pow_tables)
+        lat_kf = xp.asarray(_lat_plan.kf)
+        lat_lamw = xp.asarray(_lat_plan.lamw)
+        lat_nbins, lat_slo = _lat_plan.nbins, _lat_plan.slo_ticks
+
+        def lat_fn(lat, dt_i, avail, qok, rem):
+            nd, di, hi, si, qi = client_latency_step(
+                lat[0], dt_i, avail, qok, rem, pow_tables=lat_pow,
+                kf=lat_kf, lamw=lat_lamw, nbins=lat_nbins,
+                slo_ticks=lat_slo, backend=backend)
+            return (nd, lat[1] + di, lat[2] + hi, lat[3] + si,
+                    lat[4] + qi)
     step = _make_step(xp, dt_fn, advance, succ, n=n, P=P, rf=rf,
                       dupres_ticks=dupres_ticks,
                       rebuild_steps=rebuild_steps, hist_bins=hist_bins,
                       rebuild_model=rebuild_model,
                       rebuild_ticks=rebuild_ticks,
                       bandwidth_fp=bandwidth_fp, cnt_fn=cnt_fn,
-                      packed=packed)
+                      packed=packed, lat_fn=lat_fn)
 
     # initial state: everyone up, roster replicas full, both protocols
     # evaluated once at t=0 (identical to the availability engine's init;
@@ -880,6 +966,14 @@ def simulate_downtime_batched(
         # no catch-up in flight at t=0, so no recruit node to ingest on
         recruit0 = xp.full((B, P), n, dtype=xp.int32)
         carry = carry + (roster0, recruit0)
+    lat_i = len(carry)                # lat leaves ride at the carry tail
+    if _lat_plan is not None:
+        nb = _lat_plan.kf.shape[0]
+        lz_nb = xp.zeros((B, P, nb), dtype=xp.float32)
+        lz_hb = xp.zeros((B, P, _lat_plan.nbins), dtype=xp.float32)
+        lz_bp = xp.zeros((B, P), dtype=xp.float32)
+        # dirty starts clean (no leader has changed yet), charges at zero
+        carry = carry + (lz_nb, lz_nb, lz_hb, lz_bp, lz_bp)
 
     if backend != "numpy":
         import jax.numpy as jnp
@@ -896,6 +990,11 @@ def simulate_downtime_batched(
     lev_tot = qev_tot = 0
     lhist_tot = np.zeros(hist_bins, dtype=np.int64)
     qhist_tot = np.zeros(hist_bins, dtype=np.int64)
+    if _lat_plan is not None:
+        lat_dup = np.zeros((B, _lat_plan.kf.shape[0]))
+        lat_qhist = np.zeros((B, _lat_plan.nbins))
+        lat_qslo = np.zeros(B)
+        lat_qsum = np.zeros(B)
     traj = [] if trajectory else None
     stopped = False
     s0 = 1
@@ -915,6 +1014,17 @@ def simulate_downtime_batched(
         qev_tot += int(np.asarray(carry[17]).sum())
         lhist_tot += np.asarray(carry[18], dtype=np.int64).sum(axis=0)
         qhist_tot += np.asarray(carry[19], dtype=np.int64).sum(axis=0)
+        if _lat_plan is not None:
+            # pool the per-(trial, partition) float32 charge accumulators
+            # over partitions here, host-side in float64 — a fixed
+            # summation order independent of backend and device sharding
+            # (the dirty fractions persist; the charges restart per chunk)
+            lt_ = carry[lat_i:]
+            lat_dup += np.asarray(lt_[1], dtype=np.float64).sum(axis=1)
+            lat_qhist += np.asarray(lt_[2], dtype=np.float64).sum(axis=1)
+            lat_qslo += np.asarray(lt_[3], dtype=np.float64).sum(axis=1)
+            lat_qsum += np.asarray(lt_[4], dtype=np.float64).sum(axis=1)
+            carry = carry[:lat_i] + (lt_[0], lz_nb, lz_hb, lz_bp, lz_bp)
         carry = carry[:14] + (zf, zf, zi, zi, zh, zh) + carry[20:]
         if (now >= horizon).all():
             break
@@ -952,6 +1062,10 @@ def simulate_downtime_batched(
         cols = [np.concatenate([c[i] for c in traj]) for i in range(4)]
         traj_out = {"times": cols[0], "paused_lark": cols[1],
                     "paused_quorum": cols[2], "nodes_up": cols[3]}
+    lat_raw = None
+    if _lat_plan is not None:
+        lat_raw = {"dup": lat_dup, "qhist": lat_qhist, "qslo": lat_qslo,
+                   "qsum": lat_qsum, "now": now.copy()}
     return BatchedDowntimeResult(
         p=p, rf=rf, n=n, partitions=P, trials=B, backend=backend,
         ticks=int(now.mean()), pause_lark=u_l, pause_quorum=u_q,
@@ -972,4 +1086,4 @@ def simulate_downtime_batched(
                               dtype=np.int64),
         hist_lark=lhist_tot, hist_quorum=qhist_tot,
         pause_lark_trials=u_l_trials, pause_quorum_trials=u_q_trials,
-        trajectory=traj_out)
+        trajectory=traj_out, latency_raw=lat_raw)

@@ -1,0 +1,214 @@
+"""Client-latency charge math for the §6 per-key request layer.
+
+core/client_latency.py layers a batched per-key request workload over the
+downtime engine's trajectories: zipf key popularity mapped onto
+partitions, a configurable read/write mix, and per-request commit-latency
+charges drawn from the partition's protocol state each event interval.
+The per-step state is one analytic "dirty key fraction" per
+(trial, partition, key-popularity bucket) — O(B*P) carry, never a
+per-request sample — so the whole layer is deterministic elementwise
+float32/int32 arithmetic on the same counter-RNG trajectories every
+backend replays.
+
+This module holds the xp-generic math shared verbatim by the numpy and
+jnp implementations AND by the Pallas kernel body
+(kernels/pac_eval.py: latency_charge) — the bitpack.py pattern: one
+source of truth, three executors.  It is jax-import-free so the numpy
+path stays hermetic.
+
+Bit-identity contract (docs/ARCHITECTURE.md, client-latency section):
+every in-graph float op here is an exactly-rounded IEEE float32
+multiply / add / subtract of values that are either carried state or
+host-precomputed float32 constants (the per-(partition, bucket)
+single-tick decay factors and their successive squares).  No
+transcendental is ever evaluated in-graph — exp() happens once on the
+host in float64 — and no float reduction crosses partitions inside the
+scan (accumulators stay per-(B, P, ...); pooling over partitions happens
+host-side in float64 at chunk drains).  That is what makes the latency
+layer bit-identical across numpy / jax / pallas, across packed and
+unpacked carries, and across any trials-axis device sharding.
+
+Charge model per event interval of length dt (interval-start state):
+
+  LARK    after a leader change onto a stale leader ("pen" in
+          core/downtime_batched.py) every key of the partition is dirty:
+          its first touch pays one dup-res round (`dupres_ticks`);
+          later touches pay 0.  Carried per-bucket dirty fraction d_b
+          decays as d_b * rho_b^dt while the partition serves, where
+          rho_b = exp(-mu_b) is the per-tick probability a given bucket-b
+          key is NOT touched (mu_b = lam_j * g_b / (K * f_b): partition
+          request rate, bucket traffic share, keys per bucket).  The
+          expected first-touch count charged over the interval is
+          K * f_b * (d_b - d_b * rho_b^dt) <= the bucket's offered
+          requests (1 - e^-x <= x).
+  quorum  every write arriving while a rebuild is in flight (and the
+          replica majority is up, i.e. commits would otherwise flow)
+          waits out the remaining rebuild: a write landing tau ticks
+          into the interval pays rem - tau ticks.  Writes arrive at
+          lamw_j per tick; paying ticks, power-of-two latency buckets,
+          the SLO-violation count, and the latency sum are all closed
+          forms in (rem, dt) — integer comparisons plus float32 scaling.
+  hermes  reads never pay (local reads); the write path is derived
+          host-side as the write-fraction share of LARK's first-touch
+          charges (core/client_latency.py).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+#: int32 "open-ended top bucket" upper edge
+_I32_MAX = 2 ** 31 - 1
+
+#: subnormal guard: XLA's CPU/TPU backends run float32 math with
+#: FTZ/DAZ (subnormals flush to zero), numpy honors gradual underflow —
+#: the one way "exactly-rounded elementwise f32" can still diverge.  The
+#: dirty-fraction state decays geometrically toward 0, so it WILL cross
+#: the subnormal range; we flush it to exact 0 at a floor comfortably
+#: above 2^-126, identically on every backend, before the difference can
+#: reach a charge.  Host-built decay tables get the same flush so DAZ
+#: never sees a subnormal input either.
+_SUBNORMAL_FLOOR = np.float32(1e-30)
+
+
+# ---------------------------------------------------------------------------
+# Host-side (numpy, float64 -> float32) precomputation
+# ---------------------------------------------------------------------------
+
+def decay_pow_tables(lam, g, f, keys_per_partition: int,
+                     max_ticks: int) -> np.ndarray:
+    """(nbits, P, NB) float32 successive squares of the per-tick key
+    survival probability rho_{j,b} = exp(-lam_j * g_b / (K * f_b)).
+
+    Table i holds rho^(2^i); `decay_from_dt` selects the bits of dt and
+    multiplies, so rho^dt is a fixed-order chain of exactly-rounded
+    float32 multiplies — identical on every backend.  The exp() runs
+    here, host-side, in float64; the in-graph math never sees a
+    transcendental.  nbits covers dt <= max_ticks (an event interval
+    never exceeds the horizon)."""
+    lam = np.asarray(lam, dtype=np.float64)
+    g = np.asarray(g, dtype=np.float64)
+    f = np.asarray(f, dtype=np.float64)
+    mu = lam[:, None] * g[None, :] / (keys_per_partition * f[None, :])
+    rho = np.exp(-mu).astype(np.float32)                     # (P, NB)
+    nbits = max(1, int(max_ticks).bit_length())
+    tabs = np.empty((nbits,) + rho.shape, dtype=np.float32)
+    t = np.where(rho >= _SUBNORMAL_FLOOR, rho, np.float32(0.0))
+    for i in range(nbits):
+        tabs[i] = t
+        t = t * t                                            # float32
+        t = np.where(t >= _SUBNORMAL_FLOOR, t, np.float32(0.0))
+    return tabs
+
+
+# ---------------------------------------------------------------------------
+# xp-generic in-graph math (numpy / jnp / Pallas kernel body)
+# ---------------------------------------------------------------------------
+
+def decay_from_dt(dt, pow_tables, xp):
+    """rho^dt per (trial, partition, bucket): dt (B,) int32,
+    pow_tables (nbits, P, NB) float32 -> (B, P, NB) float32 via binary
+    exponentiation over the precomputed squares.  Multiplying by an exact
+    1.0 where a bit is clear is the identity in IEEE float32, so the
+    chain length is static and the product order fixed."""
+    nbits = pow_tables.shape[0]
+    one = xp.float32(1.0)
+    dec = None
+    for i in range(nbits):
+        bit = ((dt >> i) & 1) > 0                             # (B,)
+        fac = xp.where(bit[:, None, None], pow_tables[i][None], one)
+        dec = fac if dec is None else dec * fac
+    return dec
+
+
+def dirty_step(dirty, decay, avail, kf, xp):
+    """One interval of dirty-fraction decay + LARK first-touch charges.
+
+    dirty, decay: (..., NB) float32; avail broadcastable bool (requests
+    only flow — and keys only get cleaned — while the partition serves);
+    kf broadcastable float32 keys-per-bucket (K * f_b).  Returns
+    (new_dirty, dup): dup is the expected first-touch request count
+    charged this interval, computed as kf * (dirty - new_dirty) — the
+    SAME subtraction on every backend, so the rounding is too.  The
+    decayed fraction is flushed to exact 0 below _SUBNORMAL_FLOOR before
+    the charge is taken — see the constant's note: without this, XLA's
+    FTZ and numpy's gradual underflow round the geometric decay
+    differently once it crosses 2^-126."""
+    one = xp.float32(1.0)
+    zero = xp.float32(0.0)
+    dec = xp.where(avail, decay, one)
+    new_dirty = dirty * dec
+    new_dirty = xp.where(new_dirty >= xp.float32(_SUBNORMAL_FLOOR),
+                         new_dirty, zero)
+    # max(x, 0) is the identity (dirty >= new_dirty >= 0) but also an
+    # FMA fence: the engine accumulates this charge with a float32 add,
+    # and XLA's CPU codegen contracts a bare `acc + rate * (a - b)` into
+    # an FMA whose rounding numpy cannot reproduce — even across an
+    # optimization_barrier.  An fmax between the multiply and the add
+    # pins the product to an exactly-rounded float32 on every backend.
+    dup = xp.maximum(kf * (dirty - new_dirty), zero)
+    return new_dirty, dup
+
+
+def quorum_step(rem, dt, qok, lamw, lanes, *, nbins: int, slo_ticks: int,
+                xp):
+    """Quorum-side closed-form charges for one interval.
+
+    rem, dt, qok, lamw: (..., 1); lanes: broadcastable int32 bucket
+    indices (iota over the last axis).  A write arriving tau in [0, dt)
+    ticks into the interval pays max(rem - tau, 0) remaining rebuild
+    wall-ticks, gated on the replica majority being up (qok — otherwise
+    the partition is down outright and the request is not a commit).
+
+    Returns (qhist, qslo, qsum):
+      qhist  (..., L) float32 expected requests landing in power-of-two
+             latency bucket k = [2^k, 2^(k+1)) (top bucket open-ended);
+             lanes >= nbins are padding and yield exact 0.
+      qslo   (..., 1) expected requests with latency > slo_ticks.
+      qsum   (..., 1) expected total latency ticks (for the mean).
+    All counts are integer tick arithmetic scaled once by the float32
+    write rate — deterministic on every backend."""
+    zero = xp.float32(0.0)
+    half = xp.float32(0.5)
+    onef = xp.float32(1.0)
+    pay = xp.maximum(xp.minimum(dt, rem), 0)          # paying ticks
+    k = xp.minimum(lanes, nbins - 1)
+    lo = xp.left_shift(xp.int32(1), k)
+    hi = xp.where(k == nbins - 1, xp.int32(_I32_MAX), 2 * lo - 1)
+    # paying writes see remaining values rem, rem-1, ..., rem-pay+1;
+    # the count inside [lo, hi] is a clipped interval intersection
+    cnt = xp.minimum(rem, hi) - xp.maximum(rem - pay + 1, lo) + 1
+    cnt = xp.where(qok & (lanes < nbins), xp.maximum(cnt, 0), 0)
+    # every return below is accumulated by a float32 add in the engine;
+    # the trailing max(x, 0) (exact — all charges are >= 0) is an FMA
+    # fence, see dirty_step.
+    qhist = xp.maximum(lamw * cnt.astype(xp.float32), zero)
+    payf = pay.astype(xp.float32)
+    remf = rem.astype(xp.float32)
+    qsum = xp.where(qok, lamw * (payf * remf - half * payf * (payf - onef)),
+                    zero)
+    qsum = xp.maximum(qsum, zero)
+    slo_cnt = xp.maximum(xp.minimum(dt, rem - slo_ticks), 0)
+    qslo = xp.maximum(xp.where(qok, lamw * slo_cnt.astype(xp.float32), zero),
+                      zero)
+    return qhist, qslo, qsum
+
+
+def latency_step_ref(dirty, dt_i, avail, qok, rem, *, pow_tables, kf,
+                     lamw, nbins: int, slo_ticks: int, xp):
+    """The full per-interval latency update on (B, P)-shaped state —
+    the numpy/jnp reference the Pallas path must match bit for bit.
+
+    dirty (B, P, NB) f32; dt_i (B,) i32; avail, qok (B, P) bool;
+    rem (B, P) i32 remaining rebuild wall-ticks at interval start;
+    pow_tables (nbits, P, NB) f32; kf (NB,) f32; lamw (P,) f32.
+    Returns (new_dirty, dup, qhist, qslo, qsum) with shapes
+    (B,P,NB), (B,P,NB), (B,P,nbins), (B,P), (B,P)."""
+    decay = decay_from_dt(dt_i, pow_tables, xp)
+    new_dirty, dup = dirty_step(dirty, decay, avail[:, :, None],
+                                kf[None, None, :], xp)
+    lanes = xp.arange(nbins, dtype=xp.int32)
+    qhist, qslo, qsum = quorum_step(
+        rem[:, :, None], dt_i[:, None, None], qok[:, :, None],
+        lamw[None, :, None], lanes, nbins=nbins, slo_ticks=slo_ticks,
+        xp=xp)
+    return new_dirty, dup, qhist, qslo[:, :, 0], qsum[:, :, 0]

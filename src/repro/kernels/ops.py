@@ -49,6 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import bitpack, ref
+from . import latency as _latency
 
 _FORCE = os.environ.get("REPRO_FORCE_PALLAS", "")
 
@@ -403,6 +404,64 @@ def _rebuild_node_counts_impl(recruit, active, *, n_real: int,
         counts = pk.node_count(recruit, active, n_real=n_real,
                                interpret=jax.default_backend() != "tpu")
         return counts[:, :n_real]
+    raise ValueError(f"unknown PAC backend {backend!r}; "
+                     f"expected one of {PAC_BACKENDS}")
+
+
+def client_latency_step(dirty, dt_i, avail, qok, rem, *, pow_tables, kf,
+                        lamw, nbins: int, slo_ticks: int,
+                        backend: str = "jax"):
+    """The client-latency layer's post-step op (core/client_latency.py):
+    one event interval of dirty-key decay + LARK first-touch charges and
+    closed-form quorum rebuild-wait charges, under the same uniform
+    three-backend contract as the other Monte Carlo batch ops.
+
+    dirty (B, P, NB) float32 carried dirty-key fractions; dt_i (B,) int32
+    interval lengths; avail / qok (B, P) bool (partition serving / replica
+    majority up, both at interval start); rem (B, P) int32 remaining
+    rebuild wall-ticks at interval start.  pow_tables / kf / lamw are the
+    host-precomputed float32 workload tables (kernels/latency.py).
+    Returns (new_dirty, dup, qhist, qslo, qsum) — see
+    latency_step_ref for shapes.
+
+    All three backends are bit-identical: the math is elementwise
+    exactly-rounded float32 (shared verbatim from kernels/latency.py;
+    the pallas path precomputes the decay factors with the identical jnp
+    chain, then runs the charge kernel over flattened (trial, partition)
+    rows).  No reduction crosses partitions — pooling happens host-side
+    at chunk drains — so trials-axis sharding commutes exactly.
+    """
+    if backend == "numpy":
+        return _latency.latency_step_ref(
+            dirty, dt_i, avail, qok, rem, pow_tables=pow_tables, kf=kf,
+            lamw=lamw, nbins=nbins, slo_ticks=slo_ticks, xp=np)
+    if backend == "jax":
+        out = _latency.latency_step_ref(
+            dirty, dt_i, avail, qok, rem, pow_tables=pow_tables, kf=kf,
+            lamw=lamw, nbins=nbins, slo_ticks=slo_ticks, xp=jnp)
+        # XLA's CPU backend contracts `acc + rate * (a - b)` into an FMA,
+        # which rounds differently from numpy's separate mul-then-add.
+        # The engine accumulates every charge we return, so pin the op
+        # boundary: nothing may fuse across it.
+        return jax.lax.optimization_barrier(out)
+    if backend == "pallas":
+        from . import pac_eval as pk
+        B, P, NB = dirty.shape
+        R = B * P
+        decay = _latency.decay_from_dt(dt_i, pow_tables, jnp)
+        nd, dup, qh, qs, qq = pk.latency_charge(
+            dirty.reshape(R, NB), decay.reshape(R, NB),
+            avail.reshape(R), qok.reshape(R), rem.reshape(R),
+            jnp.broadcast_to(dt_i[:, None], (B, P)).reshape(R),
+            jnp.broadcast_to(lamw[None, :], (B, P)).reshape(R),
+            kf, nbins=nbins, slo_ticks=slo_ticks,
+            interpret=jax.default_backend() != "tpu")
+        # same FMA-contraction pin as the jax branch: in interpret mode
+        # the kernel body inlines into the surrounding jit
+        return jax.lax.optimization_barrier(
+            (nd.reshape(B, P, NB), dup.reshape(B, P, NB),
+             qh.reshape(B, P, nbins), qs.reshape(B, P),
+             qq.reshape(B, P)))
     raise ValueError(f"unknown PAC backend {backend!r}; "
                      f"expected one of {PAC_BACKENDS}")
 

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from . import latency as _lat
+
 
 def _pac_kernel(up_ref, full_ref, valid_ref, lark_ref, maj_ref, creps_ref, *,
                 rf: int, voters: int, n_real: int):
@@ -220,6 +222,94 @@ def node_count(recruit, active, *, n_real: int, interpret: bool = False,
         out_shape=jax.ShapeDtypeStruct((B, n_lanes), jnp.int32),
         interpret=interpret,
     )(recruit.astype(jnp.int32), active)
+
+
+def _latency_kernel(dirty_ref, decay_ref, kf_ref, avail_ref, qok_ref,
+                    rem_ref, dt_ref, lamw_ref, ndirty_ref, dup_ref,
+                    qhist_ref, qslo_ref, qsum_ref, *, nbins: int,
+                    slo_ticks: int):
+    """Client-latency interval charges for one (block_r, ...) tile of
+    flattened (trial, partition) rows — the §6 per-key request layer's
+    post-step op.  Purely elementwise float32/int32 work via the shared
+    kernels/latency.py math (the decay factors arrive precomputed), so
+    the outputs are bit-identical to the numpy/jnp reference — see that
+    module's bit-identity contract."""
+    dirty = dirty_ref[...]                        # (br, nbl) f32
+    decay = decay_ref[...]
+    kf = kf_ref[...]                              # (1, nbl) f32
+    avail = avail_ref[...][:, None]               # (br, 1) bool
+    nd, dup = _lat.dirty_step(dirty, decay, avail, kf, jnp)
+    ndirty_ref[...] = nd
+    dup_ref[...] = dup
+
+    rem = rem_ref[...][:, None]                   # (br, 1) i32
+    dt = dt_ref[...][:, None]
+    qok = qok_ref[...][:, None]
+    lamw = lamw_ref[...][:, None]                 # (br, 1) f32
+    lanes = jax.lax.broadcasted_iota(jnp.int32, qhist_ref.shape, 1)
+    qh, qs, qq = _lat.quorum_step(rem, dt, qok, lamw, lanes, nbins=nbins,
+                                  slo_ticks=slo_ticks, xp=jnp)
+    qhist_ref[...] = qh
+    qslo_ref[...] = qs[:, 0]
+    qsum_ref[...] = qq[:, 0]
+
+
+def latency_charge(dirty, decay, avail, qok, rem, dt, lamw, kf, *,
+                   nbins: int, slo_ticks: int, block_r: int = 256,
+                   interpret: bool = False):
+    """dirty/decay (R, NB) f32, avail/qok (R,) bool, rem/dt (R,) i32,
+    lamw (R,) f32, kf (NB,) f32 -> (new_dirty, dup, qhist, qslo, qsum)
+    with qhist (R, nbins).  Rows are flattened (trial, partition) pairs;
+    the bucket axes are padded to VPU lane multiples (padding lanes carry
+    kf=0 / lanes >= nbins and yield exact zeros, sliced off here)."""
+    R, NB = dirty.shape
+    nbl = NB + (-NB % 128)
+    hbl = nbins + (-nbins % 128)
+    block_r = min(block_r, R)
+    rpad = -R % block_r
+    if nbl > NB:
+        dirty = jnp.pad(dirty, ((0, 0), (0, nbl - NB)))
+        decay = jnp.pad(decay, ((0, 0), (0, nbl - NB)),
+                        constant_values=1.0)
+    if rpad:
+        dirty = jnp.pad(dirty, ((0, rpad), (0, 0)))
+        decay = jnp.pad(decay, ((0, rpad), (0, 0)), constant_values=1.0)
+        avail = jnp.pad(avail, (0, rpad))
+        qok = jnp.pad(qok, (0, rpad))
+        rem = jnp.pad(rem, (0, rpad))
+        dt = jnp.pad(dt, (0, rpad))
+        lamw = jnp.pad(lamw, (0, rpad))
+    kf2 = jnp.pad(kf.astype(jnp.float32), (0, nbl - NB))[None, :]
+    Rp = R + rpad
+
+    kernel = functools.partial(_latency_kernel, nbins=nbins,
+                               slo_ticks=slo_ticks)
+    row_spec = pl.BlockSpec((block_r,), lambda i: (i,))
+    tile_spec = pl.BlockSpec((block_r, nbl), lambda i: (i, 0))
+    nd, dup, qh, qs, qq = pl.pallas_call(
+        kernel,
+        grid=(Rp // block_r,),
+        in_specs=[
+            tile_spec, tile_spec,
+            pl.BlockSpec((1, nbl), lambda i: (0, 0)),
+            row_spec, row_spec, row_spec, row_spec, row_spec,
+        ],
+        out_specs=[
+            tile_spec, tile_spec,
+            pl.BlockSpec((block_r, hbl), lambda i: (i, 0)),
+            row_spec, row_spec,
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Rp, nbl), jnp.float32),
+            jax.ShapeDtypeStruct((Rp, nbl), jnp.float32),
+            jax.ShapeDtypeStruct((Rp, hbl), jnp.float32),
+            jax.ShapeDtypeStruct((Rp,), jnp.float32),
+            jax.ShapeDtypeStruct((Rp,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(dirty, decay, kf2, avail, qok, rem.astype(jnp.int32),
+      dt.astype(jnp.int32), lamw.astype(jnp.float32))
+    return (nd[:R, :NB], dup[:R, :NB], qh[:R, :nbins], qs[:R], qq[:R])
 
 
 def downtime_eval(up_succ, full_succ, *, rf: int, n_real: int,

@@ -19,7 +19,7 @@ def _row(kind="iid", scenario=None, rf=2, p=1e-3, u=1e-4, um=3e-4, ci=1e-5):
 
 def test_identical_runs_pass_even_with_zero_ci():
     doc = {"rows": [_row(ci=0.0), _row(kind="scenario", scenario="flapping")]}
-    failures, notes, checked = check_regression.compare(doc, doc, 2.0)
+    failures, notes, checked, _ = check_regression.compare(doc, doc, 2.0)
     assert not failures and checked == 2
 
 
@@ -37,7 +37,7 @@ def test_missing_baseline_row_fails_and_new_row_is_noted():
     base = {"rows": [_row(), _row(kind="scenario", scenario="rack-pairs")]}
     new = {"rows": [_row(), _row(kind="scenario", scenario="flapping"),
                     {"kind": "autotune", "block_p": 256}]}
-    failures, notes, checked = check_regression.compare(new, base, 2.0)
+    failures, notes, checked, _ = check_regression.compare(new, base, 2.0)
     assert any("missing" in f for f in failures)
     assert any("flapping" in s for s in notes)
     assert checked == 1          # only the shared iid row is gated
@@ -58,7 +58,7 @@ def test_downtime_rows_keyed_by_rebuild_model():
     base = {"rows": [_dt_row(model=None, pause=0.4)]}
     new = {"rows": [_dt_row(model="fixed", pause=0.4),
                     _dt_row(model="reconfig", pause=0.9)]}
-    failures, notes, checked = check_regression.compare(new, base, 2.0)
+    failures, notes, checked, _ = check_regression.compare(new, base, 2.0)
     assert not failures
     assert checked == 1                       # only the fixed row is shared
     assert any("reconfig" in s for s in notes)
@@ -67,12 +67,12 @@ def test_downtime_rows_keyed_by_rebuild_model():
 def test_null_gated_value_skips_the_gate_with_a_note():
     good = _dt_row(model="fixed")
     nulled = dict(_dt_row(model="fixed"), pause_quorum=None)
-    failures, notes, checked = check_regression.compare(
+    failures, notes, checked, _ = check_regression.compare(
         {"rows": [nulled]}, {"rows": [good]}, 2.0)
     assert not failures and checked == 1
     assert any("null pause_quorum" in s for s in notes)
     # symmetric: a null in the baseline is skipped too
-    failures, notes, _ = check_regression.compare(
+    failures, notes, _, _ = check_regression.compare(
         {"rows": [good]}, {"rows": [nulled]}, 2.0)
     assert not failures
     assert any("null pause_quorum" in s for s in notes)
@@ -112,3 +112,86 @@ def test_sweep_json_serializes_non_finite_as_null(tmp_path):
         json.dump({"rows": [safe]}, fh, allow_nan=False)
     assert "Infinity" not in out.read_text()
     assert check_regression.load_rows(str(out))["rows"][0]["ratio"] is None
+
+
+def _lat_row(scenario="iid", rf=2, p=1e-3, lat=0.5, ci=1e-2,
+             read_frac=0.8, key_zipf=1.0, slo_ticks=8, rpt=32.0,
+             dupres=1):
+    return {"kind": "latency" if scenario == "iid" else "latency_scenario",
+            "scenario": scenario, "rf": rf, "p": p,
+            "lat_lark": lat, "lat_quorum": 4.0,
+            "ci_lat_lark": ci, "ci_lat_quorum": ci,
+            "rebuild_model": "fixed", "read_frac": read_frac,
+            "key_zipf": key_zipf, "slo_ticks": slo_ticks,
+            "requests_per_tick": rpt, "dupres_ticks": dupres}
+
+
+def test_latency_rows_gated_on_lat_columns():
+    base = {"rows": [_lat_row(lat=0.5, ci=1e-2)]}
+    ok = {"rows": [_lat_row(lat=0.505, ci=1e-2)]}
+    bad = {"rows": [_lat_row(lat=0.6, ci=1e-2)]}
+    assert not check_regression.compare(ok, base, 2.0)[0]
+    failures = check_regression.compare(bad, base, 2.0)[0]
+    assert failures and "lat_lark" in failures[0]
+
+
+def test_latency_rows_keyed_by_workload_knobs():
+    """A different read mix, skew, SLO, request rate, or dup-res cost is
+    a different measurement — it must never gate against a baseline row
+    of another workload, whichever knob differs."""
+    base = {"rows": [_lat_row(lat=0.5)]}
+    for knob in ({"read_frac": 0.5}, {"key_zipf": 0.0}, {"slo_ticks": 4},
+                 {"rpt": 64.0}, {"dupres": 8}):
+        new = {"rows": [_lat_row(lat=9.9, **knob)]}
+        failures, notes, checked, _ = check_regression.compare(
+            new, base, 2.0)
+        # no shared key: the run's row is new, the baseline row missing
+        assert checked == 0, knob
+        assert any("new row" in s for s in notes), knob
+        assert any("missing" in f for f in failures), knob
+
+
+def test_compare_records_carry_status_and_z():
+    base = {"rows": [_lat_row(lat=0.5, ci=1e-2), _row()]}
+    new = {"rows": [_lat_row(lat=0.6, ci=1e-2), _row(),
+                    _lat_row(scenario="flapping")]}
+    failures, notes, checked, records = check_regression.compare(
+        new, base, 2.0)
+    by_status = {}
+    for c in records:
+        by_status.setdefault(c["status"], []).append(c)
+    assert len(by_status["fail"]) == 1
+    fail = by_status["fail"][0]
+    assert fail["column"] == "lat_lark"
+    assert fail["z"] > 2.0
+    assert fail["drift"] == abs(0.6 - 0.5)
+    # ok verdicts carry z too, new rows carry only key+status
+    assert all("z" in c for c in by_status["ok"])
+    assert by_status["new-row"][0]["key"][0] == "latency"
+
+
+def test_summary_json_and_step_summary(tmp_path, monkeypatch):
+    import json
+    base = tmp_path / "base.json"
+    new = tmp_path / "new.json"
+    base.write_text(json.dumps({"rows": [_lat_row(lat=0.5, ci=1e-2)]}))
+    new.write_text(json.dumps({"rows": [_lat_row(lat=0.6, ci=1e-2)]}))
+    summary = tmp_path / "summary.json"
+    step = tmp_path / "step.md"
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(step))
+    rc = check_regression.main([str(new), str(base), "--sigma", "2",
+                                "--summary-json", str(summary)])
+    assert rc == 1
+    doc = json.loads(summary.read_text())
+    assert doc["failures"] == 1 and doc["checked"] == 1
+    assert any(c["status"] == "fail" for c in doc["records"])
+    md = step.read_text()
+    assert "Regression gate" in md and "lat_lark" in md
+    # green run: roll-up line only, no table
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(tmp_path / "green.md"))
+    rc = check_regression.main([str(base), str(base), "--sigma", "2",
+                                "--summary-json", str(summary)])
+    assert rc == 0
+    assert json.loads(summary.read_text())["failures"] == 0
+    green = (tmp_path / "green.md").read_text()
+    assert "flagged: 0" in green and "|" not in green

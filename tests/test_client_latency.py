@@ -1,0 +1,250 @@
+"""Client-latency engine invariants (core/client_latency.py).
+
+The load-bearing guarantees, each pinned here:
+  * the zipf workload tables are mean-pinned (weights sum to exactly 1;
+    key_zipf=0 is the exactly-uniform 1/P table) — skew moves traffic
+    between partitions, never adds offered load;
+  * the zero-knob limit (dupres_ticks=0, uniform keys, 100% reads) lands
+    at exactly 0 added latency on every reported column;
+  * all three backends, packed and unpacked carries, produce
+    bit-identical raw accumulators (the devices 1-vs-8 half lives in
+    tests/test_sharded.py);
+  * percentiles/means are monotone in dupres_ticks and in zipf skew
+    (LARK's charged fraction falls as traffic concentrates on hot keys);
+  * p999 >= p99 >= p50 on every emitted row, adversarially sampled.
+"""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.client_latency import (_percentile, key_bucket_shares,
+                                       partition_request_weights,
+                                       simulate_client_latency)
+from repro.core.downtime_batched import DowntimeParams, \
+    simulate_downtime_batched
+
+# small but failure-rich: rf=2 at a high p on a tiny cluster produces
+# leader changes, rebuilds, and majority-down spells within a few
+# thousand ticks
+_KW = dict(n=6, rf=2, p=2e-4, partitions=64, trials=4, max_ticks=12_000,
+           min_ticks=12_000, chunk_steps=64, seed=3,
+           dupres_ticks=4, requests_per_tick=8.0, key_zipf=1.0,
+           read_frac=0.8, slo_ticks=2)
+
+
+def _raw(r):
+    return r.downtime.latency_raw
+
+
+# ---------------------------------------------------------------------------
+# workload tables
+# ---------------------------------------------------------------------------
+
+def test_uniform_weights_exact():
+    w = partition_request_weights(0, 128, key_zipf=0.0)
+    assert np.all(w == 1.0 / 128)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=64),
+       st.integers(min_value=0, max_value=12),
+       st.integers(min_value=0, max_value=1000))
+def test_weights_mean_pinned(partitions, zipf_quarters, seed):
+    """Sum(w) == 1 to float64 round-off for any skew/seed/P — i.e. the
+    mean weight is pinned at 1/P and skew never changes offered load."""
+    w = partition_request_weights(seed, partitions,
+                                  key_zipf=zipf_quarters / 4.0,
+                                  keys_per_partition=64)
+    assert w.shape == (partitions,)
+    assert np.all(w >= 0)
+    assert abs(w.sum() - 1.0) < 1e-12
+
+
+def test_bucket_shares_partition_unity():
+    for z in (0.0, 0.7, 1.0, 2.5):
+        f, g = key_bucket_shares(z)
+        assert abs(f.sum() - 1.0) < 1e-12
+        assert abs(g.sum() - 1.0) < 1e-12
+        assert np.all(f > 0) and np.all(g > 0)
+    # uniform popularity: traffic share == key-count share exactly
+    f0, g0 = key_bucket_shares(0.0)
+    assert np.allclose(f0, g0, rtol=0, atol=1e-15)
+
+
+def test_params_validation():
+    with pytest.raises(ValueError):
+        DowntimeParams(key_zipf=-0.1)
+    with pytest.raises(ValueError):
+        DowntimeParams(key_zipf=100.0)
+    with pytest.raises(ValueError):
+        DowntimeParams(read_frac=1.5)
+    with pytest.raises(ValueError):
+        DowntimeParams(read_frac=-0.01)
+    with pytest.raises(ValueError):
+        DowntimeParams(requests_per_tick=-1.0)
+    with pytest.raises(ValueError):
+        DowntimeParams(requests_per_tick=math.inf)
+    with pytest.raises(ValueError):
+        DowntimeParams(slo_ticks=-1)
+
+
+# ---------------------------------------------------------------------------
+# zero-knob limit and plain-downtime inertness
+# ---------------------------------------------------------------------------
+
+def test_zero_knob_limit_exactly_zero():
+    r = simulate_client_latency(backend="jax", **{
+        **_KW, "dupres_ticks": 0, "key_zipf": 0.0, "read_frac": 1.0})
+    for col in ("lat_lark", "lat_quorum", "lat_hermes",
+                "p50_lark", "p99_lark", "p999_lark",
+                "p50_quorum", "p99_quorum", "p999_quorum",
+                "p50_hermes", "p99_hermes", "p999_hermes",
+                "slo_lark", "slo_quorum", "slo_hermes"):
+        assert getattr(r, col) == 0.0, col
+    assert np.all(_raw(r)["dup"] == 0.0)
+    assert np.all(_raw(r)["qhist"] == 0.0)
+
+
+def test_plain_downtime_has_no_latency_state():
+    """Without a latency plan the engine must not grow its carry or
+    allocate accumulators — the workload knobs are inert defaults."""
+    r = simulate_downtime_batched(
+        n=6, rf=2, p=2e-4, partitions=32, trials=2, max_ticks=4_000,
+        min_ticks=4_000, chunk_steps=64, seed=0, backend="numpy")
+    assert r.latency_raw is None
+
+
+# ---------------------------------------------------------------------------
+# backend matrix / packed-carry bit-identity
+# ---------------------------------------------------------------------------
+
+def test_backend_matrix_bit_identical():
+    base = simulate_client_latency(backend="numpy", **_KW)
+    for backend in ("jax", "pallas"):
+        other = simulate_client_latency(backend=backend, **_KW)
+        for k in ("dup", "qhist", "qslo", "qsum", "now"):
+            assert np.array_equal(_raw(base)[k], _raw(other)[k]), \
+                (backend, k)
+        assert base.lat_lark == other.lat_lark
+        assert base.lat_quorum == other.lat_quorum
+        assert base.p999_quorum == other.p999_quorum
+
+
+def test_packed_carry_bit_identical():
+    base = simulate_client_latency(backend="jax", **_KW)
+    packed = simulate_client_latency(backend="jax", packed=True, **_KW)
+    for k in ("dup", "qhist", "qslo", "qsum", "now"):
+        assert np.array_equal(_raw(base)[k], _raw(packed)[k]), k
+    assert base.lat_lark == packed.lat_lark
+    assert base.slo_quorum == packed.slo_quorum
+
+
+def test_shard_map_path_identical_on_one_device():
+    base = simulate_client_latency(backend="jax", **_KW)
+    sharded = simulate_client_latency(backend="jax", use_shard_map=True,
+                                      devices=1, **_KW)
+    for k in ("dup", "qhist", "qslo", "qsum", "now"):
+        assert np.array_equal(_raw(base)[k], _raw(sharded)[k]), k
+
+
+# ---------------------------------------------------------------------------
+# monotonicity
+# ---------------------------------------------------------------------------
+
+def test_latency_monotone_in_dupres_ticks():
+    """LARK percentiles/mean/SLO are non-decreasing in the dup-res cost:
+    the charged request fraction is dupres-independent (the dirty-key
+    process never sees the price), so the mean scales linearly and the
+    percentile values ride the charge upward."""
+    prev = None
+    for d in (0, 1, 2, 4, 8):
+        r = simulate_client_latency(backend="jax", **{**_KW,
+                                                      "dupres_ticks": d})
+        cur = (r.lat_lark, r.p50_lark, r.p99_lark, r.p999_lark,
+               r.lat_hermes, r.slo_lark)
+        if prev is not None:
+            assert all(c >= p for c, p in zip(cur, prev)), (d, prev, cur)
+        prev = cur
+
+
+def test_lark_latency_monotone_in_zipf_skew():
+    """More key skew -> strictly less LARK dup-res traffic: concentrating
+    requests on a few hot keys means a failover dirties the same K keys
+    but far fewer distinct keys ever get touched (hot ones are cleaned
+    within a tick or two, the cold tail is never read), so the charged
+    fraction — and with it mean/percentiles/SLO — falls."""
+    prev = None
+    for z in (0.0, 0.5, 1.0, 2.0):
+        r = simulate_client_latency(backend="jax", **{**_KW,
+                                                      "key_zipf": z})
+        cur = (r.lat_lark, r.p99_lark, r.p999_lark, r.slo_lark)
+        if prev is not None:
+            assert all(c <= p for c, p in zip(cur, prev)), (z, prev, cur)
+        prev = cur
+
+
+# ---------------------------------------------------------------------------
+# percentile ordering — unit-level adversarial + emitted rows
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(min_value=0, max_value=10**9),
+       st.integers(min_value=1, max_value=8))
+def test_percentile_walk_ordering(seed, n_masses):
+    """p999 >= p99 >= p50 for arbitrary point-mass distributions,
+    including zero-total, all-zero-latency, and charged > total edge
+    noise."""
+    rng = np.random.default_rng(seed)
+    masses = [(float(rng.integers(0, 100)), float(rng.uniform(0, 50)))
+              for _ in range(n_masses)]
+    total = float(rng.uniform(0, 2) * sum(m[1] for m in masses) + 1e-9)
+    p50 = _percentile(masses, total, 0.5)
+    p99 = _percentile(masses, total, 0.99)
+    p999 = _percentile(masses, total, 0.999)
+    assert 0.0 <= p50 <= p99 <= p999
+
+
+def test_emitted_rows_percentiles_ordered():
+    """Every row the sweep emits must satisfy the ordering for all three
+    protocols — run a grid of workload corners and check each."""
+    corners = [
+        {},                                          # defaults of _KW
+        {"read_frac": 0.0},                          # all writes
+        {"read_frac": 1.0},                          # all reads
+        {"key_zipf": 0.0},
+        {"key_zipf": 3.0, "dupres_ticks": 16},
+        {"requests_per_tick": 0.5, "slo_ticks": 0},
+    ]
+    for c in corners:
+        r = simulate_client_latency(backend="numpy", **{**_KW, **c})
+        for proto in ("lark", "quorum", "hermes"):
+            p50 = getattr(r, f"p50_{proto}")
+            p99 = getattr(r, f"p99_{proto}")
+            p999 = getattr(r, f"p999_{proto}")
+            assert 0.0 <= p50 <= p99 <= p999, (c, proto, p50, p99, p999)
+        assert 0.0 <= r.slo_lark <= 1.0
+        assert 0.0 <= r.slo_quorum <= 1.0
+        assert r.slo_hermes <= r.slo_lark
+
+
+# ---------------------------------------------------------------------------
+# cross-metric consistency
+# ---------------------------------------------------------------------------
+
+def test_hermes_is_write_fraction_of_lark():
+    r = simulate_client_latency(backend="jax", **_KW)
+    assert r.lat_hermes == (1.0 - _KW["read_frac"]) * r.lat_lark
+    assert r.slo_hermes == (1.0 - _KW["read_frac"]) * r.slo_lark
+
+
+def test_charged_fraction_bounded_by_offered_load():
+    """The analytic first-touch count can never exceed offered requests
+    (1 - e^-x <= x per bucket-interval), and quorum can never charge more
+    SLO violations than writes arrive."""
+    r = simulate_client_latency(backend="jax", **_KW)
+    raw = _raw(r)
+    req = _KW["requests_per_tick"] * raw["now"].sum()
+    assert raw["dup"].sum() <= req * 1.0000001
+    assert raw["qslo"].sum() <= req * (1 - _KW["read_frac"]) * 1.0000001

@@ -219,3 +219,44 @@ def test_eight_device_downtime_run_bit_identical_to_single():
                          capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, out.stderr
     assert "OK" in out.stdout
+
+
+@pytest.mark.slow
+def test_eight_device_latency_run_bit_identical_to_single():
+    """The client-latency layer under the devices acceptance criterion:
+    raw per-trial accumulators (dup / qhist / qslo / qsum) and every
+    reported latency column must be byte-identical between --devices 1
+    and a forced 8-device mesh, unpacked jax AND the packed pallas
+    carry — the latency leaves ride the generic trials-axis cspec, so
+    any drift here is a sharding bug in the carry layout."""
+    script = textwrap.dedent("""
+        import numpy as np
+        from repro.core.client_latency import simulate_client_latency
+        kw = dict(n=6, rf=2, p=2e-4, partitions=64, trials=8,
+                  max_ticks=8_000, min_ticks=8_000, chunk_steps=64,
+                  seed=11, dupres_ticks=4, requests_per_tick=8.0,
+                  key_zipf=1.0, read_frac=0.8, slo_ticks=2)
+        r1 = simulate_client_latency(backend="jax", devices=1, **kw)
+        for backend, packed in (("jax", False), ("pallas", True)):
+            for d in (4, 8):
+                rd = simulate_client_latency(backend=backend, devices=d,
+                                             packed=packed, **kw)
+                raw1 = r1.downtime.latency_raw
+                rawd = rd.downtime.latency_raw
+                for k in ("dup", "qhist", "qslo", "qsum", "now"):
+                    assert np.array_equal(raw1[k], rawd[k]), \\
+                        (backend, packed, d, k)
+                assert r1.lat_lark == rd.lat_lark
+                assert r1.lat_quorum == rd.lat_quorum
+                assert r1.p999_quorum == rd.p999_quorum
+                assert r1.slo_quorum == rd.slo_quorum
+        print("OK")
+    """)
+    env = dict(os.environ,
+               JAX_PLATFORMS="cpu",
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=str(Path(__file__).resolve().parents[1] / "src"))
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr
+    assert "OK" in out.stdout
