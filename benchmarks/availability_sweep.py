@@ -17,7 +17,13 @@ data-sized catch-up, --rebuild-ticks-per-gib per GiB of per-partition
 data; --size-dist/--size-skew shape the per-partition sizes — uniform,
 zipf, lognormal at a pinned 1.5 GiB mean — and --node-bandwidth-gibps
 makes concurrent catch-ups share each recruit node's ingest bandwidth).
-Downtime rows are batched-only ("event" maps to "numpy").  See
+Downtime rows are batched-only ("event" maps to "numpy").
+--engines grows the comparison into the protocol zoo: beyond the
+lark/quorum pair every downtime row carries, "hermes" (broadcast
+replication under membership leases, --lease-ticks write-block window)
+and "spinnaker" (Paxos with reconfiguration, --view-change-ticks
+log-reconciliation pause on leader loss; reconfig model only) each add
+one "downtime_engine" row per grid point, keyed by engine name.  See
 docs/BENCHMARKS.md for the full CLI surface.
 
 --metric latency layers the client-traffic request engine
@@ -67,7 +73,7 @@ from repro.core.analytical import (improvement_factor, lark_unavailability,
 from repro.core.availability import simulate_availability
 from repro.core.availability_batched import simulate_availability_batched
 from repro.core.client_latency import simulate_client_latency
-from repro.core.downtime_batched import (SIZE_DISTS, DowntimeParams,
+from repro.core.downtime_batched import (ENGINES, SIZE_DISTS, DowntimeParams,
                                          simulate_downtime_batched)
 from repro.core.scenarios import get_scenario, scenario_names
 
@@ -251,6 +257,36 @@ def _downtime_row(r, *, kind: str, scenario: str):
     }
 
 
+def _downtime_engine_rows(r, *, kind: str, scenario: str):
+    """One row per protocol-zoo engine beyond the lark/quorum pair the
+    base downtime row already carries.  Engine rows name their engine
+    explicitly — check_regression keys them by it — and repeat the shared
+    grid/knob columns so each row is self-describing."""
+    rows = []
+    for engine in r.engines:
+        if engine in ("lark", "quorum"):
+            continue
+        s = r.engine_stats(engine)
+        rows.append({
+            "kind": kind, "engine": engine, "scenario": scenario,
+            "rf": r.rf, "p": r.p,
+            "pause": s["pause"], "ci_pause": s["ci_pause"],
+            "events": s["events"],
+            "hist_edges": r.hist_edges.tolist(),
+            "hist": s["hist"].tolist(),
+            "lease_ticks": r.lease_ticks,
+            "view_change_ticks": r.view_change_ticks,
+            "dupres_ticks": r.dupres_ticks,
+            "rebuild_steps": r.rebuild_steps,
+            "rebuild_model": r.rebuild_model,
+            "rebuild_ticks_per_gib": r.rebuild_ticks_per_gib,
+            "size_dist": r.size_dist, "size_skew": r.size_skew,
+            "node_bandwidth_gibps": r.node_bandwidth_gibps,
+            "ticks": r.ticks,
+        })
+    return rows
+
+
 def run_downtime(full: bool = False, trials: int = 4, backend: str = "jax",
                  seed: int = 0, devices: int = 1, smoke: bool = False,
                  pac_block_p=None,
@@ -271,6 +307,8 @@ def run_downtime(full: bool = False, trials: int = 4, backend: str = "jax",
             backend=backend, devices=devices, pac_block_p=pac_block_p,
             params=params, packed=packed, block_t=block_t)
         rows.append(_downtime_row(r, kind="downtime", scenario="iid"))
+        rows.extend(_downtime_engine_rows(r, kind="downtime_engine",
+                                          scenario="iid"))
     return rows
 
 
@@ -294,6 +332,8 @@ def run_downtime_scenarios(names, full: bool = False, trials: int = 4,
                 **sc.kwargs(n=n, rf=rf, p=p))
             rows.append(_downtime_row(r, kind="downtime_scenario",
                                       scenario=name))
+            rows.extend(_downtime_engine_rows(
+                r, kind="downtime_engine_scenario", scenario=name))
     return rows
 
 
@@ -429,6 +469,18 @@ def main(argv=None, *, strict: bool = True):
                          "full-speed streams; concurrent rebuilds on one "
                          "recruit share it ('inf' disables sharing, the "
                          "default; --rebuild-model reconfig only)")
+    ap.add_argument("--engines", default=None, metavar="LIST",
+                    help="comma-separated protocol engines to report "
+                         f"(subset of {','.join(ENGINES)}; default "
+                         "lark,quorum; --metric downtime only)")
+    ap.add_argument("--lease-ticks", type=int, default=None,
+                    help="Hermes membership-lease expiry window: writes "
+                         "block this many ticks after a replica is "
+                         "suspected (--engines hermes; default 0)")
+    ap.add_argument("--view-change-ticks", type=int, default=None,
+                    help="Spinnaker log-reconciliation pause after a "
+                         "leader loss (--engines spinnaker, "
+                         "--rebuild-model reconfig; default 0)")
     ap.add_argument("--key-zipf", type=float, default=None,
                     help="zipf exponent of the key-popularity workload "
                          "(0 = exactly uniform traffic; --metric latency "
@@ -494,6 +546,17 @@ def main(argv=None, *, strict: bool = True):
                      "--rebuild-ticks-per-gib/--size-dist/--size-skew/"
                      "--node-bandwidth-gibps only apply to "
                      "--metric downtime or latency")
+    if args.metric != "downtime":
+        if args.engines is not None or args.lease_ticks is not None \
+                or args.view_change_ticks is not None:
+            ap.error("--engines/--lease-ticks/--view-change-ticks select "
+                     "the protocol zoo; use --metric downtime")
+    if args.engines is None:
+        args.engines = "lark,quorum"
+    if args.lease_ticks is None:
+        args.lease_ticks = 0
+    if args.view_change_ticks is None:
+        args.view_change_ticks = 0
     if args.metric != "latency":
         if args.key_zipf is not None or args.read_frac is not None \
                 or args.requests_per_tick is not None \
@@ -563,7 +626,11 @@ def main(argv=None, *, strict: bool = True):
             node_bandwidth_gibps=args.node_bandwidth_gibps,
             key_zipf=args.key_zipf, read_frac=args.read_frac,
             requests_per_tick=args.requests_per_tick,
-            slo_ticks=args.slo_ticks)
+            slo_ticks=args.slo_ticks,
+            engines=tuple(e.strip() for e in args.engines.split(",")
+                          if e.strip()),
+            lease_ticks=args.lease_ticks,
+            view_change_ticks=args.view_change_ticks)
     except ValueError as e:
         ap.error(str(e))
 
@@ -616,17 +683,27 @@ def main(argv=None, *, strict: bool = True):
         if not args.scenarios_only:
             for r in run_downtime(**common):
                 rows.append(r)
-                print(f"downtime,rf{r['rf']}_p{r['p']:g},0,"
-                      f"pause_lark={r['pause_lark']:.3e};"
-                      f"pause_quorum={r['pause_quorum']:.3e};"
-                      f"ratio={r['ratio']:.2f}")
+                if r["kind"] == "downtime_engine":
+                    print(f"downtime_engine,{r['engine']}_rf{r['rf']}_"
+                          f"p{r['p']:g},0,pause={r['pause']:.3e};"
+                          f"events={r['events']}")
+                else:
+                    print(f"downtime,rf{r['rf']}_p{r['p']:g},0,"
+                          f"pause_lark={r['pause_lark']:.3e};"
+                          f"pause_quorum={r['pause_quorum']:.3e};"
+                          f"ratio={r['ratio']:.2f}")
         if names:
             for r in run_downtime_scenarios(names, **common):
                 rows.append(r)
-                print(f"downtime_scenario,{r['scenario']}_rf{r['rf']}_"
-                      f"p{r['p']:g},0,pause_lark={r['pause_lark']:.3e};"
-                      f"pause_quorum={r['pause_quorum']:.3e};"
-                      f"ratio={r['ratio']:.2f}")
+                if r["kind"] == "downtime_engine_scenario":
+                    print(f"downtime_engine_scenario,{r['engine']}_"
+                          f"{r['scenario']}_rf{r['rf']}_p{r['p']:g},0,"
+                          f"pause={r['pause']:.3e};events={r['events']}")
+                else:
+                    print(f"downtime_scenario,{r['scenario']}_rf{r['rf']}_"
+                          f"p{r['p']:g},0,pause_lark={r['pause_lark']:.3e};"
+                          f"pause_quorum={r['pause_quorum']:.3e};"
+                          f"ratio={r['ratio']:.2f}")
     else:
         if not args.scenarios_only:
             for r in run(full=args.full, seeds=tuple(range(args.trials)),
@@ -660,6 +737,15 @@ def main(argv=None, *, strict: bool = True):
             meta["read_frac"] = args.read_frac
             meta["requests_per_tick"] = args.requests_per_tick
             meta["slo_ticks"] = args.slo_ticks
+        # zoo meta only when the zoo is actually in play — a default
+        # lark,quorum run keeps emitting the pre-zoo meta byte for byte,
+        # so committed baselines regen-diff clean across this change
+        if args.metric == "downtime" and (
+                args.engines != "lark,quorum" or args.lease_ticks
+                or args.view_change_ticks):
+            meta["engines"] = args.engines
+            meta["lease_ticks"] = args.lease_ticks
+            meta["view_change_ticks"] = args.view_change_ticks
         if args.metric in ("downtime", "latency"):
             meta["rebuild_model"] = args.rebuild_model
             meta["size_dist"] = args.size_dist

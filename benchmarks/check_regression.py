@@ -50,6 +50,19 @@ semantic change that should come with a refreshed baseline:
         --devices 8 --metric latency --smoke --scenario all \
         --json benchmarks/BENCH_latency.json
 
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python benchmarks/availability_sweep.py --backend jax --trials 8 \
+        --devices 8 --metric downtime --smoke --rebuild-model reconfig \
+        --engines lark,quorum,hermes,spinnaker --lease-ticks 40 \
+        --view-change-ticks 200 --scenario rolling-restart \
+        --json benchmarks/BENCH_shootout.json
+
+Protocol-zoo rows (kind "downtime_engine"/"downtime_engine_scenario",
+from --engines hermes/spinnaker) are keyed by their explicit ``engine``
+field plus the zoo knobs and gate a single pause/ci_pause column pair;
+the loader rejects engine rows whose engine field is missing or unknown
+rather than letting them silently match the quorum baseline columns.
+
 Fused-megakernel rows (--packed, bit-packed state + the fused pallas
 step kernel) are keyed identically to their unpacked counterparts ON
 PURPOSE: packing is layout-only, so a --packed run gated against an
@@ -76,9 +89,15 @@ _GATED_COLS = {
     "availability": (("u_lark", "ci_lark"), ("u_maj", "ci_maj")),
     "downtime": (("pause_lark", "ci_pause_lark"),
                  ("pause_quorum", "ci_pause_quorum")),
+    "downtime_engine": (("pause", "ci_pause"),),
     "latency": (("lat_lark", "ci_lat_lark"),
                 ("lat_quorum", "ci_lat_quorum")),
 }
+
+#: engine names a "downtime_engine" row may carry — mirrors
+#: core.downtime_batched.ENGINES without importing the engine stack
+#: (this gate runs before PYTHONPATH=src in some CI lanes)
+_KNOWN_ENGINES = ("lark", "quorum", "hermes", "spinnaker")
 
 
 def row_key(r: dict):
@@ -86,6 +105,17 @@ def row_key(r: dict):
         return ("scenario", r["scenario"], r["rf"], r["p"])
     if r.get("kind") == "iid":
         return ("iid", r["rf"], r["p"])
+    if r.get("kind") in ("downtime_engine", "downtime_engine_scenario"):
+        # protocol-zoo rows are keyed by the engine whose pause they
+        # measure — without the engine in the key, a hermes row and a
+        # spinnaker row at the same grid point would gate each other —
+        # plus the zoo knobs (a different lease / view-change window is
+        # a different measurement, like the latency workload knobs)
+        return ("downtime_engine", r["engine"], r.get("scenario", "iid"),
+                r["rf"], r["p"], r.get("rebuild_model", "fixed"),
+                r.get("lease_ticks", 0), r.get("view_change_ticks", 0),
+                r.get("size_dist", "uniform"), r.get("size_skew", 0.0),
+                r.get("node_bandwidth_gibps"))
     if r.get("kind") in ("downtime", "downtime_scenario"):
         # the two quorum-log baselines measure different things; rows from
         # different rebuild models must never be compared (pre-roster
@@ -111,6 +141,10 @@ def row_key(r: dict):
 
 def row_cols(r: dict):
     kind = r.get("kind", "")
+    # engine rows must match before the broader downtime prefix — they
+    # carry per-engine pause/ci_pause columns, not the lark/quorum pair
+    if kind.startswith("downtime_engine"):
+        return _GATED_COLS["downtime_engine"]
     if kind.startswith("downtime"):
         return _GATED_COLS["downtime"]
     if kind.startswith("latency"):
@@ -201,7 +235,21 @@ def load_rows(path: str) -> dict:
             "regenerate the dump with availability_sweep.py --json "
             "(non-finite ratios serialize as null)")
     with open(path) as fh:
-        return json.load(fh, parse_constant=_reject)
+        doc = json.load(fh, parse_constant=_reject)
+    for r in doc.get("rows", ()):
+        if str(r.get("kind", "")).startswith("downtime_engine"):
+            engine = r.get("engine")
+            if engine is None:
+                raise ValueError(
+                    f"{path}: downtime_engine row without an 'engine' "
+                    f"field (rf={r.get('rf')}, p={r.get('p')}) — the "
+                    "engine name is the row key; regenerate the dump")
+            if engine not in _KNOWN_ENGINES:
+                raise ValueError(
+                    f"{path}: unknown engine {engine!r} in a "
+                    f"downtime_engine row; known: "
+                    f"{', '.join(_KNOWN_ENGINES)}")
+    return doc
 
 
 def main(argv=None, *, strict: bool = True) -> int:

@@ -104,6 +104,21 @@ _SIZE_SALT = 0x94D049BB
 
 REBUILD_MODELS = ("fixed", "reconfig")
 
+#: the protocol zoo: every engine one run can report.  lark and quorum are
+#: the paper's §6 pair and always simulated; hermes (Katsarakis et al. —
+#: broadcast replication, all replicas serve linearizable reads under
+#: membership leases, writes block on a suspected replica until the lease
+#: epoch advances) and spinnaker (Rao et al. — Paxos with reconfiguration,
+#: a view-change log-reconciliation pause on leader loss) are optional
+#: contrast engines riding the same node trajectories.
+ENGINES = ("lark", "quorum", "hermes", "spinnaker")
+
+#: the necessity hooks: each disables exactly one transition predicate of
+#: the zoo state machines so tests can prove the predicate is load-bearing
+#: (tests/test_condition_necessity.py style)
+DISABLE_PREDICATES = ("lease-expiry", "view-change-trigger",
+                      "roster-recruit")
+
 #: per-partition data-size distributions for the reconfiguring baseline.
 #: All three pin the same mean (the uniform model's 1.5 GiB), so every
 #: distribution describes the same total dataset under the §6
@@ -164,8 +179,38 @@ class DowntimeParams:
     read_frac: float = 1.0
     requests_per_tick: float = 0.0
     slo_ticks: int = 0
+    # protocol-zoo knobs: which engines to report, and their pause costs
+    # (lease_ticks — Hermes membership-lease epoch length; a suspected
+    # replica blocks writes until it elapses.  view_change_ticks —
+    # Spinnaker's log-reconciliation pause after a leader loss.)
+    engines: tuple = ("lark", "quorum")
+    lease_ticks: int = 0
+    view_change_ticks: int = 0
 
     def __post_init__(self):
+        object.__setattr__(self, "engines", tuple(self.engines))
+        if not self.engines:
+            raise ValueError("engines must name at least one protocol")
+        for e in self.engines:
+            if e not in ENGINES:
+                raise ValueError(f"unknown engine {e!r}; expected a "
+                                 f"subset of {ENGINES}")
+        if len(set(self.engines)) != len(self.engines):
+            raise ValueError(f"duplicate engines: {self.engines}")
+        if self.lease_ticks < 0 or self.view_change_ticks < 0:
+            raise ValueError("lease_ticks and view_change_ticks must "
+                             "be >= 0")
+        if self.lease_ticks > 0 and not self.hermes:
+            raise ValueError("lease_ticks models the hermes engine's "
+                             "membership leases; add 'hermes' to engines")
+        if self.view_change_ticks > 0 and not self.spinnaker:
+            raise ValueError("view_change_ticks models the spinnaker "
+                             "engine's view changes; add 'spinnaker' to "
+                             "engines")
+        if self.spinnaker and not self.reconfig:
+            raise ValueError("the spinnaker engine elects among the "
+                             "reconfiguring baseline's roster; use "
+                             "rebuild_model='reconfig'")
         if self.dupres_ticks < 0 or self.rebuild_steps < 0:
             raise ValueError("dupres_ticks and rebuild_steps must be >= 0")
         if not 2 <= self.hist_bins <= 30:
@@ -211,6 +256,14 @@ class DowntimeParams:
     @property
     def bandwidth_shared(self) -> bool:
         return math.isfinite(self.node_bandwidth_gibps)
+
+    @property
+    def hermes(self) -> bool:
+        return "hermes" in self.engines
+
+    @property
+    def spinnaker(self) -> bool:
+        return "spinnaker" in self.engines
 
 
 def _norm_ppf(u: np.ndarray) -> np.ndarray:
@@ -354,6 +407,21 @@ class BatchedDowntimeResult:
     hist_quorum: np.ndarray = field(repr=False, default=None)
     pause_lark_trials: np.ndarray = field(repr=False, default=None)
     pause_quorum_trials: np.ndarray = field(repr=False, default=None)
+    #: protocol-zoo outputs — None/0 unless the matching engine was in
+    #: `engines` (lark/quorum keep their dedicated fields above)
+    engines: tuple = ("lark", "quorum")
+    lease_ticks: int = 0
+    view_change_ticks: int = 0
+    pause_hermes: Optional[float] = None
+    hermes_events: int = 0
+    ci_hermes: float = 0.0
+    pause_spinnaker: Optional[float] = None
+    spinnaker_events: int = 0
+    ci_spinnaker: float = 0.0
+    hist_hermes: np.ndarray = field(repr=False, default=None)
+    hist_spinnaker: np.ndarray = field(repr=False, default=None)
+    pause_hermes_trials: np.ndarray = field(repr=False, default=None)
+    pause_spinnaker_trials: np.ndarray = field(repr=False, default=None)
     trajectory: Optional[Dict[str, np.ndarray]] = field(repr=False,
                                                         default=None)
     #: raw per-trial client-latency accumulators (only when the engine is
@@ -370,6 +438,29 @@ class BatchedDowntimeResult:
         """Quorum-log pause over LARK pause — the §6 headline ratio."""
         return self.pause_quorum / self.pause_lark if self.pause_lark > 0 \
             else math.inf
+
+    def engine_stats(self, engine: str) -> Dict[str, object]:
+        """Uniform per-engine view: pause fraction, CI half-width, event
+        count, duration histogram, and per-trial fractions for any member
+        of ENGINES (raises if the engine wasn't simulated)."""
+        if engine not in self.engines:
+            raise ValueError(f"engine {engine!r} was not simulated "
+                             f"(engines={self.engines})")
+        by = {
+            "lark": (self.pause_lark, self.ci_lark, self.lark_events,
+                     self.hist_lark, self.pause_lark_trials),
+            "quorum": (self.pause_quorum, self.ci_quorum,
+                       self.quorum_events, self.hist_quorum,
+                       self.pause_quorum_trials),
+            "hermes": (self.pause_hermes, self.ci_hermes,
+                       self.hermes_events, self.hist_hermes,
+                       self.pause_hermes_trials),
+            "spinnaker": (self.pause_spinnaker, self.ci_spinnaker,
+                          self.spinnaker_events, self.hist_spinnaker,
+                          self.pause_spinnaker_trials),
+        }[engine]
+        return {"pause": by[0], "ci_pause": by[1], "events": by[2],
+                "hist": by[3], "pause_trials": by[4]}
 
 
 # ---------------------------------------------------------------------------
@@ -396,7 +487,16 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
                dupres_ticks: int, rebuild_steps: int, hist_bins: int,
                rebuild_model: str = "fixed", rebuild_ticks=None,
                bandwidth_fp=None, cnt_fn=None, packed: bool = False,
-               lat_fn=None):
+               lat_fn=None, engines: tuple = (), lease_ticks: int = 0,
+               view_change_ticks: int = 0, disable=frozenset()):
+    hermes = "hermes" in engines
+    spinnaker = "spinnaker" in engines
+    # necessity hooks: each strips one transition predicate so tests can
+    # prove it is load-bearing; production runs pass an empty set
+    lease_on = "lease-expiry" not in disable
+    vc_on = "view-change-trigger" not in disable
+    recruit_on = "roster-recruit" not in disable
+
     def hist_add(hist, mask, d):
         return _hist_add(xp, hist_bins, hist, mask, d)
 
@@ -500,46 +600,152 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
         leader = xp.where(lark, ldr, leader)
         return ldn, lt0, leader, lpt, lev, lhist, pen
 
+    def pause_transitions(t_clamp, pause, dn, t0, ev, hist):
+        """Close pause runs whose condition cleared, open new ones (a
+        pause-start is one counted event) — the post-event transition
+        block every protocol-zoo engine shares with the quorum baseline
+        (identical op order, so a degenerate-knob engine reproduces the
+        baseline's run accounting bit for bit)."""
+        hist = hist_add(hist, dn & ~pause, t_clamp[:, None] - t0)
+        go = ~dn & pause
+        t0 = xp.where(go, t_clamp[:, None], t0)
+        ev = ev + xp.sum(go, axis=1).astype(xp.int32)
+        return pause, t0, ev, hist
+
     def quorum_transitions(t_clamp, qmaj, qreb, qdn, qt0, qev, qhist):
-        """Close quorum runs whose pause condition cleared, open new ones
-        (a pause-start is one counted event)."""
-        qpause = ~qmaj | (qreb > 0)
-        qhist = hist_add(qhist, qdn & ~qpause, t_clamp[:, None] - qt0)
-        qgo = ~qdn & qpause
-        qt0 = xp.where(qgo, t_clamp[:, None], qt0)
-        qev = qev + xp.sum(qgo, axis=1).astype(xp.int32)
-        qdn = qpause
-        return qdn, qt0, qev, qhist
+        return pause_transitions(t_clamp, ~qmaj | (qreb > 0), qdn, qt0,
+                                 qev, qhist)
+
+    # -- protocol-zoo engines.  Each carries 7 leaves of its own —
+    # (dn bool, t0 i32, 2 engine-specific (B, P) i32 states, pt f32 (B,),
+    # ev i32 (B,), hist i32 (B, hist_bins)) — and consumes NO randomness:
+    # both ride the identical node trajectories (invariant 3), which is
+    # what makes the degenerate-knob limits exact rather than statistical.
+
+    def knob_interval(now, dt, dt_i, base_dn, rem_x, dn, t0, pt, hist, *,
+                      expire=True):
+        """Interval pause charge for a knob-pause engine over
+        [now, t_clamp): full dt where the engine's base condition held at
+        interval start (same expression as the lark/quorum charges, so a
+        zero-knob engine accrues bit-identically), plus min(countdown,
+        dt) extra paused ticks where it didn't but a knob countdown was
+        running; a countdown expiring mid-interval with the base
+        condition clear closes the pause run between events."""
+        pt = pt + xp.sum(base_dn, axis=1).astype(xp.float32) * dt
+        pt = pt + xp.sum(
+            xp.where(~base_dn, xp.minimum(rem_x, dt_i[:, None]), 0)
+            .astype(xp.float32), axis=1)
+        if expire:
+            ends_mid = dn & ~base_dn & (rem_x > 0) & \
+                (dt_i[:, None] >= rem_x)
+            hist = hist_add(hist, ends_mid, (now[:, None] + rem_x) - t0)
+            dn = dn & ~ends_mid
+        return pt, dn, hist
+
+    def hermes_interval(now, dt, dt_i, ldn, hstate):
+        """Hermes charges: down for the whole interval wherever PAC was
+        down at interval start (reads need a serving partition just like
+        LARK — all replicas serve, so the availability condition is
+        LARK's), plus the remaining lease-epoch wait where writes were
+        blocked on a suspected replica."""
+        hdn, ht0, hmask, hlease, hpt, hev, hhist = hstate
+        hpt, hdn, hhist = knob_interval(now, dt, dt_i, ldn, hlease, hdn,
+                                        ht0, hpt, hhist, expire=lease_on)
+        if lease_on:
+            hlease = xp.maximum(hlease - dt_i[:, None], 0)
+        return (hdn, ht0, hmask, hlease, hpt, hev, hhist)
+
+    def hermes_post(t_clamp, lark, repm, hstate):
+        """Post-event Hermes transition: any member of the carried
+        membership view going down is a suspicion — writes block until
+        the lease epoch advances (lease_ticks later) — and the view
+        re-forms on the surviving replicas."""
+        hdn, ht0, hmask, hlease, hpt, hev, hhist = hstate
+        loss_h = (hmask & ~repm) != 0
+        if lease_ticks > 0:
+            hlease = xp.where(loss_h, xp.int32(lease_ticks), hlease)
+        hmask = repm
+        hpause = ~lark | (hlease > 0)
+        hdn, ht0, hev, hhist = pause_transitions(t_clamp, hpause, hdn,
+                                                 ht0, hev, hhist)
+        return (hdn, ht0, hmask, hlease, hpt, hev, hhist)
+
+    def spinnaker_interval(now, dt, dt_i, qmaj_prev, rem0, sstate):
+        """Spinnaker charges: the quorum baseline's interval accounting
+        (majority-down + remaining catch-up wall-ticks) with the
+        view-change reconciliation countdown overlaid — the pause ends
+        when the later of the two clears, so the interval-start remaining
+        wait is their max."""
+        sdn, st0, sldr, svc, spt, sev, shist = sstate
+        spt, sdn, shist = knob_interval(
+            now, dt, dt_i, ~qmaj_prev, xp.maximum(rem0, svc), sdn, st0,
+            spt, shist)
+        svc = xp.maximum(svc - dt_i[:, None], 0)
+        return (sdn, st0, sldr, svc, spt, sev, shist)
+
+    def spinnaker_post(t_clamp, qmaj, qreb, rup_post, roster, rlead,
+                       sstate):
+        """Post-event Spinnaker transition: losing the elected leader
+        (no longer an up roster member) triggers a view change — the new
+        leader (minimum up roster rank, from the kernel's rleader output)
+        pauses commits for view_change_ticks of log reconciliation on
+        top of any catch-up."""
+        sdn, st0, sldr, svc, spt, sev, shist = sstate
+        valid = xp.any((roster == sldr[:, :, None]) & rup_post, axis=2)
+        new_sldr = xp.where(valid, sldr, rlead)
+        trigger = ~valid & (sldr < n) & (new_sldr < n) & \
+            (new_sldr != sldr)
+        if view_change_ticks > 0 and vc_on:
+            svc = xp.where(trigger, xp.int32(view_change_ticks), svc)
+        sldr = new_sldr
+        spause = ~qmaj | (qreb > 0) | (svc > 0)
+        sdn, st0, sev, shist = pause_transitions(t_clamp, spause, sdn,
+                                                 st0, sev, shist)
+        return (sdn, st0, sldr, svc, spt, sev, shist)
 
     def step(carry, s):
         (now, up, ev_t, full, rr_t, rr_idx, lane0, ldn, lt0, qrep, qreb,
          qdn, qt0, leader, lpt, qpt, lev, qev, lhist, qhist) = carry[:20]
-        lat = carry[20:]
+        k = 20
+        hstate = None
+        if hermes:
+            hstate = carry[k:k + 7]
+            k += 7
+        lat = carry[k:]
         B = up.shape[0]               # local trials (a shard of the batch)
         t_clamp, dt, active, up, ev_t, rr_t, rr_idx = advance(
             now, up, ev_t, rr_t, rr_idx, lane0, s)
         dt_i = t_clamp - now                                  # (B,) int32
         lpt, qpt, qreb, qdn, qhist, qmaj_prev, rem0 = interval_pause(
             now, dt, dt_i, ldn, qrep, qreb, qdn, qt0, lpt, qpt, qhist)
+        if hermes:
+            hstate = hermes_interval(now, dt, dt_i, ldn, hstate)
         lat = lat_interval(lat, dt_i, ldn, qmaj_prev, rem0)
         now = t_clamp
 
         # -- re-evaluate both protocols on the post-event cluster state
         up_succ = up[:, succ]                                 # (B, P, n)
         rep_new = up_succ[:, :, :rf]                          # replica lanes
+        repm = None
         if packed:
             upw = xp.moveaxis(bitpack.pack_words(up_succ, xp), -1, 1)
-            lark, qmaj, ldr, lfull, _nrep, crepsw = dt_fn(upw, full)
+            out_t = dt_fn(upw, full)
+            lark, qmaj, ldr, lfull = out_t[:4]
+            crepsw = out_t[-1]
+            if hermes:
+                repm = out_t[5]
             full = xp.where(lark[:, None, :], crepsw, full)
         else:
-            lark, qmaj, ldr, lfull, _nrep, creps = dt_fn(
+            out_t = dt_fn(
                 up_succ.reshape(B * P, n), full.reshape(B * P, n))
-            lark = lark.reshape(B, P)
-            qmaj = qmaj.reshape(B, P)
-            ldr = ldr.reshape(B, P)
-            lfull = lfull.reshape(B, P)
-            full = xp.where(lark[:, :, None], creps.reshape(B, P, n),
-                            full)
+            lark = out_t[0].reshape(B, P)
+            qmaj = out_t[1].reshape(B, P)
+            ldr = out_t[2].reshape(B, P)
+            lfull = out_t[3].reshape(B, P)
+            if hermes:
+                repm = out_t[5].reshape(B, P)
+            full = xp.where(lark[:, :, None],
+                            out_t[-1].reshape(B, P, n), full)
 
         ldn, lt0, leader, lpt, lev, lhist, pen = lark_transitions(
             t_clamp, lark, ldr, lfull, ldn, lt0, leader, lpt, lev, lhist)
@@ -554,13 +760,17 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
         qdn, qt0, qev, qhist = quorum_transitions(
             t_clamp, qmaj, qreb, qdn, qt0, qev, qhist)
         qrep = rep_new
+        if hermes:
+            hstate = hermes_post(t_clamp, lark, repm, hstate)
 
         carry = (now, up, ev_t, full, rr_t, rr_idx, lane0, ldn, lt0,
                  qrep, qreb, qdn, qt0, leader, lpt, qpt, lev, qev,
-                 lhist, qhist) + lat
+                 lhist, qhist) + (hstate if hermes else ()) + lat
         out = (t_clamp, xp.sum(ldn, axis=1).astype(xp.int32),
                xp.sum(qdn, axis=1).astype(xp.int32),
                xp.sum(up, axis=1).astype(xp.int32))
+        if hermes:
+            out = out + (xp.sum(hstate[0], axis=1).astype(xp.int32),)
         return carry, out
 
     lanes_n = xp.arange(n, dtype=xp.int32)
@@ -571,6 +781,9 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
         seat is kept until a later step finds one).  Returns the new
         roster plus (new_rank, took) — the most recent recruit's
         succession rank per partition and whether any seat was filled."""
+        if not recruit_on:       # necessity hook: no seat is ever filled
+            return (roster, xp.full(rup.shape[:2], n, dtype=xp.int32),
+                    xp.zeros(rup.shape[:2], dtype=bool))
         in_roster = xp.zeros(up_succ.shape, dtype=bool)
         for j in range(rf):
             in_roster = in_roster | (lanes_n[None, None, :]
@@ -614,7 +827,15 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
         (now, up, ev_t, full, rr_t, rr_idx, lane0, ldn, lt0, qrep, qreb,
          qdn, qt0, leader, lpt, qpt, lev, qev, lhist, qhist,
          roster, recruit) = carry[:22]
-        lat = carry[22:]
+        ke = 22
+        hstate = sstate = None
+        if hermes:
+            hstate = carry[ke:ke + 7]
+            ke += 7
+        if spinnaker:
+            sstate = carry[ke:ke + 7]
+            ke += 7
+        lat = carry[ke:]
         B = up.shape[0]               # local trials (a shard of the batch)
         t_clamp, dt, active, up, ev_t, rr_t, rr_idx = advance(
             now, up, ev_t, rr_t, rr_idx, lane0, s)
@@ -643,6 +864,11 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
         lpt, qpt, qreb, qdn, qhist, qmaj_prev, rem0 = interval_pause(
             now, dt, dt_i, ldn, qrep, qreb, qdn, qt0, lpt, qpt, qhist,
             rate=rate)
+        if hermes:
+            hstate = hermes_interval(now, dt, dt_i, ldn, hstate)
+        if spinnaker:
+            sstate = spinnaker_interval(now, dt, dt_i, qmaj_prev, rem0,
+                                        sstate)
         lat = lat_interval(lat, dt_i, ldn, qmaj_prev, rem0)
         now = t_clamp
 
@@ -669,14 +895,18 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
                            xp.where(loss_any, xp.int32(n), recruit))
 
         # -- roster-aware per-step evaluation on the reconfigured roster
-        lark, qmaj, ldr, lfull, _nrep, creps = dt_fn(
+        out_t = dt_fn(
             up_succ.reshape(B * P, n), full.reshape(B * P, n),
             roster.reshape(B * P, rf))
-        lark = lark.reshape(B, P)
-        qmaj = qmaj.reshape(B, P)
-        ldr = ldr.reshape(B, P)
-        lfull = lfull.reshape(B, P)
-        full = xp.where(lark[:, :, None], creps.reshape(B, P, n), full)
+        lark = out_t[0].reshape(B, P)
+        qmaj = out_t[1].reshape(B, P)
+        ldr = out_t[2].reshape(B, P)
+        lfull = out_t[3].reshape(B, P)
+        repm = out_t[5].reshape(B, P) if hermes else None
+        rlead = out_t[5 + int(hermes)].reshape(B, P) if spinnaker \
+            else None
+        full = xp.where(lark[:, :, None], out_t[-1].reshape(B, P, n),
+                        full)
 
         ldn, lt0, leader, lpt, lev, lhist, pen = lark_transitions(
             t_clamp, lark, ldr, lfull, ldn, lt0, leader, lpt, lev, lhist)
@@ -684,13 +914,24 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
         qdn, qt0, qev, qhist = quorum_transitions(
             t_clamp, qmaj, qreb, qdn, qt0, qev, qhist)
         qrep = xp.take_along_axis(up_succ, roster, axis=2)
+        if hermes:
+            hstate = hermes_post(t_clamp, lark, repm, hstate)
+        if spinnaker:
+            sstate = spinnaker_post(t_clamp, qmaj, qreb, qrep, roster,
+                                    rlead, sstate)
 
         carry = (now, up, ev_t, full, rr_t, rr_idx, lane0, ldn, lt0,
                  qrep, qreb, qdn, qt0, leader, lpt, qpt, lev, qev,
-                 lhist, qhist, roster, recruit) + lat
+                 lhist, qhist, roster, recruit) \
+            + (hstate if hermes else ()) \
+            + (sstate if spinnaker else ()) + lat
         out = (t_clamp, xp.sum(ldn, axis=1).astype(xp.int32),
                xp.sum(qdn, axis=1).astype(xp.int32),
                xp.sum(up, axis=1).astype(xp.int32))
+        if hermes:
+            out = out + (xp.sum(hstate[0], axis=1).astype(xp.int32),)
+        if spinnaker:
+            out = out + (xp.sum(sstate[0], axis=1).astype(xp.int32),)
         return carry, out
 
     def step_reconfig_packed(carry, s):
@@ -706,7 +947,15 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
         (now, up, ev_t, full, rr_t, rr_idx, lane0, ldn, lt0, qrep, qreb,
          qdn, qt0, leader, lpt, qpt, lev, qev, lhist, qhist,
          roster, recruit) = carry[:22]
-        lat = carry[22:]
+        ke = 22
+        hstate = sstate = None
+        if hermes:
+            hstate = carry[ke:ke + 7]
+            ke += 7
+        if spinnaker:
+            sstate = carry[ke:ke + 7]
+            ke += 7
+        lat = carry[ke:]
         B = up.shape[0]               # local trials (a shard of the batch)
         t_clamp, dt, active, up, ev_t, rr_t, rr_idx = advance(
             now, up, ev_t, rr_t, rr_idx, lane0, s)
@@ -720,25 +969,36 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
         roster, new_rank, took = recruit_roster(up_succ, rup, roster)
 
         # the single per-step eval: packed words + reconfigured roster
-        # (+ carried recruit/in-flight for the contention counts)
+        # (+ carried recruit/in-flight for the contention counts).  The
+        # protocol-zoo extras sit between nrep and crepsw, so the fixed
+        # landmarks are out_t[:4] and the crepsw/counts tail offsets.
+        ne = int(hermes) + int(spinnaker)
         upw = xp.moveaxis(bitpack.pack_words(up_succ, xp), -1, 1)
         if bandwidth_fp is None:
-            lark, qmaj, ldr, lfull, _nrep, crepsw = dt_fn(upw, full,
-                                                          roster)
+            out_t = dt_fn(upw, full, roster)
             rate = xp.full((B, P), _REB_SCALE, dtype=xp.int32)
         else:
             inflight = (qreb > 0) & (recruit < n)
-            lark, qmaj, ldr, lfull, _nrep, crepsw, counts = dt_fn(
-                upw, full, roster, recruit, inflight)
+            out_t = dt_fn(upw, full, roster, recruit, inflight)
+            counts = out_t[6 + ne]
             k = xp.take_along_axis(counts,
                                    xp.clip(recruit, 0, n - 1), axis=1)
             k = xp.where(recruit < n, xp.maximum(k, 1), 1)
             rate = xp.minimum(xp.int32(_REB_SCALE),
                               xp.int32(bandwidth_fp) // k)
+        lark, qmaj, ldr, lfull = out_t[:4]
+        crepsw = out_t[5 + ne]
+        repm = out_t[5] if hermes else None
+        rlead = out_t[5 + int(hermes)] if spinnaker else None
 
         lpt, qpt, qreb, qdn, qhist, qmaj_prev, rem0 = interval_pause(
             now, dt, dt_i, ldn, qrep, qreb, qdn, qt0, lpt, qpt, qhist,
             rate=rate)
+        if hermes:
+            hstate = hermes_interval(now, dt, dt_i, ldn, hstate)
+        if spinnaker:
+            sstate = spinnaker_interval(now, dt, dt_i, qmaj_prev, rem0,
+                                        sstate)
         lat = lat_interval(lat, dt_i, ldn, qmaj_prev, rem0)
         now = t_clamp
 
@@ -755,13 +1015,24 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
         qdn, qt0, qev, qhist = quorum_transitions(
             t_clamp, qmaj, qreb, qdn, qt0, qev, qhist)
         qrep = xp.take_along_axis(up_succ, roster, axis=2)
+        if hermes:
+            hstate = hermes_post(t_clamp, lark, repm, hstate)
+        if spinnaker:
+            sstate = spinnaker_post(t_clamp, qmaj, qreb, qrep, roster,
+                                    rlead, sstate)
 
         carry = (now, up, ev_t, full, rr_t, rr_idx, lane0, ldn, lt0,
                  qrep, qreb, qdn, qt0, leader, lpt, qpt, lev, qev,
-                 lhist, qhist, roster, recruit) + lat
+                 lhist, qhist, roster, recruit) \
+            + (hstate if hermes else ()) \
+            + (sstate if spinnaker else ()) + lat
         out = (t_clamp, xp.sum(ldn, axis=1).astype(xp.int32),
                xp.sum(qdn, axis=1).astype(xp.int32),
                xp.sum(up, axis=1).astype(xp.int32))
+        if hermes:
+            out = out + (xp.sum(hstate[0], axis=1).astype(xp.int32),)
+        if spinnaker:
+            out = out + (xp.sum(sstate[0], axis=1).astype(xp.int32),)
         return carry, out
 
     if rebuild_model == "reconfig":
@@ -792,6 +1063,9 @@ def simulate_downtime_batched(
         use_shard_map: Optional[bool] = None,
         params: Optional[DowntimeParams] = None, packed: bool = False,
         block_t: Optional[int] = None,
+        engines: tuple = ("lark", "quorum"), lease_ticks: int = 0,
+        view_change_ticks: int = 0,
+        _disable_predicates: tuple = (),
         _lat_plan=None) -> BatchedDowntimeResult:
     """Batched §6 commit-pause Monte Carlo over `trials` trajectories.
 
@@ -859,6 +1133,17 @@ def simulate_downtime_batched(
     devices > 1 shards trials over the same 1-D "trials" mesh as the
     availability engine — bit-identical to devices=1 for the same seed.
 
+    engines selects the protocol zoo to report (ENGINES; lark and quorum
+    are the paper's pair and always simulated — listing extra engines
+    adds their state machines on the *same* node trajectories, changing
+    no lark/quorum output bit).  lease_ticks prices the hermes engine's
+    membership-lease epoch (0 pins hermes to the zero-knob LARK trace
+    exactly, given dupres_ticks=0); view_change_ticks prices the
+    spinnaker engine's leader-loss log reconciliation (0 pins spinnaker
+    to the reconfig quorum baseline exactly).  _disable_predicates
+    (private, DISABLE_PREDICATES) strips single transition predicates for
+    the necessity tests.
+
     _lat_plan (private; set by core/client_latency.py) appends the
     client-latency layer's per-(trial, partition) float32 accumulators to
     the scan carry and fills `latency_raw` on the result — the downtime
@@ -873,7 +1158,9 @@ def simulate_downtime_batched(
             hist_bins=hist_bins, rebuild_model=rebuild_model,
             rebuild_ticks_per_gib=rebuild_ticks_per_gib,
             size_dist=size_dist, size_skew=size_skew,
-            node_bandwidth_gibps=node_bandwidth_gibps)
+            node_bandwidth_gibps=node_bandwidth_gibps,
+            engines=engines, lease_ticks=lease_ticks,
+            view_change_ticks=view_change_ticks)
     dupres_ticks, rebuild_steps = params.dupres_ticks, params.rebuild_steps
     hist_bins, rebuild_model = params.hist_bins, params.rebuild_model
     rebuild_ticks_per_gib = params.rebuild_ticks_per_gib
@@ -881,6 +1168,15 @@ def simulate_downtime_batched(
     node_bandwidth_gibps = params.node_bandwidth_gibps
     reconfig = params.reconfig
     bandwidth_shared = params.bandwidth_shared
+    engines = params.engines
+    lease_ticks = params.lease_ticks
+    view_change_ticks = params.view_change_ticks
+    hermes_on, spinnaker_on = params.hermes, params.spinnaker
+    disable = frozenset(_disable_predicates)
+    unknown = disable - set(DISABLE_PREDICATES)
+    if unknown:
+        raise ValueError(f"unknown disable predicates {sorted(unknown)}; "
+                         f"expected a subset of {DISABLE_PREDICATES}")
     if reconfig and max_ticks > (2 ** 31 - 1) // _REB_SCALE - 2:
         raise ValueError("max_ticks too large for the fixed-point "
                          f"catch-up countdowns (<= "
@@ -891,15 +1187,23 @@ def simulate_downtime_batched(
      p_arr, dt_arr) = _engine_setup(
         backend, n=n, partitions=P, seed=seed, p=p, downtime=downtime,
         p_node=p_node, downtime_node=downtime_node, max_ticks=max_ticks)
+    zoo = tuple(e for e in ("hermes", "spinnaker") if e in engines)
     spec = StepSpec(metric="downtime", rf=rf, n_real=n,
                     rebuild_model=rebuild_model, packed=packed,
-                    dupres_ticks=dupres_ticks, rebuild_steps=rebuild_steps)
+                    dupres_ticks=dupres_ticks, rebuild_steps=rebuild_steps,
+                    engines=zoo)
 
     def dt_fn(u, f, roster=None, recruit=None, active=None):
         o = step_eval(spec, u, f, roster=roster, recruit=recruit,
                       active=active, backend=backend, block_p=pac_block_p,
                       block_t=block_t)
-        base = (o.lark, o.maj, o.leader, o.leader_full, o.nrep, o.creps)
+        extras = ()
+        if o.repmask is not None:
+            extras = extras + (o.repmask,)
+        if o.rleader is not None:
+            extras = extras + (o.rleader,)
+        base = (o.lark, o.maj, o.leader, o.leader_full, o.nrep) \
+            + extras + (o.creps,)
         return (base + (o.counts,)) if recruit is not None else base
 
     rebuild_ticks = xp.asarray(_partition_rebuild_ticks(
@@ -934,7 +1238,10 @@ def simulate_downtime_batched(
                       rebuild_model=rebuild_model,
                       rebuild_ticks=rebuild_ticks,
                       bandwidth_fp=bandwidth_fp, cnt_fn=cnt_fn,
-                      packed=packed, lat_fn=lat_fn)
+                      packed=packed, lat_fn=lat_fn, engines=zoo,
+                      lease_ticks=lease_ticks,
+                      view_change_ticks=view_change_ticks,
+                      disable=disable)
 
     # initial state: everyone up, roster replicas full, both protocols
     # evaluated once at t=0 (identical to the availability engine's init;
@@ -944,9 +1251,11 @@ def simulate_downtime_batched(
         xp, B=B, n=n, seed_mix=seed_mix, geo_masks=geo_masks,
         geo_tables=geo_tables, restart_period=restart_period,
         horizon=horizon)
-    full0, (lark0, qmaj0, ldr0, _lf0, _nrep0, _creps0) = _initial_full_state(
+    full0, outs0 = _initial_full_state(
         xp, backend, dt_fn, up0, succ, B=B, P=P, n=n, rf=rf, packed=packed)
-    lark0 = lark0.reshape(B, P)
+    lark0 = outs0[0].reshape(B, P)
+    qmaj0 = outs0[1].reshape(B, P)
+    ldr0 = outs0[2].reshape(B, P)
     zi = xp.zeros((B,), dtype=xp.int32)
     zf = xp.zeros((B,), dtype=xp.float32)
     zbp = xp.zeros((B, P), dtype=xp.int32)
@@ -955,8 +1264,8 @@ def simulate_downtime_batched(
              ~lark0, zbp,                              # ldn, lt0
              up0[:, succ[:, :rf]],                     # qrep (all up)
              zbp,                                      # qreb
-             ~qmaj0.reshape(B, P), zbp,                # qdn, qt0
-             ldr0.reshape(B, P).astype(xp.int32),      # leader
+             ~qmaj0, zbp,                              # qdn, qt0
+             ldr0.astype(xp.int32),                    # leader
              zf, zf, zi, zi, zh, zh)
     if reconfig:
         roster0 = xp.broadcast_to(
@@ -966,6 +1275,18 @@ def simulate_downtime_batched(
         # no catch-up in flight at t=0, so no recruit node to ingest on
         recruit0 = xp.full((B, P), n, dtype=xp.int32)
         carry = carry + (roster0, recruit0)
+    h0 = len(carry)                   # hermes leaves start here (if any)
+    if hermes_on:
+        # the t=0 membership view is the kernel's repmask on the initial
+        # state; the pause mask starts exactly at LARK's (no lease runs)
+        hmask0 = outs0[5].reshape(B, P).astype(xp.int32)
+        carry = carry + (~lark0, zbp, hmask0, zbp, zf, zi, zh)
+    s0_i = len(carry)                 # spinnaker leaves start here
+    if spinnaker_on:
+        # rank 0 leads at t=0 (everyone up, roster [0..rf-1]); no view
+        # change in flight, so the pause mask starts at the quorum
+        # baseline's
+        carry = carry + (~qmaj0, zbp, zbp, zbp, zf, zi, zh)
     lat_i = len(carry)                # lat leaves ride at the carry tail
     if _lat_plan is not None:
         nb = _lat_plan.kf.shape[0]
@@ -979,17 +1300,35 @@ def simulate_downtime_batched(
         import jax.numpy as jnp
         run_chunk = _make_chunk_runner(step, carry, chunk_steps=chunk_steps,
                                        devices=devices, shard=shard,
-                                       n_outputs=4)
+                                       n_outputs=4 + int(hermes_on)
+                                       + int(spinnaker_on))
 
     if max_steps is None:
         max_steps = _default_max_steps(p_arr, dt_arr, n=n, horizon=horizon,
                                        restart_period=restart_period)
+
+    # per-chunk accumulator reset map: the base protocol accumulators at
+    # fixed offsets 14..19 plus, when enabled, each zoo engine's
+    # (pause-time, events, histogram) leaves at offset +4..+6 of its block
+    acc_reset = {14: zf, 15: zf, 16: zi, 17: zi, 18: zh, 19: zh}
+    if hermes_on:
+        acc_reset.update({h0 + 4: zf, h0 + 5: zi, h0 + 6: zh})
+    if spinnaker_on:
+        acc_reset.update({s0_i + 4: zf, s0_i + 5: zi, s0_i + 6: zh})
 
     lpt_tot = np.zeros(B)
     qpt_tot = np.zeros(B)
     lev_tot = qev_tot = 0
     lhist_tot = np.zeros(hist_bins, dtype=np.int64)
     qhist_tot = np.zeros(hist_bins, dtype=np.int64)
+    if hermes_on:
+        hpt_tot = np.zeros(B)
+        hev_tot = 0
+        hhist_tot = np.zeros(hist_bins, dtype=np.int64)
+    if spinnaker_on:
+        spt_tot = np.zeros(B)
+        sev_tot = 0
+        shist_tot = np.zeros(hist_bins, dtype=np.int64)
     if _lat_plan is not None:
         lat_dup = np.zeros((B, _lat_plan.kf.shape[0]))
         lat_qhist = np.zeros((B, _lat_plan.nbins))
@@ -1014,6 +1353,16 @@ def simulate_downtime_batched(
         qev_tot += int(np.asarray(carry[17]).sum())
         lhist_tot += np.asarray(carry[18], dtype=np.int64).sum(axis=0)
         qhist_tot += np.asarray(carry[19], dtype=np.int64).sum(axis=0)
+        if hermes_on:
+            hpt_tot += np.asarray(carry[h0 + 4], dtype=np.float64)
+            hev_tot += int(np.asarray(carry[h0 + 5]).sum())
+            hhist_tot += np.asarray(carry[h0 + 6],
+                                    dtype=np.int64).sum(axis=0)
+        if spinnaker_on:
+            spt_tot += np.asarray(carry[s0_i + 4], dtype=np.float64)
+            sev_tot += int(np.asarray(carry[s0_i + 5]).sum())
+            shist_tot += np.asarray(carry[s0_i + 6],
+                                    dtype=np.int64).sum(axis=0)
         if _lat_plan is not None:
             # pool the per-(trial, partition) float32 charge accumulators
             # over partitions here, host-side in float64 — a fixed
@@ -1025,7 +1374,7 @@ def simulate_downtime_batched(
             lat_qslo += np.asarray(lt_[3], dtype=np.float64).sum(axis=1)
             lat_qsum += np.asarray(lt_[4], dtype=np.float64).sum(axis=1)
             carry = carry[:lat_i] + (lt_[0], lz_nb, lz_hb, lz_bp, lz_bp)
-        carry = carry[:14] + (zf, zf, zi, zi, zh, zh) + carry[20:]
+        carry = tuple(acc_reset.get(i, c) for i, c in enumerate(carry))
         if (now >= horizon).all():
             break
         # pooled CI early stop, mirroring the availability engine's rule
@@ -1059,13 +1408,39 @@ def simulate_downtime_batched(
         hw_q = t * float(u_q_trials.std(ddof=1))
     traj_out = None
     if trajectory:
-        cols = [np.concatenate([c[i] for c in traj]) for i in range(4)]
-        traj_out = {"times": cols[0], "paused_lark": cols[1],
-                    "paused_quorum": cols[2], "nodes_up": cols[3]}
+        names = ["times", "paused_lark", "paused_quorum", "nodes_up"]
+        if hermes_on:
+            names.append("paused_hermes")
+        if spinnaker_on:
+            names.append("paused_spinnaker")
+        cols = [np.concatenate([c[i] for c in traj])
+                for i in range(len(names))]
+        traj_out = dict(zip(names, cols))
     lat_raw = None
     if _lat_plan is not None:
         lat_raw = {"dup": lat_dup, "qhist": lat_qhist, "qslo": lat_qslo,
                    "qsum": lat_qsum, "now": now.copy()}
+
+    def _engine_stats(pt_tot):
+        u = min(float(pt_tot.sum()) / pt, 1.0)
+        u_trials = np.minimum(pt_tot / pt_b, 1.0)
+        hw = 0.0
+        if B >= 3:
+            hw = t975(B - 1) / math.sqrt(B) * float(u_trials.std(ddof=1))
+        ci = max(hw, 1.96 * math.sqrt(max(u * (1 - u), 1e-30) / pt))
+        return u, ci, u_trials
+
+    zoo_kw = {}
+    if hermes_on:
+        u_h, ci_h, u_h_trials = _engine_stats(hpt_tot)
+        zoo_kw.update(pause_hermes=u_h, ci_hermes=ci_h,
+                      hermes_events=hev_tot, hist_hermes=hhist_tot,
+                      pause_hermes_trials=u_h_trials)
+    if spinnaker_on:
+        u_s, ci_s, u_s_trials = _engine_stats(spt_tot)
+        zoo_kw.update(pause_spinnaker=u_s, ci_spinnaker=ci_s,
+                      spinnaker_events=sev_tot, hist_spinnaker=shist_tot,
+                      pause_spinnaker_trials=u_s_trials)
     return BatchedDowntimeResult(
         p=p, rf=rf, n=n, partitions=P, trials=B, backend=backend,
         ticks=int(now.mean()), pause_lark=u_l, pause_quorum=u_q,
@@ -1086,4 +1461,6 @@ def simulate_downtime_batched(
                               dtype=np.int64),
         hist_lark=lhist_tot, hist_quorum=qhist_tot,
         pause_lark_trials=u_l_trials, pause_quorum_trials=u_q_trials,
-        trajectory=traj_out, latency_raw=lat_raw)
+        engines=engines, lease_ticks=lease_ticks,
+        view_change_ticks=view_change_ticks,
+        trajectory=traj_out, latency_raw=lat_raw, **zoo_kw)

@@ -182,7 +182,8 @@ def pac_eval_packed(up_words, full_words, *, rf: int, voters: int,
 
 
 def downtime_eval_packed(up_words, full_words, *, rf: int, n_real: int,
-                         roster=None, xp):
+                         roster=None, want_repmask: bool = False,
+                         want_rleader: bool = False, xp):
     """Packed-word §6 per-step eval — bit-identical to
     pac_np.downtime_eval_rank_np.
 
@@ -191,13 +192,25 @@ def downtime_eval_packed(up_words, full_words, *, rf: int, n_real: int,
     reconfiguring baseline's carried replica-set ranks; qmaj/nrep are
     then evaluated over those ranks (select_bit per slot) instead of the
     first-rf prefix mask.  Returns (lark, qmaj, leader, leader_full,
-    nrep, creps_words).
+    nrep, *extras, creps_words).
+
+    The protocol-zoo extras land between nrep and creps:
+      want_repmask  int32 bitmask of the first-rf lanes' up bits — the
+                    Hermes membership view; free in the packed layout
+                    (the mask is word 0 under the rf prefix mask, rf <=
+                    30 < 32 by StepSpec validation).
+      want_rleader  int32 minimum up roster rank (n_real sentinel) — the
+                    Spinnaker electable leader; requires roster and rides
+                    the same select_bit pass as nrep.
 
     The leader scan folds three boolean-tile reductions into one pass:
     the first non-empty word's lowest set bit gives the leader's rank
     (32k + popcount(lsb - 1)) and, tested against the full word, the
     leader-holds-latest-copy bit — no lane iota, no (.., n) broadcast.
     """
+    if want_rleader and roster is None:
+        raise ValueError("rleader needs a roster (it elects among "
+                         "roster members)")
     W = len(up_words)
     n_pad = W * WORD_BITS
     u = _mask_planes(up_words, prefix_masks(n_real, n_pad), xp)
@@ -208,13 +221,21 @@ def downtime_eval_packed(up_words, full_words, *, rf: int, n_real: int,
     full_up = _any_bit([a & b for a, b in zip(u, f)], xp)
     lark = majority & any_roster & full_up
 
+    rleader = None
     if roster is None:
         nrep = _popcount_sum(
             _mask_planes(u, prefix_masks(rf, n_pad), xp), xp)
     else:
-        nrep = select_bit(u, roster[0], xp)
-        for r in roster[1:]:
-            nrep = nrep + select_bit(u, r, xp)
+        if want_rleader:
+            rleader = xp.full(u[0].shape, n_real, dtype=xp.int32)
+        nrep = xp.zeros(u[0].shape, dtype=xp.int32)
+        for r in roster:
+            bit = select_bit(u, r, xp)
+            nrep = nrep + bit
+            if want_rleader:
+                rleader = xp.minimum(
+                    rleader, xp.where(bit > 0, r.astype(xp.int32),
+                                      xp.int32(n_real)))
     qmaj = 2 * nrep > rf
 
     leader = xp.full(u[0].shape, n_pad, dtype=xp.int32)
@@ -232,8 +253,15 @@ def downtime_eval_packed(up_words, full_words, *, rf: int, n_real: int,
         done = nz if done is None else (done | nz)
     leader = xp.minimum(leader, xp.int32(n_real))
 
+    extras = ()
+    if want_repmask:
+        repmask = (u[0] & xp.uint32((1 << rf) - 1)).astype(xp.int32)
+        extras = extras + (repmask,)
+    if want_rleader:
+        extras = extras + (rleader,)
+
     creps = lowest_set_bits(u, rf, xp)
-    return lark, qmaj, leader, leader_full, nrep, creps
+    return (lark, qmaj, leader, leader_full, nrep) + extras + (creps,)
 
 
 def packed_state_bytes(B: int, P: int, n_pad: int) -> int:

@@ -120,13 +120,17 @@ def _node_count_block(rec, act, n_lanes: int, bp_cols: int):
 
 def _fused_downtime_kernel(refs, *, rf: int, n_real: int, W: int,
                            with_roster: bool, with_counts: bool,
+                           with_repmask: bool, with_rleader: bool,
                            n_lanes: int, bp_cols: int):
     it = iter(refs)
     upw_ref, fullw_ref = next(it), next(it)
     roster_ref = next(it) if with_roster else None
     rec_ref, act_ref = (next(it), next(it)) if with_counts else (None, None)
-    lark_ref, qmaj_ref, ldr_ref, lfull_ref, nrep_ref, crepsw_ref = \
-        (next(it) for _ in range(6))
+    lark_ref, qmaj_ref, ldr_ref, lfull_ref, nrep_ref = \
+        (next(it) for _ in range(5))
+    repmask_ref = next(it) if with_repmask else None
+    rleader_ref = next(it) if with_rleader else None
+    crepsw_ref = next(it)
     cnt_ref = next(it) if with_counts else None
 
     upw = upw_ref[...]                         # (bt, W, bp) uint32
@@ -137,13 +141,22 @@ def _fused_downtime_kernel(refs, *, rf: int, n_real: int, W: int,
     if with_roster:
         rost = roster_ref[...]                 # (bt, rf, bp) int32
         roster = [rost[:, j, :] for j in range(rf)]
-    lark, qmaj, leader, lfull, nrep, creps = bitpack.downtime_eval_packed(
-        u, f, rf=rf, n_real=n_real, roster=roster, xp=jnp)
+    outs = bitpack.downtime_eval_packed(
+        u, f, rf=rf, n_real=n_real, roster=roster,
+        want_repmask=with_repmask, want_rleader=with_rleader, xp=jnp)
+    lark, qmaj, leader, lfull, nrep = outs[:5]
+    creps = outs[-1]
     lark_ref[...] = lark
     qmaj_ref[...] = qmaj
     ldr_ref[...] = leader
     lfull_ref[...] = lfull
     nrep_ref[...] = nrep
+    k = 5
+    if with_repmask:
+        repmask_ref[...] = outs[k]
+        k += 1
+    if with_rleader:
+        rleader_ref[...] = outs[k]
     crepsw_ref[...] = jnp.stack(creps, axis=1)
 
     if with_counts:
@@ -162,9 +175,11 @@ def _fused_downtime_kernel(refs, *, rf: int, n_real: int, W: int,
 
 def fused_downtime_eval(upw, fullw, *, rf: int, n_real: int, block_t: int,
                         block_p: int, interpret: bool = False, roster=None,
-                        recruit=None, active=None):
+                        recruit=None, active=None,
+                        want_repmask: bool = False,
+                        want_rleader: bool = False):
     """upw/fullw: (B, W, P) uint32.  Returns (lark, qmaj, leader,
-    leader_full, nrep (all (B, P)), crepsw (B, W, P)[, counts
+    leader_full, nrep (all (B, P)), *extras, crepsw (B, W, P)[, counts
     (B, n_lanes)]) — the packed image of kernels/pac_eval.downtime_eval
     (+ node_count when recruit/active are given), in one pallas_call.
 
@@ -173,7 +188,13 @@ def fused_downtime_eval(upw, fullw, *, rf: int, n_real: int, block_t: int,
     recruit (B, P) int32 + active (B, P) bool, optional (together): also
     emit the per-(trial, node) in-flight rebuild counts, accumulated
     across partition tiles; counts columns >= n_real are padding for the
-    caller to slice (ops.step_eval does)."""
+    caller to slice (ops.step_eval does).
+    want_repmask / want_rleader: protocol-zoo int32 (B, P) extras between
+    nrep and crepsw (Hermes membership bitmask; Spinnaker electable
+    roster leader — requires roster)."""
+    if want_rleader and roster is None:
+        raise ValueError("rleader needs a roster (it elects among "
+                         "roster members)")
     B, W, P = upw.shape
     block_t = min(block_t, B)
     block_p = min(block_p, P)
@@ -195,14 +216,15 @@ def fused_downtime_eval(upw, fullw, *, rf: int, n_real: int, block_t: int,
     if with_counts:
         in_specs += [row_spec, row_spec]
         operands += [recruit.astype(jnp.int32), active]
-    out_specs = [row_spec, row_spec, row_spec, row_spec, row_spec,
-                 word_spec]
+    n_extra = int(want_repmask) + int(want_rleader)
+    out_specs = [row_spec] * (5 + n_extra) + [word_spec]
     out_shape = [
         jax.ShapeDtypeStruct((B, P), jnp.bool_),
         jax.ShapeDtypeStruct((B, P), jnp.bool_),
         jax.ShapeDtypeStruct((B, P), jnp.int32),
         jax.ShapeDtypeStruct((B, P), jnp.bool_),
         jax.ShapeDtypeStruct((B, P), jnp.int32),
+    ] + [jax.ShapeDtypeStruct((B, P), jnp.int32)] * n_extra + [
         jax.ShapeDtypeStruct((B, W, P), jnp.uint32),
     ]
     if with_counts:
@@ -214,6 +236,7 @@ def fused_downtime_eval(upw, fullw, *, rf: int, n_real: int, block_t: int,
     kernel = functools.partial(
         _fused_downtime_kernel, rf=rf, n_real=n_real, W=W,
         with_roster=with_roster, with_counts=with_counts,
+        with_repmask=want_repmask, with_rleader=want_rleader,
         n_lanes=n_lanes, bp_cols=block_p)
 
     def kernel_splat(*refs):

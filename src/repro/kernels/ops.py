@@ -324,7 +324,9 @@ def _pac_eval_unpacked(up_succ, full_succ, *, rf: int, voters: int,
 
 def _downtime_eval_unpacked(up_succ, full_succ, *, rf: int, n_real: int,
                             backend: str = "jax",
-                            block_p: Optional[int] = None, roster=None):
+                            block_p: Optional[int] = None, roster=None,
+                            want_repmask: bool = False,
+                            want_rleader: bool = False):
     """Dispatch the §6 downtime engine's per-step evaluation of a
     (R, n_pad) rank-space tile to the chosen backend.
 
@@ -332,8 +334,10 @@ def _downtime_eval_unpacked(up_succ, full_succ, *, rf: int, n_real: int,
     engine (core/downtime_batched.py) tracks between steps — the
     quorum-log baseline's f+1-copy replica-set majority and up-count, and
     the acting leader's rank and latest-copy bit (for the dup-res
-    penalty).  Returns (lark, qmaj, leader, leader_full, nrep, creps);
-    see pac_np.downtime_eval_rank_np for per-output semantics.
+    penalty).  Returns (lark, qmaj, leader, leader_full, nrep, *extras,
+    creps); see pac_np.downtime_eval_rank_np for per-output semantics
+    (want_repmask / want_rleader are the protocol-zoo extras — Hermes
+    membership bitmask, Spinnaker electable roster leader).
 
     roster (R, rf) int32, optional: the reconfiguring baseline's carried
     replica-set ranks — qmaj/nrep are then evaluated over those ranks
@@ -349,10 +353,14 @@ def _downtime_eval_unpacked(up_succ, full_succ, *, rf: int, n_real: int,
     """
     if backend == "numpy":
         return downtime_eval_rank_np(up_succ, full_succ, rf=rf,
-                                     n_real=n_real, roster=roster)
+                                     n_real=n_real, roster=roster,
+                                     want_repmask=want_repmask,
+                                     want_rleader=want_rleader)
     if backend == "jax":
         return ref.downtime_eval_rank_ref(up_succ, full_succ, rf=rf,
-                                          n_real=n_real, roster=roster)
+                                          n_real=n_real, roster=roster,
+                                          want_repmask=want_repmask,
+                                          want_rleader=want_rleader)
     if backend == "pallas":
         from . import pac_eval as pk
         R, n_pad = up_succ.shape
@@ -369,11 +377,12 @@ def _downtime_eval_unpacked(up_succ, full_succ, *, rf: int, n_real: int,
                              ((0, 0), (0, rpad)),
                              constant_values=n_pad + lanes)
         interpret = jax.default_backend() != "tpu"
-        lark, qmaj, leader, lfull, nrep, creps = pk.downtime_eval(
+        outs = pk.downtime_eval(
             up_succ, full_succ, rf=rf, n_real=n_real,
             block_p=block_p or _pallas_block_p(R), interpret=interpret,
-            roster=roster)
-        return lark, qmaj, leader, lfull, nrep, creps[:, :n_pad]
+            roster=roster, want_repmask=want_repmask,
+            want_rleader=want_rleader)
+        return tuple(outs[:-1]) + (outs[-1][:, :n_pad],)
     raise ValueError(f"unknown PAC backend {backend!r}; "
                      f"expected one of {PAC_BACKENDS}")
 
@@ -478,6 +487,9 @@ def client_latency_step(dirty, dt_i, avail, qok, rem, *, pow_tables, kf,
 
 STEP_METRICS = ("availability", "downtime")
 STEP_REBUILD_MODELS = ("fixed", "reconfig")
+#: protocol-zoo engines a downtime StepSpec can additionally evaluate —
+#: each adds one int32 row output between nrep and creps
+STEP_ENGINES = ("hermes", "spinnaker")
 
 
 @dataclass(frozen=True)
@@ -502,6 +514,14 @@ class StepSpec:
                    §6 engine knobs carried for provenance (they shape
                    the step *around* the eval, not the eval itself;
                    kept here so one spec names the whole step)
+    engines        protocol-zoo engines riding the downtime eval
+                   (subset of STEP_ENGINES).  "hermes" requests the
+                   first-rf membership bitmask (repmask; needs rf <= 30
+                   so the mask fits a non-negative int32); "spinnaker"
+                   requests the electable roster leader (rleader; needs
+                   rebuild_model="reconfig" — it elects among the
+                   carried roster).  Both extras land between nrep and
+                   creps in every kernel body.
     """
     metric: str
     rf: int
@@ -511,6 +531,7 @@ class StepSpec:
     packed: bool = False
     dupres_ticks: int = 0
     rebuild_steps: int = 0
+    engines: tuple = ()
 
     def __post_init__(self):
         if self.metric not in STEP_METRICS:
@@ -527,6 +548,23 @@ class StepSpec:
             raise ValueError(f"voters={self.voters} must be >= 1")
         if self.dupres_ticks < 0 or self.rebuild_steps < 0:
             raise ValueError("dupres_ticks / rebuild_steps must be >= 0")
+        object.__setattr__(self, "engines", tuple(self.engines))
+        for e in self.engines:
+            if e not in STEP_ENGINES:
+                raise ValueError(f"unknown step engine {e!r}; "
+                                 f"expected a subset of {STEP_ENGINES}")
+        if len(set(self.engines)) != len(self.engines):
+            raise ValueError(f"duplicate step engines: {self.engines}")
+        if self.engines and self.metric != "downtime":
+            raise ValueError("protocol-zoo engines are downtime-metric "
+                             "outputs; availability spec can't request "
+                             f"{self.engines}")
+        if "hermes" in self.engines and self.rf > 30:
+            raise ValueError(f"hermes needs rf <= 30 (membership bitmask "
+                             f"in a non-negative int32); got rf={self.rf}")
+        if "spinnaker" in self.engines and self.rebuild_model != "reconfig":
+            raise ValueError("spinnaker elects among the carried roster; "
+                             "it requires rebuild_model='reconfig'")
 
     @property
     def resolved_voters(self) -> int:
@@ -543,10 +581,21 @@ class StepSpec:
         return "fused_downtime_roster" if self.rebuild_model == "reconfig" \
             else "fused_downtime"
 
+    @property
+    def want_repmask(self) -> bool:
+        return "hermes" in self.engines
+
+    @property
+    def want_rleader(self) -> bool:
+        return "spinnaker" in self.engines
+
 
 class StepOutputs(NamedTuple):
     """step_eval's full output surface; slots a spec doesn't produce are
-    None (availability: leader/leader_full/nrep; no recruit: counts)."""
+    None (availability: leader/leader_full/nrep; no recruit: counts;
+    engines without hermes/spinnaker: repmask/rleader — and rleader stays
+    None on roster-less calls even under a spinnaker spec, since it
+    elects among the carried roster)."""
     lark: object
     maj: object
     leader: object = None
@@ -554,6 +603,8 @@ class StepOutputs(NamedTuple):
     nrep: object = None
     creps: object = None
     counts: object = None
+    repmask: object = None
+    rleader: object = None
 
 
 def _fused_block_t(B: int) -> int:
@@ -567,6 +618,19 @@ def _fused_block_t(B: int) -> int:
 def _packed_planes(words, xp):
     W = words.shape[1]
     return [words[:, k, :] for k in range(W)]
+
+
+def _take_extras(outs, want_repmask: bool, want_rleader: bool):
+    """Pull the protocol-zoo extras out of a kernel's (lark, qmaj, leader,
+    leader_full, nrep, *extras, creps[, counts]) tuple."""
+    k = 5
+    repmask = rleader = None
+    if want_repmask:
+        repmask = outs[k]
+        k += 1
+    if want_rleader:
+        rleader = outs[k]
+    return repmask, rleader
 
 
 def step_eval(spec: StepSpec, up, full, *, roster=None, recruit=None,
@@ -604,6 +668,11 @@ def step_eval(spec: StepSpec, up, full, *, roster=None, recruit=None,
         raise ValueError("rebuild node counts are a downtime-engine "
                          "output; availability spec can't request them")
 
+    # rleader elects among the carried roster, so a roster-less call
+    # (e.g. the engines' t=0 init eval) simply doesn't produce it
+    want_rm = spec.want_repmask
+    want_rl = spec.want_rleader and roster is not None
+
     if not spec.packed:
         counts = None
         if recruit is not None:
@@ -616,12 +685,15 @@ def step_eval(spec: StepSpec, up, full, *, roster=None, recruit=None,
                 n_real=spec.n_real, backend=backend, block_p=block_p)
             return StepOutputs(lark=lark, maj=maj, creps=creps,
                                counts=counts)
-        lark, qmaj, leader, lfull, nrep, creps = _downtime_eval_unpacked(
+        outs = _downtime_eval_unpacked(
             up, full, rf=spec.rf, n_real=spec.n_real, backend=backend,
-            block_p=block_p, roster=roster)
-        return StepOutputs(lark=lark, maj=qmaj, leader=leader,
-                           leader_full=lfull, nrep=nrep, creps=creps,
-                           counts=counts)
+            block_p=block_p, roster=roster, want_repmask=want_rm,
+            want_rleader=want_rl)
+        repmask, rleader = _take_extras(outs, want_rm, want_rl)
+        return StepOutputs(lark=outs[0], maj=outs[1], leader=outs[2],
+                           leader_full=outs[3], nrep=outs[4],
+                           creps=outs[-1], counts=counts,
+                           repmask=repmask, rleader=rleader)
 
     # ---- packed (B, W, P) word layout ----
     if backend not in PAC_BACKENDS:
@@ -643,11 +715,16 @@ def step_eval(spec: StepSpec, up, full, *, roster=None, recruit=None,
         outs = fused_step.fused_downtime_eval(
             up, full, rf=spec.rf, n_real=spec.n_real, block_t=bt,
             block_p=bp, interpret=interpret, roster=rost,
-            recruit=recruit, active=active)
-        counts = outs[6][:, :spec.n_real] if recruit is not None else None
+            recruit=recruit, active=active, want_repmask=want_rm,
+            want_rleader=want_rl)
+        repmask, rleader = _take_extras(outs, want_rm, want_rl)
+        ncr = 6 + int(want_rm) + int(want_rl)
+        counts = outs[ncr][:, :spec.n_real] if recruit is not None \
+            else None
         return StepOutputs(lark=outs[0], maj=outs[1], leader=outs[2],
                            leader_full=outs[3], nrep=outs[4],
-                           creps=outs[5], counts=counts)
+                           creps=outs[ncr - 1], counts=counts,
+                           repmask=repmask, rleader=rleader)
 
     xp = np if backend == "numpy" else jnp
     u, f = _packed_planes(up, xp), _packed_planes(full, xp)
@@ -664,11 +741,14 @@ def step_eval(spec: StepSpec, up, full, *, roster=None, recruit=None,
                            creps=xp.stack(creps, axis=1), counts=counts)
     rost = None if roster is None else \
         [roster[..., j] for j in range(spec.rf)]
-    lark, qmaj, leader, lfull, nrep, creps = bitpack.downtime_eval_packed(
-        u, f, rf=spec.rf, n_real=spec.n_real, roster=rost, xp=xp)
-    return StepOutputs(lark=lark, maj=qmaj, leader=leader,
-                       leader_full=lfull, nrep=nrep,
-                       creps=xp.stack(creps, axis=1), counts=counts)
+    outs = bitpack.downtime_eval_packed(
+        u, f, rf=spec.rf, n_real=spec.n_real, roster=rost,
+        want_repmask=want_rm, want_rleader=want_rl, xp=xp)
+    repmask, rleader = _take_extras(outs, want_rm, want_rl)
+    return StepOutputs(lark=outs[0], maj=outs[1], leader=outs[2],
+                       leader_full=outs[3], nrep=outs[4],
+                       creps=xp.stack(outs[-1], axis=1), counts=counts,
+                       repmask=repmask, rleader=rleader)
 
 
 # ---------------------------------------------------------------------------

@@ -84,13 +84,16 @@ def pac_eval(up_succ, full_succ, *, rf: int, voters: int, n_real: int,
     return lark, maj, creps
 
 
-def _downtime_kernel(up_ref, full_ref, valid_ref, lark_ref, qmaj_ref,
-                     leader_ref, lfull_ref, nrep_ref, creps_ref, *,
-                     rf: int, n_real: int):
+def _downtime_kernel(up_ref, full_ref, valid_ref, *out_refs,
+                     rf: int, n_real: int, want_repmask: bool = False):
     """PAC + quorum-log replica set + acting leader for one (bp, n) block —
     the §6 downtime engine's per-step evaluation (downtime_eval_rank_np is
     the contract; everything is integer/boolean VPU work, so outputs are
-    bit-identical to the numpy and jnp implementations)."""
+    bit-identical to the numpy and jnp implementations).  want_repmask
+    adds the Hermes membership bitmask (bit j = first-rf lane j up) as an
+    extra int32 row output between nrep and creps."""
+    lark_ref, qmaj_ref, leader_ref, lfull_ref, nrep_ref = out_refs[:5]
+    creps_ref = out_refs[-1]
     up = up_ref[...].astype(jnp.int32)            # (bp, n)
     full = full_ref[...].astype(jnp.int32)
     valid = valid_ref[...].astype(jnp.int32)
@@ -114,19 +117,39 @@ def _downtime_kernel(up_ref, full_ref, valid_ref, lark_ref, qmaj_ref,
     lfull_ref[...] = (jnp.sum(
         jnp.where(lanes == leader[:, None], full * up, 0), axis=1) > 0)
 
+    if want_repmask:
+        # the shift is clamped so the dead branch of the where never
+        # shifts past the int32 width (rf <= 30 by StepSpec validation)
+        shift = jnp.minimum(lanes, rf)
+        out_refs[5][...] = jnp.sum(
+            jnp.where(lanes < rf, up << shift, 0), axis=1).astype(jnp.int32)
+
     rank = jnp.cumsum(up, axis=1)
     creps_ref[...] = (up > 0) & (rank <= rf)
 
 
 def _downtime_roster_kernel(up_ref, full_ref, valid_ref, roster_ref,
-                            lark_ref, qmaj_ref, leader_ref, lfull_ref,
-                            nrep_ref, creps_ref, *, rf: int, n_real: int):
+                            *out_refs, rf: int, n_real: int,
+                            want_repmask: bool = False,
+                            want_rleader: bool = False):
     """Roster-aware variant of _downtime_kernel for the §6 reconfiguring
     quorum-log baseline: the replica set is the given per-row roster of
     succession ranks rather than the implicit first rf lanes.  The gather
     up[roster[j]] is a one-hot compare-and-sum per roster slot (rf is
     small and static), so the kernel stays pure VPU integer work and
-    bit-identical to the numpy/jnp take_along_axis implementations."""
+    bit-identical to the numpy/jnp take_along_axis implementations.
+    want_repmask / want_rleader add the protocol-zoo extras (Hermes
+    first-rf membership bitmask; Spinnaker electable leader = minimum up
+    roster rank, n_real sentinel) as int32 rows between nrep and creps."""
+    lark_ref, qmaj_ref, leader_ref, lfull_ref, nrep_ref = out_refs[:5]
+    creps_ref = out_refs[-1]
+    k = 5
+    repmask_ref = rleader_ref = None
+    if want_repmask:
+        repmask_ref = out_refs[k]
+        k += 1
+    if want_rleader:
+        rleader_ref = out_refs[k]
     up = up_ref[...].astype(jnp.int32)            # (bp, n)
     full = full_ref[...].astype(jnp.int32)
     valid = valid_ref[...].astype(jnp.int32)
@@ -143,19 +166,32 @@ def _downtime_roster_kernel(up_ref, full_ref, valid_ref, roster_ref,
     lark_ref[...] = ((majority * any_roster * full_up)[:, 0] > 0)
 
     # replica-set up-count over the carried roster ranks (only the first
-    # rf roster columns are real; the rest is lane padding, never read)
+    # rf roster columns are real; the rest is lane padding, never read) —
+    # the same one-hot pass also elects the minimum up roster rank
     nrep = jnp.zeros(up.shape[:1], dtype=jnp.int32)
+    rlead = jnp.full(up.shape[:1], n_real, dtype=jnp.int32)
     for j in range(rf):
         member = roster[:, j:j + 1]               # (bp, 1)
-        nrep = nrep + jnp.sum(jnp.where(lanes == member, up, 0), axis=1)
+        mem_up = jnp.sum(jnp.where(lanes == member, up, 0), axis=1)
+        nrep = nrep + mem_up
+        if want_rleader:
+            rlead = jnp.minimum(rlead, jnp.where(mem_up > 0, member[:, 0],
+                                                 n_real))
     qmaj_ref[...] = (2 * nrep > rf)
     nrep_ref[...] = nrep
+    if want_rleader:
+        rleader_ref[...] = rlead.astype(jnp.int32)
 
     leader = jnp.min(jnp.where(up > 0, lanes, up.shape[1]), axis=1)
     leader = jnp.minimum(leader, n_real).astype(jnp.int32)
     leader_ref[...] = leader
     lfull_ref[...] = (jnp.sum(
         jnp.where(lanes == leader[:, None], full * up, 0), axis=1) > 0)
+
+    if want_repmask:
+        shift = jnp.minimum(lanes, rf)
+        repmask_ref[...] = jnp.sum(
+            jnp.where(lanes < rf, up << shift, 0), axis=1).astype(jnp.int32)
 
     rank = jnp.cumsum(up, axis=1)
     creps_ref[...] = (up > 0) & (rank <= rf)
@@ -314,13 +350,22 @@ def latency_charge(dirty, decay, avail, qok, rem, dt, lamw, kf, *,
 
 def downtime_eval(up_succ, full_succ, *, rf: int, n_real: int,
                   block_p: int = 256, interpret: bool = False,
-                  roster=None):
+                  roster=None, want_repmask: bool = False,
+                  want_rleader: bool = False):
     """up_succ/full_succ: (P, n_pad) bool.  Returns (lark, qmaj, leader,
-    leader_full, nrep, creps) — see pac_np.downtime_eval_rank_np.
+    leader_full, nrep, *extras, creps) — see pac_np.downtime_eval_rank_np.
 
     roster (P, rf_pad) int32, optional: per-row replica-set ranks for the
     reconfiguring baseline (columns >= rf are lane padding).  qmaj/nrep
-    are then evaluated over those ranks instead of the first rf lanes."""
+    are then evaluated over those ranks instead of the first rf lanes.
+
+    want_repmask / want_rleader add the protocol-zoo int32 row outputs
+    (Hermes membership bitmask; Spinnaker electable roster leader —
+    requires roster) between nrep and creps, matching the numpy/jnp
+    contracts bit-for-bit."""
+    if want_rleader and roster is None:
+        raise ValueError("rleader needs a roster (it elects among "
+                         "roster members)")
     P, n_pad = up_succ.shape
     block_p = min(block_p, P)
     if P % block_p:
@@ -336,26 +381,32 @@ def downtime_eval(up_succ, full_succ, *, rf: int, n_real: int,
                 pl.BlockSpec((block_p, n_pad), lambda i: (0, 0))]
     operands = [up_succ, full_succ, valid]
     if roster is None:
-        kernel = functools.partial(_downtime_kernel, rf=rf, n_real=n_real)
+        kernel = functools.partial(_downtime_kernel, rf=rf, n_real=n_real,
+                                   want_repmask=want_repmask)
     else:
         kernel = functools.partial(_downtime_roster_kernel, rf=rf,
-                                   n_real=n_real)
+                                   n_real=n_real,
+                                   want_repmask=want_repmask,
+                                   want_rleader=want_rleader)
         in_specs.append(pl.BlockSpec((block_p, roster.shape[1]),
                                      lambda i: (i, 0)))
         operands.append(roster)
+    n_extra = int(want_repmask) + int(want_rleader and roster is not None)
+    out_specs = [row_spec] * (5 + n_extra) + [tile_spec]
+    out_shape = [
+        jax.ShapeDtypeStruct((P,), jnp.bool_),
+        jax.ShapeDtypeStruct((P,), jnp.bool_),
+        jax.ShapeDtypeStruct((P,), jnp.int32),
+        jax.ShapeDtypeStruct((P,), jnp.bool_),
+        jax.ShapeDtypeStruct((P,), jnp.int32),
+    ] + [jax.ShapeDtypeStruct((P,), jnp.int32)] * n_extra + [
+        jax.ShapeDtypeStruct((P, n_pad), jnp.bool_),
+    ]
     return pl.pallas_call(
         kernel,
         grid=(P // block_p,),
         in_specs=in_specs,
-        out_specs=[row_spec, row_spec, row_spec, row_spec, row_spec,
-                   tile_spec],
-        out_shape=[
-            jax.ShapeDtypeStruct((P,), jnp.bool_),
-            jax.ShapeDtypeStruct((P,), jnp.bool_),
-            jax.ShapeDtypeStruct((P,), jnp.int32),
-            jax.ShapeDtypeStruct((P,), jnp.bool_),
-            jax.ShapeDtypeStruct((P,), jnp.int32),
-            jax.ShapeDtypeStruct((P, n_pad), jnp.bool_),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(*operands)

@@ -33,7 +33,8 @@ def pac_eval_rank_np(up_succ, full_succ, *, rf: int, voters: int,
 
 
 def downtime_eval_rank_np(up_succ, full_succ, *, rf: int, n_real: int,
-                          roster=None):
+                          roster=None, want_repmask: bool = False,
+                          want_rleader: bool = False):
     """Per-step protocol evaluation for the downtime engine (§6).
 
     Same (R, n_pad) rank-space tiles as pac_eval_rank_np.  Returns
@@ -54,6 +55,16 @@ def downtime_eval_rank_np(up_succ, full_succ, *, rf: int, n_real: int,
     of the implicit first-rf lanes (roster=None is exactly the static
     baseline: a roster of [0, ..., rf-1] gives identical outputs).  All
     other outputs are roster-independent.
+
+    The protocol-zoo engines request extra outputs, inserted *before*
+    creps (so creps stays last — the contract _initial_full_state keys
+    on):
+      want_repmask  repmask (R,) int32, bit j set iff the first-rf lane j
+                    is up — the Hermes engine's membership view (requires
+                    rf <= 30 so the mask fits a non-negative int32)
+      want_rleader  rleader (R,) int32, the minimum succession rank among
+                    *up roster members* (n_real when none is up) — the
+                    Spinnaker engine's electable leader; requires roster
     """
     up = np.asarray(up_succ, dtype=bool)
     full = np.asarray(full_succ, dtype=bool)
@@ -79,7 +90,21 @@ def downtime_eval_rank_np(up_succ, full_succ, *, rf: int, n_real: int,
     leader = np.minimum(leader, np.int32(n_real))
     leader_full = ((full & up) & (lanes[None, :] == leader[:, None])) \
         .any(axis=1)
-    return lark, qmaj, leader, leader_full, nrep, creps
+    extras = ()
+    if want_repmask:
+        bits = np.int32(1) << np.arange(rf, dtype=np.int32)
+        repmask = (up[:, :rf].astype(np.int32) * bits[None, :]) \
+            .sum(axis=1, dtype=np.int32)
+        extras = extras + (repmask,)
+    if want_rleader:
+        if roster is None:
+            raise ValueError("rleader needs a roster (it elects among "
+                             "roster members)")
+        rup = np.take_along_axis(up, roster, axis=1)
+        rleader = np.where(rup, roster.astype(np.int32),
+                           np.int32(n_real)).min(axis=1).astype(np.int32)
+        extras = extras + (rleader,)
+    return (lark, qmaj, leader, leader_full, nrep) + extras + (creps,)
 
 
 def rebuild_node_counts_np(recruit, active, *, n_real: int):

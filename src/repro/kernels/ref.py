@@ -201,13 +201,16 @@ def pac_eval_rank_ref(up_succ, full_succ, *, rf: int, voters: int,
 
 
 def downtime_eval_rank_ref(up_succ, full_succ, *, rf: int, n_real: int,
-                           roster=None):
+                           roster=None, want_repmask: bool = False,
+                           want_rleader: bool = False):
     """Pure-jnp oracle of kernels.pac_np.downtime_eval_rank_np (§6 downtime
     engine per-step evaluation) — see that function for the contract,
     including the optional (R, rf) `roster` of replica-set ranks for the
-    reconfiguring baseline.  All outputs are comparisons/cumsums over the
-    same masked tiles, so the two implementations (and the Pallas kernel)
-    are bit-identical."""
+    reconfiguring baseline and the protocol-zoo extras (want_repmask →
+    Hermes membership bitmask, want_rleader → Spinnaker electable-leader
+    rank; both inserted before creps).  All outputs are comparisons/
+    cumsums over the same masked tiles, so the two implementations (and
+    the Pallas kernel) are bit-identical."""
     n_pad = up_succ.shape[1]
     valid = (jnp.arange(n_pad) < n_real)[None, :]
     up = up_succ & valid
@@ -226,7 +229,22 @@ def downtime_eval_rank_ref(up_succ, full_succ, *, rf: int, n_real: int,
     leader = jnp.minimum(leader, jnp.int32(n_real))
     leader_full = jnp.any((full & up) & (lanes[None, :] == leader[:, None]),
                           axis=1)
-    return lark, qmaj, leader, leader_full, nrep, creps
+    extras = ()
+    if want_repmask:
+        bits = jnp.int32(1) << jnp.arange(rf, dtype=jnp.int32)
+        repmask = jnp.sum(up[:, :rf].astype(jnp.int32) * bits[None, :],
+                          axis=1).astype(jnp.int32)
+        extras = extras + (repmask,)
+    if want_rleader:
+        if roster is None:
+            raise ValueError("rleader needs a roster (it elects among "
+                             "roster members)")
+        rup = jnp.take_along_axis(up, roster, axis=1)
+        rleader = jnp.min(jnp.where(rup, roster.astype(jnp.int32),
+                                    jnp.int32(n_real)), axis=1) \
+            .astype(jnp.int32)
+        extras = extras + (rleader,)
+    return (lark, qmaj, leader, leader_full, nrep) + extras + (creps,)
 
 
 def rebuild_node_counts_ref(recruit, active, *, n_real: int):

@@ -151,6 +151,72 @@ def test_latency_rows_keyed_by_workload_knobs():
         assert any("missing" in f for f in failures), knob
 
 
+def _eng_row(engine="hermes", scenario="iid", rf=2, p=1e-3, pause=0.3,
+             ci=1e-3, lease=40, vc=0, model="reconfig"):
+    kind = "downtime_engine" if scenario == "iid" \
+        else "downtime_engine_scenario"
+    return {"kind": kind, "engine": engine, "scenario": scenario,
+            "rf": rf, "p": p, "pause": pause, "ci_pause": ci,
+            "lease_ticks": lease, "view_change_ticks": vc,
+            "rebuild_model": model}
+
+
+def test_engine_rows_keyed_by_engine_name():
+    """A hermes row and a spinnaker row at the same grid point are
+    different measurements — without the engine in the key, either would
+    silently gate against the other's pause column."""
+    base = {"rows": [_eng_row(engine="hermes", pause=0.3),
+                     _eng_row(engine="spinnaker", pause=0.9, vc=200)]}
+    new = {"rows": [_eng_row(engine="hermes", pause=0.3),
+                    _eng_row(engine="spinnaker", pause=0.9, vc=200)]}
+    failures, notes, checked, _ = check_regression.compare(new, base, 2.0)
+    assert not failures and checked == 2
+    # swap the two engines' pauses: both rows must now fail on "pause"
+    swapped = {"rows": [_eng_row(engine="hermes", pause=0.9),
+                        _eng_row(engine="spinnaker", pause=0.3, vc=200)]}
+    failures = check_regression.compare(swapped, base, 2.0)[0]
+    assert len(failures) == 2 and all("pause" in f for f in failures)
+
+
+def test_engine_rows_keyed_by_zoo_knobs():
+    # a different lease / view-change window is a different row family
+    base = {"rows": [_eng_row(lease=40)]}
+    new = {"rows": [_eng_row(lease=80, pause=9.9)]}
+    failures, notes, checked, _ = check_regression.compare(new, base, 2.0)
+    assert checked == 0
+    assert any("new row" in s for s in notes)
+    assert any("missing" in f for f in failures)
+
+
+def test_engine_rows_gate_pause_not_the_quorum_columns():
+    assert check_regression.row_cols(_eng_row()) == (("pause", "ci_pause"),)
+    assert check_regression.row_cols(_eng_row(scenario="rolling-restart")) \
+        == (("pause", "ci_pause"),)
+    # the broader downtime family still gates the lark/quorum pair
+    assert check_regression.row_cols(_dt_row()) == \
+        (("pause_lark", "ci_pause_lark"),
+         ("pause_quorum", "ci_pause_quorum"))
+
+
+def test_loader_rejects_missing_or_unknown_engine(tmp_path):
+    import json
+    import pytest
+    missing = tmp_path / "missing.json"
+    row = _eng_row()
+    del row["engine"]
+    missing.write_text(json.dumps({"rows": [row]}))
+    with pytest.raises(ValueError, match="without an 'engine' field"):
+        check_regression.load_rows(str(missing))
+    unknown = tmp_path / "unknown.json"
+    unknown.write_text(json.dumps({"rows": [_eng_row(engine="raft")]}))
+    with pytest.raises(ValueError, match="unknown engine 'raft'"):
+        check_regression.load_rows(str(unknown))
+    ok = tmp_path / "ok.json"
+    ok.write_text(json.dumps({"rows": [_eng_row()]}))
+    assert check_regression.load_rows(str(ok))["rows"][0]["engine"] == \
+        "hermes"
+
+
 def test_compare_records_carry_status_and_z():
     base = {"rows": [_lat_row(lat=0.5, ci=1e-2), _row()]}
     new = {"rows": [_lat_row(lat=0.6, ci=1e-2), _row(),

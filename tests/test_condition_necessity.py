@@ -150,3 +150,72 @@ def test_example4_node_in_replica_set():
     assert example4() == []
     bad = example4(disable=("NodeInReplicaSet",))
     assert bad
+
+
+# ---------------------------------------------------------------------------
+# protocol-zoo engine predicates: same necessity discipline at the Monte
+# Carlo level.  The conformance matrix (tests/test_conformance.py) proves
+# the engines are bit-identical across backends — it cannot prove a
+# transition predicate is load-bearing, because a dead disjunct is
+# identically dead everywhere.  Flipping exactly one predicate off must
+# move at least one gated output at smoke scale.
+# ---------------------------------------------------------------------------
+
+_ZOO_KW = dict(n=13, partitions=32, rf=3, p=5e-3, trials=3,
+               max_ticks=4_000, min_ticks=10**9, chunk_steps=32,
+               max_steps=400, seed=7, backend="numpy",
+               rebuild_model="reconfig", lease_ticks=40,
+               view_change_ticks=500)
+
+
+def _zoo_run(disable=()):
+    from repro.core.downtime_batched import (ENGINES,
+                                             simulate_downtime_batched)
+    return simulate_downtime_batched(engines=ENGINES,
+                                     _disable_predicates=disable, **_ZOO_KW)
+
+
+def _zoo_outputs(r):
+    return {
+        "pause_lark": r.pause_lark, "pause_quorum": r.pause_quorum,
+        "pause_hermes": r.pause_hermes,
+        "pause_spinnaker": r.pause_spinnaker,
+        "hermes_events": r.hermes_events,
+        "spinnaker_events": r.spinnaker_events,
+    }
+
+
+def test_disable_predicates_cover_every_zoo_transition():
+    from repro.core.downtime_batched import DISABLE_PREDICATES
+    assert set(DISABLE_PREDICATES) == {
+        "lease-expiry", "view-change-trigger", "roster-recruit"}
+
+
+@pytest.mark.parametrize("predicate", ["lease-expiry",
+                                       "view-change-trigger",
+                                       "roster-recruit"])
+def test_zoo_predicate_is_load_bearing(predicate):
+    base = _zoo_outputs(_zoo_run())
+    flipped = _zoo_outputs(_zoo_run(disable=(predicate,)))
+    assert flipped != base, (predicate, base)
+
+
+def test_lease_expiry_pins_hermes_not_the_others():
+    """The lease knob is hermes-local: disabling expiry freezes the
+    write-block window open (pause inflates), while every other engine's
+    outputs stay bitwise put — the knob can't leak across engines."""
+    base = _zoo_run()
+    flipped = _zoo_run(disable=("lease-expiry",))
+    assert flipped.pause_hermes > base.pause_hermes
+    assert flipped.pause_lark == base.pause_lark
+    assert flipped.pause_quorum == base.pause_quorum
+    assert flipped.pause_spinnaker == base.pause_spinnaker
+
+
+def test_view_change_trigger_pins_spinnaker_not_the_others():
+    base = _zoo_run()
+    flipped = _zoo_run(disable=("view-change-trigger",))
+    assert flipped.pause_spinnaker < base.pause_spinnaker
+    assert flipped.pause_lark == base.pause_lark
+    assert flipped.pause_quorum == base.pause_quorum
+    assert flipped.pause_hermes == base.pause_hermes

@@ -1,0 +1,241 @@
+"""The protocol-zoo conformance matrix, in one place.
+
+Every engine configuration below runs the same shared node trajectories
+through every backend x state-layout combination — {numpy, jnp,
+pallas-interpret} x {unpacked bool tiles, bit-packed uint32 words} — and
+a forced 8-device trials mesh, and every gated output (pause fractions,
+event counts, duration histograms, per-trial arrays, step trajectories)
+must be *bit-identical*, never approximately equal.  This consolidates
+the per-PR identity tests that used to be copy-pasted across
+test_downtime_batched.py / test_sharded.py / test_step_api.py; new
+engines join the zoo by adding a config here, not a new test file.
+
+The degenerate-limit pins are the second half of the contract: each zoo
+engine's knob at zero must collapse *exactly* onto the baseline it
+generalizes (Hermes lease_ticks=0 -> the zero-knob LARK trace;
+Spinnaker view_change_ticks=0 -> the PR-4 reconfig quorum baseline),
+because the engines consume no randomness beyond the shared
+_make_node_advance closure — the proof is arithmetic identity of the
+f32 accumulator expressions, and these tests pin it bitwise.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.downtime_batched import ENGINES, simulate_downtime_batched
+from repro.kernels.ops import PAC_BACKENDS
+
+_KW = dict(n=13, partitions=32, rf=2, p=5e-3, trials=3, max_ticks=4_000,
+           min_ticks=10**9, chunk_steps=64, max_steps=600, seed=11,
+           trajectory=True)
+
+#: engine-grid configurations; each runs the full backend x layout
+#: matrix.  The first three pin the pre-zoo engines (fixed model,
+#: reconfiguring baseline, the PR-5 skew + bandwidth-contention
+#: tentpole); the last two pin the zoo with its knobs live.
+CONFIGS = {
+    "fixed": {},
+    "reconfig": dict(rebuild_model="reconfig", rebuild_ticks_per_gib=64),
+    "skew-contended": dict(rebuild_model="reconfig",
+                           rebuild_ticks_per_gib=64, size_dist="zipf",
+                           size_skew=1.0, node_bandwidth_gibps=1.0),
+    "hermes-fixed": dict(engines=("lark", "quorum", "hermes"),
+                         lease_ticks=40),
+    "zoo-reconfig": dict(engines=ENGINES, rebuild_model="reconfig",
+                         rebuild_ticks_per_gib=64, lease_ticks=40,
+                         view_change_ticks=200),
+}
+
+
+def _fingerprint(r):
+    """Every gated output of a run, as comparable numpy values."""
+    fp = {
+        "pause_lark": r.pause_lark, "pause_quorum": r.pause_quorum,
+        "lark_events": r.lark_events, "quorum_events": r.quorum_events,
+        "hist_lark": r.hist_lark, "hist_quorum": r.hist_quorum,
+        "pause_lark_trials": r.pause_lark_trials,
+        "pause_quorum_trials": r.pause_quorum_trials,
+    }
+    for k, v in (r.trajectory or {}).items():
+        fp[f"traj:{k}"] = v
+    for engine in r.engines:
+        if engine in ("lark", "quorum"):
+            continue
+        s = r.engine_stats(engine)
+        fp[f"{engine}:pause"] = s["pause"]
+        fp[f"{engine}:events"] = s["events"]
+        fp[f"{engine}:hist"] = s["hist"]
+        fp[f"{engine}:pause_trials"] = s["pause_trials"]
+    return fp
+
+
+def _assert_identical(a, b, label):
+    fa, fb = _fingerprint(a), _fingerprint(b)
+    assert fa.keys() == fb.keys(), (label, set(fa) ^ set(fb))
+    for k in fa:
+        assert np.array_equal(np.asarray(fa[k]), np.asarray(fb[k])), \
+            (label, k)
+
+
+@pytest.mark.parametrize("config", list(CONFIGS))
+def test_backend_layout_matrix_bit_identical(config):
+    """numpy == jax == pallas-interpret, unpacked == packed, for every
+    engine configuration (pallas runs interpret mode on CPU)."""
+    kw = dict(_KW, **CONFIGS[config])
+    base = simulate_downtime_batched(backend=PAC_BACKENDS[0], **kw)
+    # trajectories really move, or the identity is vacuous
+    assert base.trajectory["paused_quorum"].max() > 0
+    for backend in PAC_BACKENDS:
+        for packed in (False, True):
+            if (backend, packed) == (PAC_BACKENDS[0], False):
+                continue
+            r = simulate_downtime_batched(backend=backend, packed=packed,
+                                          **kw)
+            _assert_identical(base, r, (config, backend, packed))
+
+
+@pytest.mark.parametrize("config", ["fixed", "zoo-reconfig"])
+def test_shard_map_path_identical_on_one_device(config):
+    kw = dict(_KW, **CONFIGS[config])
+    plain = simulate_downtime_batched(backend="jax", **kw)
+    mesh1 = simulate_downtime_batched(backend="jax", devices=1,
+                                      use_shard_map=True, **kw)
+    _assert_identical(plain, mesh1, config)
+
+
+@pytest.mark.slow
+def test_eight_device_matrix_bit_identical_to_single():
+    """devices {1, 8} leg of the matrix: pause fractions, histograms,
+    per-engine stats and trajectories byte-identical between --devices 1
+    and a forced 8-device mesh, for the fixed model, the reconfiguring
+    baseline, and the full four-engine zoo (whose hermes/spinnaker
+    leaves ride the sharded scan carry)."""
+    script = textwrap.dedent("""
+        import numpy as np
+        from repro.core.downtime_batched import (ENGINES,
+                                                 simulate_downtime_batched)
+        base_kw = dict(n=13, partitions=32, rf=2, p=5e-3, trials=8,
+                       max_ticks=4_000, min_ticks=10**9, chunk_steps=64,
+                       max_steps=600, seed=11, backend="jax",
+                       trajectory=True, pair_fail_prob=0.3,
+                       restart_period=900)
+        for model_kw in (dict(rebuild_model="fixed"),
+                         dict(rebuild_model="reconfig",
+                              rebuild_ticks_per_gib=64),
+                         dict(rebuild_model="reconfig",
+                              rebuild_ticks_per_gib=64, engines=ENGINES,
+                              lease_ticks=40, view_change_ticks=200)):
+            kw = dict(base_kw, **model_kw)
+            r1 = simulate_downtime_batched(devices=1, **kw)
+            for d in (4, 8):
+                rd = simulate_downtime_batched(devices=d, **kw)
+                for k in r1.trajectory:
+                    assert np.array_equal(r1.trajectory[k],
+                                          rd.trajectory[k]), (d, k)
+                assert r1.pause_lark == rd.pause_lark
+                assert r1.pause_quorum == rd.pause_quorum
+                assert np.array_equal(r1.hist_lark, rd.hist_lark)
+                assert np.array_equal(r1.hist_quorum, rd.hist_quorum)
+                assert r1.lark_events == rd.lark_events
+                assert r1.quorum_events == rd.quorum_events
+                for engine in r1.engines:
+                    if engine in ("lark", "quorum"):
+                        continue
+                    s1 = r1.engine_stats(engine)
+                    sd = rd.engine_stats(engine)
+                    assert s1["pause"] == sd["pause"], (d, engine)
+                    assert s1["events"] == sd["events"], (d, engine)
+                    assert np.array_equal(s1["hist"], sd["hist"]), \\
+                        (d, engine)
+                    assert np.array_equal(s1["pause_trials"],
+                                          sd["pause_trials"]), (d, engine)
+        print("OK")
+    """)
+    env = dict(os.environ,
+               JAX_PLATFORMS="cpu",
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=str(Path(__file__).resolve().parents[1] / "src"))
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr
+    assert "OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# degenerate limits: knob at zero == the baseline the engine generalizes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", PAC_BACKENDS)
+def test_hermes_lease_zero_pins_lark_exactly(backend):
+    """lease_ticks=0 (writes never block on suspicion) makes the Hermes
+    pause predicate ~lark: with dupres_ticks=0 its accounting is the
+    same f32 expression as LARK's, so every output is bitwise equal —
+    zero drift, not 2 sigma."""
+    kw = dict(_KW, backend=backend, dupres_ticks=0,
+              engines=("lark", "quorum", "hermes"), lease_ticks=0)
+    r = simulate_downtime_batched(**kw)
+    s = r.engine_stats("hermes")
+    assert s["pause"] == r.pause_lark
+    assert s["events"] == r.lark_events
+    assert np.array_equal(s["hist"], r.hist_lark)
+    assert np.array_equal(s["pause_trials"], r.pause_lark_trials)
+    assert np.array_equal(r.trajectory["paused_hermes"],
+                          r.trajectory["paused_lark"])
+
+
+@pytest.mark.parametrize("backend", PAC_BACKENDS)
+def test_spinnaker_vc_zero_pins_reconfig_quorum_exactly(backend):
+    """view_change_ticks=0 with unshared (infinite) bandwidth makes the
+    Spinnaker pause predicate ~qmaj | rebuilding — the PR-4 reconfig
+    quorum baseline, bit for bit."""
+    kw = dict(_KW, backend=backend, rebuild_model="reconfig",
+              rebuild_ticks_per_gib=64,
+              engines=("lark", "quorum", "spinnaker"),
+              view_change_ticks=0)
+    r = simulate_downtime_batched(**kw)
+    s = r.engine_stats("spinnaker")
+    assert s["pause"] == r.pause_quorum
+    assert s["events"] == r.quorum_events
+    assert np.array_equal(s["hist"], r.hist_quorum)
+    assert np.array_equal(s["pause_trials"], r.pause_quorum_trials)
+    assert np.array_equal(r.trajectory["paused_spinnaker"],
+                          r.trajectory["paused_quorum"])
+
+
+def test_zoo_engines_leave_base_outputs_untouched():
+    """Enabling the zoo must not perturb the lark/quorum outputs at all —
+    the committed BENCH_downtime*.json baselines regen byte-identical
+    whether or not --engines grows the row set."""
+    kw = dict(_KW, rebuild_model="reconfig", rebuild_ticks_per_gib=64)
+    base = simulate_downtime_batched(**kw)
+    zoo = simulate_downtime_batched(engines=ENGINES, lease_ticks=40,
+                                    view_change_ticks=200, **kw)
+    assert zoo.pause_lark == base.pause_lark
+    assert zoo.pause_quorum == base.pause_quorum
+    assert zoo.lark_events == base.lark_events
+    assert zoo.quorum_events == base.quorum_events
+    assert np.array_equal(zoo.hist_lark, base.hist_lark)
+    assert np.array_equal(zoo.hist_quorum, base.hist_quorum)
+    for k in base.trajectory:
+        assert np.array_equal(zoo.trajectory[k], base.trajectory[k]), k
+
+
+def test_zoo_knob_and_engine_validation():
+    with pytest.raises(ValueError, match="unknown engine"):
+        simulate_downtime_batched(engines=("lark", "raft"), **_KW)
+    with pytest.raises(ValueError, match="duplicate"):
+        simulate_downtime_batched(engines=("lark", "lark"), **_KW)
+    with pytest.raises(ValueError, match="lease_ticks"):
+        simulate_downtime_batched(lease_ticks=5, **_KW)
+    with pytest.raises(ValueError, match="view_change_ticks"):
+        simulate_downtime_batched(view_change_ticks=5, **_KW)
+    with pytest.raises(ValueError, match="reconfig"):
+        simulate_downtime_batched(engines=("lark", "quorum", "spinnaker"),
+                                  **_KW)
+    with pytest.raises(ValueError, match="disable predicates"):
+        simulate_downtime_batched(_disable_predicates=("bogus",), **_KW)

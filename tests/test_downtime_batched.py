@@ -98,35 +98,8 @@ def test_roster_aware_eval_backends_agree(rf, n_real, n_pad):
 # bit-identical seeded trajectories across backends and sharding
 # ---------------------------------------------------------------------------
 
-def test_trajectory_identical_across_backends():
-    results = {b: simulate_downtime_batched(backend=b, **_KW)
-               for b in PAC_BACKENDS}
-    base = results[PAC_BACKENDS[0]]
-    for b in PAC_BACKENDS[1:]:
-        r = results[b]
-        for k in base.trajectory:
-            assert np.array_equal(base.trajectory[k], r.trajectory[k]), \
-                (b, k)
-        assert r.pause_lark == base.pause_lark
-        assert r.pause_quorum == base.pause_quorum
-        assert np.array_equal(r.hist_lark, base.hist_lark)
-        assert np.array_equal(r.hist_quorum, base.hist_quorum)
-        assert r.lark_events == base.lark_events
-        assert r.quorum_events == base.quorum_events
-    # paused-partition counts really vary over time (the engine is live)
-    assert base.trajectory["paused_quorum"].max() > 0
-
-
-def test_shard_map_path_identical_on_one_device():
-    plain = simulate_downtime_batched(backend="jax", **_KW)
-    mesh1 = simulate_downtime_batched(backend="jax", devices=1,
-                                      use_shard_map=True, **_KW)
-    for k in plain.trajectory:
-        assert np.array_equal(plain.trajectory[k], mesh1.trajectory[k]), k
-    assert plain.pause_lark == mesh1.pause_lark
-    assert plain.pause_quorum == mesh1.pause_quorum
-    assert np.array_equal(plain.hist_lark, mesh1.hist_lark)
-    assert np.array_equal(plain.pause_lark_trials, mesh1.pause_lark_trials)
+# (cross-backend / packed-layout / shard-map identity now lives in the
+# consolidated matrix: tests/test_conformance.py)
 
 
 def test_sharding_and_knob_validation():
@@ -305,35 +278,6 @@ def test_partition_sizes_are_deterministic_and_bounded():
     assert t.dtype == np.int32
     assert ((t >= 100) & (t < 200)).all()
     assert (_partition_rebuild_ticks(11, 256, 0) == 0).all()
-
-
-def test_reconfig_trajectory_identical_across_backends():
-    kw = dict(_KW, rebuild_model="reconfig", rebuild_ticks_per_gib=64)
-    results = {b: simulate_downtime_batched(backend=b, **kw)
-               for b in PAC_BACKENDS}
-    base = results[PAC_BACKENDS[0]]
-    for b in PAC_BACKENDS[1:]:
-        r = results[b]
-        for k in base.trajectory:
-            assert np.array_equal(base.trajectory[k], r.trajectory[k]), \
-                (b, k)
-        assert r.pause_lark == base.pause_lark
-        assert r.pause_quorum == base.pause_quorum
-        assert np.array_equal(r.hist_quorum, base.hist_quorum)
-        assert r.quorum_events == base.quorum_events
-    assert base.rebuild_model == "reconfig"
-    assert base.rebuild_ticks_per_gib == 64
-
-
-def test_reconfig_shard_map_path_identical_on_one_device():
-    kw = dict(_KW, rebuild_model="reconfig")
-    plain = simulate_downtime_batched(backend="jax", **kw)
-    mesh1 = simulate_downtime_batched(backend="jax", devices=1,
-                                      use_shard_map=True, **kw)
-    for k in plain.trajectory:
-        assert np.array_equal(plain.trajectory[k], mesh1.trajectory[k]), k
-    assert plain.pause_quorum == mesh1.pause_quorum
-    assert np.array_equal(plain.hist_quorum, mesh1.hist_quorum)
 
 
 def test_fixed_model_is_the_default_and_unchanged():
@@ -572,26 +516,6 @@ def test_rebuild_node_counts_never_crosses_trials():
 
 _SKEW_KW = dict(_KW, rebuild_model="reconfig", rebuild_ticks_per_gib=64,
                 size_dist="zipf", size_skew=1.2, node_bandwidth_gibps=1.0)
-
-
-def test_skewed_contended_trajectory_identical_across_backends():
-    """The full tentpole configuration — zipf sizes + per-node bandwidth
-    sharing — stays bit-identical across numpy / jax / pallas-interpret
-    (the contention rate math is pure int32 fixed-point)."""
-    results = {b: simulate_downtime_batched(backend=b, **_SKEW_KW)
-               for b in PAC_BACKENDS}
-    base = results[PAC_BACKENDS[0]]
-    for b in PAC_BACKENDS[1:]:
-        r = results[b]
-        for k in base.trajectory:
-            assert np.array_equal(base.trajectory[k], r.trajectory[k]), \
-                (b, k)
-        assert r.pause_lark == base.pause_lark
-        assert r.pause_quorum == base.pause_quorum
-        assert np.array_equal(r.hist_quorum, base.hist_quorum)
-        assert r.quorum_events == base.quorum_events
-    assert base.size_dist == "zipf"
-    assert base.node_bandwidth_gibps == 1.0
 
 
 def test_infinite_bandwidth_is_the_unshared_model_bit_for_bit():

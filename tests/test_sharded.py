@@ -178,47 +178,8 @@ def test_eight_device_fused_packed_run_bit_identical():
     assert "OK" in out.stdout
 
 
-@pytest.mark.slow
-def test_eight_device_downtime_run_bit_identical_to_single():
-    """The §6 engine under the same acceptance criterion, for BOTH
-    quorum-log rebuild models: pause fractions, histograms, and
-    trajectories must be byte-identical between --devices 1 and a forced
-    8-device mesh (the reconfig model carries an extra per-partition
-    roster through the sharded scan)."""
-    script = textwrap.dedent("""
-        import numpy as np
-        from repro.core.downtime_batched import simulate_downtime_batched
-        base_kw = dict(n=13, partitions=32, rf=2, p=5e-3, trials=8,
-                       max_ticks=4_000, min_ticks=10**9, chunk_steps=64,
-                       max_steps=600, seed=11, backend="jax",
-                       trajectory=True, pair_fail_prob=0.3,
-                       restart_period=900)
-        for model_kw in (dict(rebuild_model="fixed"),
-                         dict(rebuild_model="reconfig",
-                              rebuild_ticks_per_gib=64)):
-            kw = dict(base_kw, **model_kw)
-            r1 = simulate_downtime_batched(devices=1, **kw)
-            for d in (4, 8):
-                rd = simulate_downtime_batched(devices=d, **kw)
-                for k in r1.trajectory:
-                    assert np.array_equal(r1.trajectory[k],
-                                          rd.trajectory[k]), (d, k)
-                assert r1.pause_lark == rd.pause_lark
-                assert r1.pause_quorum == rd.pause_quorum
-                assert np.array_equal(r1.hist_lark, rd.hist_lark)
-                assert np.array_equal(r1.hist_quorum, rd.hist_quorum)
-                assert r1.lark_events == rd.lark_events
-                assert r1.quorum_events == rd.quorum_events
-        print("OK")
-    """)
-    env = dict(os.environ,
-               JAX_PLATFORMS="cpu",
-               XLA_FLAGS="--xla_force_host_platform_device_count=8",
-               PYTHONPATH=str(Path(__file__).resolve().parents[1] / "src"))
-    out = subprocess.run([sys.executable, "-c", script], env=env,
-                         capture_output=True, text=True, timeout=600)
-    assert out.returncode == 0, out.stderr
-    assert "OK" in out.stdout
+# (the 8-device downtime/zoo matrix now lives in the consolidated
+# tests/test_conformance.py)
 
 
 @pytest.mark.slow

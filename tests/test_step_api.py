@@ -232,16 +232,8 @@ def test_engine_accepts_params_identical_to_loose_kwargs():
     assert np.array_equal(legacy.hist_quorum, via_params.hist_quorum)
 
 
-@pytest.mark.parametrize("backend", ["numpy", "jax"])
-def test_engine_packed_layout_is_bit_identical(backend):
-    plain = simulate_downtime_batched(backend=backend, **_KW)
-    packed = simulate_downtime_batched(backend=backend, packed=True, **_KW)
-    for k in plain.trajectory:
-        assert np.array_equal(plain.trajectory[k], packed.trajectory[k]), k
-    assert plain.pause_lark == packed.pause_lark
-    assert plain.pause_quorum == packed.pause_quorum
-    assert np.array_equal(plain.hist_lark, packed.hist_lark)
-    assert np.array_equal(plain.hist_quorum, packed.hist_quorum)
+# (packed-vs-unpacked engine identity now lives in the consolidated
+# matrix: tests/test_conformance.py)
 
 
 # ---------------------------------------------------------------------------
