@@ -1,9 +1,19 @@
 """Paper §5.1 / Figure 6 / Table 2: availability vs node-failure probability,
 and (--metric downtime) the §6 commit-pause comparison.
 
-Reduced grid by default (CPU budget); --full sweeps the paper's p range with
-n=155, P=4096 and CI early-stopping; --smoke shrinks everything for the CI
-pallas-interpret lane.  Emits CSV rows:
+This is a thin CLI over the declarative experiment layer
+(src/repro/experiments/): every flag below maps 1:1 onto an
+``ExperimentSpec`` field, the validation lives in the spec (gating) and
+``DowntimeParams`` (values), and the sweep itself runs through
+``ExperimentRunner``.  The same run is therefore expressible three
+equivalent ways — flags, ``--config benchmarks/configs/<name>.toml``, or
+``ExperimentSpec.create(...)`` — and all three produce byte-identical
+rows (pinned per committed baseline by tests/test_experiments.py and
+CI's reproducibility lane).
+
+Reduced grid by default (CPU budget); --full sweeps the paper's p range
+with n=155, P=4096 and CI early-stopping; --smoke shrinks everything for
+the CI pallas-interpret lane.  Emits CSV rows:
   availability,<rf>,<p>,u_lark,u_maj,ratio,analytic_ratio,ticks
 
 --metric downtime swaps the instantaneous engine for the batched
@@ -23,8 +33,7 @@ lark/quorum pair every downtime row carries, "hermes" (broadcast
 replication under membership leases, --lease-ticks write-block window)
 and "spinnaker" (Paxos with reconfiguration, --view-change-ticks
 log-reconciliation pause on leader loss; reconfig model only) each add
-one "downtime_engine" row per grid point, keyed by engine name.  See
-docs/BENCHMARKS.md for the full CLI surface.
+one "downtime_engine" row per grid point, keyed by engine name.
 
 --metric latency layers the client-traffic request engine
 (core/client_latency.py) over the same trajectories: zipf key popularity
@@ -58,380 +67,72 @@ rows ('all' = every registered name; repeatable / comma-separated).
 --scenarios is the legacy alias for --scenario all; --scenarios-only skips
 the i.i.d. grid.  Scenario rows always use the batched engine ("event"
 maps to "numpy" — the scalar engine has no correlated/scheduled failure
-model).  --json PATH additionally dumps all rows with CI half-widths, the
-schema benchmarks/check_regression.py consumes.
+model).
+
+Artifacts: --json PATH dumps all rows with CI half-widths plus a
+provenance-stamped meta (schema version, the full canonical spec, spec
+content hash, config path + file hash, git SHA, seed/RNG salts,
+backend/device geometry, wall-clock) — the schema
+benchmarks/check_regression.py consumes.  --events PATH streams one
+JSONL progress record per row with real wall-clock deltas, the input to
+tools/perf_baseline.py / tools/perf_delta.py.  --config PATH replaces
+the sweep flags with a committed experiment config (TOML or JSON; see
+benchmarks/configs/ and docs/BENCHMARKS.md) and is mutually exclusive
+with them — only --json/--events/--seed-independent output flags ride
+along.
 """
 from __future__ import annotations
 
 import argparse
-import json
-import math
 import sys
 
-from repro.core.analytical import (improvement_factor, lark_unavailability,
-                                   node_unavailability)
-from repro.core.availability import simulate_availability
-from repro.core.availability_batched import simulate_availability_batched
-from repro.core.client_latency import simulate_client_latency
-from repro.core.downtime_batched import (ENGINES, SIZE_DISTS, DowntimeParams,
-                                         simulate_downtime_batched)
-from repro.core.scenarios import get_scenario, scenario_names
+from repro.core.downtime_batched import ENGINES, SIZE_DISTS
+from repro.experiments.runner import (FULL_GRID,  # noqa: F401 — re-exports
+                                      REDUCED_GRID, SMOKE_GRID,
+                                      ExperimentRunner, _autotune_row,
+                                      _batched_backend, _downtime_engine_rows,
+                                      _downtime_row, _grid_scale, _iid_grid,
+                                      _json_safe, _latency_row, _run_scale,
+                                      run, run_downtime,
+                                      run_downtime_scenarios, run_latency,
+                                      run_latency_scenarios, run_scenarios)
+from repro.experiments.spec import ExperimentSpec, SpecError
 
-REDUCED_GRID = [(2, 1e-3), (2, 3e-3), (2, 1e-2), (3, 1e-2), (4, 3e-2)]
-FULL_GRID = [(2, 1e-4), (2, 1e-3), (2, 1e-2),
-             (3, 2e-4), (3, 1e-3), (3, 1e-2),
-             (4, 5e-4), (4, 1e-3), (4, 1e-2)]
-SMOKE_GRID = [(2, 3e-3), (3, 1e-2)]
-
-
-def _grid_scale(full: bool, smoke: bool = False):
-    """(n, partitions) — one place, so i.i.d. and scenario rows always run
-    at the same cluster scale and their u columns stay comparable."""
-    if smoke:
-        return (31, 128)
-    return (155, 4096) if full else (63, 512)
-
-
-def _run_scale(full: bool, smoke: bool, *, scenario: bool):
-    """(n, partitions, max_ticks, min_ticks) — single source for both
-    metrics, so availability and downtime rows (and their committed
-    BENCH_*.json baselines) always use the same tick budgets."""
-    n, parts = _grid_scale(full, smoke)
-    if scenario:
-        max_ticks = 30_000 if smoke else (1_000_000 if full else 120_000)
-        min_ticks = 8_000 if smoke else 20_000
-    else:
-        max_ticks = 40_000 if smoke else (3_000_000 if full else 250_000)
-        min_ticks = 10_000 if smoke else 30_000
-    return n, parts, max_ticks, min_ticks
+#: argparse dest → ExperimentSpec field for every sweep flag (the 1:1
+#: flag/spec mapping; output flags --json/--events/--config are not
+#: spec fields and are absent on purpose)
+SPEC_FLAGS = {
+    "full": "full", "smoke": "smoke", "backend": "backend",
+    "metric": "metric", "trials": "trials", "devices": "devices",
+    "seed": "seed", "dupres_ticks": "dupres_ticks",
+    "rebuild_steps": "rebuild_steps", "rebuild_model": "rebuild_model",
+    "rebuild_ticks_per_gib": "rebuild_ticks_per_gib",
+    "size_dist": "size_dist", "size_skew": "size_skew",
+    "node_bandwidth_gibps": "node_bandwidth_gibps", "engines": "engines",
+    "lease_ticks": "lease_ticks", "view_change_ticks": "view_change_ticks",
+    "key_zipf": "key_zipf", "read_frac": "read_frac",
+    "requests_per_tick": "requests_per_tick", "slo_ticks": "slo_ticks",
+    "scenario": "scenarios", "scenarios": "scenarios",
+    "scenarios_only": "scenarios_only", "packed": "packed",
+    "autotune": "autotune",
+}
 
 
-def _iid_grid(full: bool, smoke: bool):
-    return SMOKE_GRID if smoke else (FULL_GRID if full else REDUCED_GRID)
-
-
-def _batched_backend(backend: str, devices: int):
-    """event rows reuse the numpy math, single-device; an explicit numpy
-    backend keeps its own devices so invalid combos still raise."""
-    return ("numpy", 1) if backend == "event" else (backend, devices)
-
-
-def _autotune_row(n: int, parts: int, trials: int, devices: int, *,
-                  metric: str = "availability", rf: int = 2,
-                  rebuild_model: str = "fixed", packed: bool = False):
-    """Race kernel block candidates on the per-device sweep tile shape,
-    timing the kernel the grid will actually run — at the grid's rf, not
-    a hardcoded rf=2/voters=3.  Unpacked: the 1-D block_p race over
-    pac_eval / downtime_eval (or its roster-carrying reconfig variant).
-    --packed: the 2-D (block_t x block_p) race over the fused step
-    megakernel of the same metric/model (the tagged cache keys guarantee
-    the two families can never return each other's entries).  Returns
-    (block_p, block_t, row); block_t is None for the unpacked race."""
-    voters = 2 * (rf - 1) + 1
-    # the latency layer rides on the downtime step — same kernels, same
-    # valid block choices, so it reuses the downtime race verbatim
-    if packed:
-        from repro.kernels.ops import autotune_fused_blocks
-        if metric in ("downtime", "latency"):
-            kernel = "fused_downtime_roster" if rebuild_model == "reconfig" \
-                else "fused_downtime"
-        else:
-            kernel = "fused_pac"
-        res = autotune_fused_blocks(trials // devices, parts, n, rf=rf,
-                                    voters=voters, n_real=n, kernel=kernel)
-        row = {"kind": "autotune", "block_p": res.block_p,
-               "block_t": res.block_t, "source": res.source,
-               "kernel": kernel, "rf": rf,
-               "timings_us": {f"{bt}x{bp}": v
-                              for (bt, bp), v in res.timings_us.items()}}
-        print(f"autotune,fused_blocks,0,choice={res.block_t}x{res.block_p};"
-              f"source={res.source};kernel={kernel};rf={rf};"
-              f"candidates={len(res.timings_us)}")
-        return res.block_p, res.block_t, row
-    from repro.kernels.ops import autotune_block_p
-    R = (trials // devices) * parts
-    if metric in ("downtime", "latency"):
-        kernel = "downtime_roster" if rebuild_model == "reconfig" \
-            else "downtime"
-    else:
-        kernel = "pac"
-    res = autotune_block_p(R, n, rf=rf, voters=voters, n_real=n,
-                           kernel=kernel)
-    row = {"kind": "autotune", "block_p": res.block_p, "source": res.source,
-           "kernel": kernel, "rf": rf,
-           "timings_us": {str(k): v for k, v in res.timings_us.items()}}
-    print(f"autotune,block_p,0,choice={res.block_p};source={res.source};"
-          f"kernel={kernel};rf={rf};candidates={len(res.timings_us)}")
-    return res.block_p, None, row
-
-
-def run(full: bool = False, seeds=(0,), backend: str = "event",
-        devices: int = 1, smoke: bool = False, pac_block_p=None,
-        packed: bool = False, block_t=None):
-    grid = _iid_grid(full, smoke)
-    n, parts, max_ticks, min_ticks = _run_scale(full, smoke, scenario=False)
-    rows = []
-    for rf, p in grid:
-        if backend == "event":
-            us_l, us_m, cis_l, cis_m = [], [], [], []
-            ticks = 0
-            for s in seeds:
-                r = simulate_availability(n=n, partitions=parts, rf=rf, p=p,
-                                          max_ticks=max_ticks,
-                                          min_ticks=min_ticks, seed=s)
-                us_l.append(r.u_lark)
-                us_m.append(r.u_maj)
-                cis_l.append(r.ci_lark)
-                cis_m.append(r.ci_maj)
-                ticks = r.ticks
-            N = len(seeds)
-            u_l = sum(us_l) / N
-            u_m = sum(us_m) / N
-            # half-width of the across-seed mean: independent runs, so
-            # se_mean = sqrt(sum se_i^2) / N
-            ci_l = math.sqrt(sum(c * c for c in cis_l)) / N
-            ci_m = math.sqrt(sum(c * c for c in cis_m)) / N
-        else:
-            r = simulate_availability_batched(
-                n=n, partitions=parts, rf=rf, p=p, trials=len(seeds),
-                max_ticks=max_ticks, min_ticks=min_ticks, seed=min(seeds),
-                backend=backend, devices=devices, pac_block_p=pac_block_p,
-                packed=packed, block_t=block_t)
-            u_l, u_m, ticks = r.u_lark, r.u_maj, r.ticks
-            ci_l, ci_m = r.ci_lark, r.ci_maj
-        f = rf - 1
-        rows.append({
-            "kind": "iid", "rf": rf, "p": p, "u_lark": u_l, "u_maj": u_m,
-            "ci_lark": ci_l, "ci_maj": ci_m,
-            "ratio": u_m / u_l if u_l else float("inf"),
-            "analytic_ratio": improvement_factor(f),
-            "analytic_u_lark": lark_unavailability(node_unavailability(p), f),
-            "ticks": ticks,
-        })
-    return rows
-
-
-def run_scenarios(names, full: bool = False, trials: int = 4,
-                  backend: str = "jax", seed: int = 0, devices: int = 1,
-                  smoke: bool = False, pac_block_p=None,
-                  packed: bool = False, block_t=None):
-    backend, devices = _batched_backend(backend, devices)
-    n, parts, max_ticks, min_ticks = _run_scale(full, smoke, scenario=True)
-    rows = []
-    for name in names:
-        sc = get_scenario(name)
-        for rf, p in sc.grid:
-            r = simulate_availability_batched(
-                n=n, partitions=parts, rf=rf, p=p, trials=trials,
-                max_ticks=max_ticks, min_ticks=min_ticks, seed=seed,
-                backend=backend, devices=devices, pac_block_p=pac_block_p,
-                packed=packed, block_t=block_t,
-                **sc.kwargs(n=n, rf=rf, p=p))
-            rows.append({
-                "kind": "scenario", "scenario": name, "rf": rf, "p": p,
-                "u_lark": r.u_lark, "u_maj": r.u_maj,
-                "ci_lark": r.ci_lark, "ci_maj": r.ci_maj,
-                "ratio": r.u_maj / r.u_lark if r.u_lark else float("inf"),
-                "ticks": r.ticks,
-            })
-    return rows
-
-
-def _downtime_row(r, *, kind: str, scenario: str):
-    return {
-        "kind": kind, "scenario": scenario, "rf": r.rf, "p": r.p,
-        "pause_lark": r.pause_lark, "pause_quorum": r.pause_quorum,
-        "ci_pause_lark": r.ci_lark, "ci_pause_quorum": r.ci_quorum,
-        "ratio": r.availability_ratio,
-        "lark_events": r.lark_events, "quorum_events": r.quorum_events,
-        "hist_edges": r.hist_edges.tolist(),
-        "hist_lark": r.hist_lark.tolist(),
-        "hist_quorum": r.hist_quorum.tolist(),
-        "dupres_ticks": r.dupres_ticks, "rebuild_steps": r.rebuild_steps,
-        "rebuild_model": r.rebuild_model,
-        "rebuild_ticks_per_gib": r.rebuild_ticks_per_gib,
-        "size_dist": r.size_dist, "size_skew": r.size_skew,
-        # inf (no sharing) serializes as null — _json_safe
-        "node_bandwidth_gibps": r.node_bandwidth_gibps,
-        "ticks": r.ticks,
-    }
-
-
-def _downtime_engine_rows(r, *, kind: str, scenario: str):
-    """One row per protocol-zoo engine beyond the lark/quorum pair the
-    base downtime row already carries.  Engine rows name their engine
-    explicitly — check_regression keys them by it — and repeat the shared
-    grid/knob columns so each row is self-describing."""
-    rows = []
-    for engine in r.engines:
-        if engine in ("lark", "quorum"):
-            continue
-        s = r.engine_stats(engine)
-        rows.append({
-            "kind": kind, "engine": engine, "scenario": scenario,
-            "rf": r.rf, "p": r.p,
-            "pause": s["pause"], "ci_pause": s["ci_pause"],
-            "events": s["events"],
-            "hist_edges": r.hist_edges.tolist(),
-            "hist": s["hist"].tolist(),
-            "lease_ticks": r.lease_ticks,
-            "view_change_ticks": r.view_change_ticks,
-            "dupres_ticks": r.dupres_ticks,
-            "rebuild_steps": r.rebuild_steps,
-            "rebuild_model": r.rebuild_model,
-            "rebuild_ticks_per_gib": r.rebuild_ticks_per_gib,
-            "size_dist": r.size_dist, "size_skew": r.size_skew,
-            "node_bandwidth_gibps": r.node_bandwidth_gibps,
-            "ticks": r.ticks,
-        })
-    return rows
-
-
-def run_downtime(full: bool = False, trials: int = 4, backend: str = "jax",
-                 seed: int = 0, devices: int = 1, smoke: bool = False,
-                 pac_block_p=None,
-                 params: DowntimeParams = DowntimeParams(),
-                 packed: bool = False, block_t=None):
-    """§6 commit-pause rows over the i.i.d. grid.  The protocol/rebuild
-    knobs travel as one pre-validated DowntimeParams — main() builds it
-    exactly once from the CLI flags, so every invalid combination is
-    rejected in one place (the dataclass) before any engine runs."""
-    backend, devices = _batched_backend(backend, devices)
-    grid = _iid_grid(full, smoke)
-    n, parts, max_ticks, min_ticks = _run_scale(full, smoke, scenario=False)
-    rows = []
-    for rf, p in grid:
-        r = simulate_downtime_batched(
-            n=n, partitions=parts, rf=rf, p=p, trials=trials,
-            max_ticks=max_ticks, min_ticks=min_ticks, seed=seed,
-            backend=backend, devices=devices, pac_block_p=pac_block_p,
-            params=params, packed=packed, block_t=block_t)
-        rows.append(_downtime_row(r, kind="downtime", scenario="iid"))
-        rows.extend(_downtime_engine_rows(r, kind="downtime_engine",
-                                          scenario="iid"))
-    return rows
-
-
-def run_downtime_scenarios(names, full: bool = False, trials: int = 4,
-                           backend: str = "jax", seed: int = 0,
-                           devices: int = 1, smoke: bool = False,
-                           pac_block_p=None,
-                           params: DowntimeParams = DowntimeParams(),
-                           packed: bool = False, block_t=None):
-    backend, devices = _batched_backend(backend, devices)
-    n, parts, max_ticks, min_ticks = _run_scale(full, smoke, scenario=True)
-    rows = []
-    for name in names:
-        sc = get_scenario(name)
-        for rf, p in sc.grid:
-            r = simulate_downtime_batched(
-                n=n, partitions=parts, rf=rf, p=p, trials=trials,
-                max_ticks=max_ticks, min_ticks=min_ticks, seed=seed,
-                backend=backend, devices=devices, pac_block_p=pac_block_p,
-                params=params, packed=packed, block_t=block_t,
-                **sc.kwargs(n=n, rf=rf, p=p))
-            rows.append(_downtime_row(r, kind="downtime_scenario",
-                                      scenario=name))
-            rows.extend(_downtime_engine_rows(
-                r, kind="downtime_engine_scenario", scenario=name))
-    return rows
-
-
-def _latency_row(r, *, kind: str, scenario: str):
-    return {
-        "kind": kind, "scenario": scenario, "rf": r.rf, "p": r.p,
-        "lat_lark": r.lat_lark, "lat_quorum": r.lat_quorum,
-        "lat_hermes": r.lat_hermes,
-        "ci_lat_lark": r.ci_lat_lark, "ci_lat_quorum": r.ci_lat_quorum,
-        "p50_lark": r.p50_lark, "p99_lark": r.p99_lark,
-        "p999_lark": r.p999_lark,
-        "p50_quorum": r.p50_quorum, "p99_quorum": r.p99_quorum,
-        "p999_quorum": r.p999_quorum,
-        "p50_hermes": r.p50_hermes, "p99_hermes": r.p99_hermes,
-        "p999_hermes": r.p999_hermes,
-        "slo_lark": r.slo_lark, "slo_quorum": r.slo_quorum,
-        "slo_hermes": r.slo_hermes,
-        "req_total": r.req_total,
-        "hist_edges": r.hist_edges.tolist(),
-        "hist_quorum_req": r.hist_quorum_req.tolist(),
-        "dupres_ticks": r.dupres_ticks, "rebuild_model": r.rebuild_model,
-        "key_zipf": r.key_zipf, "read_frac": r.read_frac,
-        "requests_per_tick": r.requests_per_tick,
-        "slo_ticks": r.slo_ticks,
-        "ticks": r.ticks,
-    }
-
-
-def run_latency(full: bool = False, trials: int = 4, backend: str = "jax",
-                seed: int = 0, devices: int = 1, smoke: bool = False,
-                pac_block_p=None, params: DowntimeParams = DowntimeParams(),
-                packed: bool = False, block_t=None):
-    """Client-latency rows over the i.i.d. grid — same grid/scale/tick
-    budgets as the downtime metric, so the two row families describe the
-    same trajectories."""
-    backend, devices = _batched_backend(backend, devices)
-    grid = _iid_grid(full, smoke)
-    n, parts, max_ticks, min_ticks = _run_scale(full, smoke, scenario=False)
-    rows = []
-    for rf, p in grid:
-        r = simulate_client_latency(
-            n=n, partitions=parts, rf=rf, p=p, trials=trials,
-            max_ticks=max_ticks, min_ticks=min_ticks, seed=seed,
-            backend=backend, devices=devices, pac_block_p=pac_block_p,
-            params=params, packed=packed, block_t=block_t)
-        rows.append(_latency_row(r, kind="latency", scenario="iid"))
-    return rows
-
-
-def run_latency_scenarios(names, full: bool = False, trials: int = 4,
-                          backend: str = "jax", seed: int = 0,
-                          devices: int = 1, smoke: bool = False,
-                          pac_block_p=None,
-                          params: DowntimeParams = DowntimeParams(),
-                          packed: bool = False, block_t=None):
-    backend, devices = _batched_backend(backend, devices)
-    n, parts, max_ticks, min_ticks = _run_scale(full, smoke, scenario=True)
-    rows = []
-    for name in names:
-        sc = get_scenario(name)
-        for rf, p in sc.grid:
-            r = simulate_client_latency(
-                n=n, partitions=parts, rf=rf, p=p, trials=trials,
-                max_ticks=max_ticks, min_ticks=min_ticks, seed=seed,
-                backend=backend, devices=devices, pac_block_p=pac_block_p,
-                params=params, packed=packed, block_t=block_t,
-                **sc.kwargs(n=n, rf=rf, p=p))
-            rows.append(_latency_row(r, kind="latency_scenario",
-                                     scenario=name))
-    return rows
-
-
-def _resolve_scenarios(args, ap):
-    names = []
-    for sel in args.scenario or []:
-        names.extend(s for s in sel.split(",") if s)
-    if (args.scenarios or args.scenarios_only) and not names:
-        names = ["all"]
-    for name in names:
-        if name != "all" and name not in scenario_names():
-            ap.error(f"unknown scenario {name!r}; registered: "
-                     f"{', '.join(scenario_names())} (or 'all')")
-    if "all" in names:
-        return list(scenario_names())
-    return names
-
-
-def main(argv=None, *, strict: bool = True):
+def build_parser() -> argparse.ArgumentParser:
     # allow_abbrev off: a prefix typo like --ful must fail loudly, not
     # silently launch the hours-long paper-scale grid
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0],
                                  allow_abbrev=False)
+    ap.add_argument("--config", metavar="PATH",
+                    help="run a committed experiment config (TOML/JSON "
+                         "spec; benchmarks/configs/) instead of sweep "
+                         "flags — mutually exclusive with them")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny grid/scale (CI pallas-interpret lane)")
-    ap.add_argument("--backend", default="event",
+    ap.add_argument("--backend", default=None,
                     choices=("event", "numpy", "jax", "pallas"))
-    ap.add_argument("--metric", default="availability",
+    ap.add_argument("--metric", default=None,
                     choices=("availability", "downtime", "latency"),
                     help="instantaneous availability (§5.1), commit-pause "
                          "durations (§6), or client-visible commit "
@@ -495,10 +196,13 @@ def main(argv=None, *, strict: bool = True):
                     help="SLO threshold: rows report the fraction of "
                          "requests whose added commit latency exceeds "
                          "this (--metric latency only; default 8)")
-    ap.add_argument("--trials", type=int, default=1,
+    ap.add_argument("--trials", type=int, default=None,
                     help="seeds (event) or batch size (batched backends)")
-    ap.add_argument("--devices", type=int, default=1,
+    ap.add_argument("--devices", type=int, default=None,
                     help="shard trials over this many devices (jax/pallas)")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="base RNG seed (default 0; event backend runs "
+                         "seeds seed..seed+trials-1)")
     ap.add_argument("--scenario", action="append", metavar="NAME",
                     help="append a registered scenario's grid (repeatable, "
                          "comma-separated, or 'all')")
@@ -515,259 +219,78 @@ def main(argv=None, *, strict: bool = True):
                          "sweep (block_p; with --packed the 2-D fused "
                          "block_t x block_p race)")
     ap.add_argument("--json", metavar="PATH",
-                    help="also dump rows + CI half-widths as JSON")
+                    help="dump rows + CI half-widths + provenance-stamped "
+                         "meta as JSON")
+    ap.add_argument("--events", metavar="PATH",
+                    help="append one JSONL progress record per row "
+                         "(run_start/row/run_end with wall-clock deltas)")
+    return ap
+
+
+def cli_options() -> tuple:
+    """Every option string this suite's parser accepts — the suite-level
+    contract benchmarks/run.py uses to flag typo'd flags that no suite
+    recognizes."""
+    opts = []
+    for action in build_parser()._actions:
+        opts.extend(action.option_strings)
+    return tuple(opts)
+
+
+def _provided_spec_flags(args: argparse.Namespace) -> dict:
+    """The spec kwargs the user explicitly set on the command line:
+    store_true flags only when true, everything else only when not None
+    — so the spec's metric/engine gating fires exactly on what was
+    typed, never on a filled default."""
+    provided = {}
+    for dest, key in SPEC_FLAGS.items():
+        v = getattr(args, dest)
+        if v is None or v is False:
+            continue
+        if dest == "scenario":
+            provided["scenarios"] = tuple(v)
+        elif dest == "scenarios":
+            # legacy alias: --scenarios alone means --scenario all
+            provided.setdefault("scenarios", ("all",))
+        else:
+            provided[key] = v
+    return provided
+
+
+def build_spec(argv=None, *, strict: bool = True):
+    """Parse sweep flags into (spec, args).  The seam the equivalence
+    tests pin: for every committed config, build_spec() over the
+    documented flag line equals ExperimentSpec.from_file(config)."""
+    ap = build_parser()
     args, extra = ap.parse_known_args(argv if argv is not None
                                       else sys.argv[1:])
     if strict and extra:
         ap.error(f"unrecognized arguments: {' '.join(extra)}")
-    if args.trials < 1:
-        ap.error("--trials must be >= 1")
-    if args.devices < 1:
-        ap.error("--devices must be >= 1")
-    if args.devices > 1:
-        if args.backend in ("event", "numpy"):
-            ap.error("--devices > 1 needs --backend jax or pallas")
-        if args.trials % args.devices:
-            ap.error("--trials must be a multiple of --devices")
-    if args.autotune and args.backend != "pallas":
-        ap.error("--autotune tunes the pallas kernel block size; "
-                 "use --backend pallas")
-    if args.packed and args.backend == "event":
-        ap.error("--packed runs the batched engines; use --backend "
-                 "numpy, jax, or pallas")
-    if args.metric not in ("downtime", "latency"):
-        if args.dupres_ticks is not None or args.rebuild_steps is not None \
-                or args.rebuild_model is not None \
-                or args.rebuild_ticks_per_gib is not None \
-                or args.size_dist is not None \
-                or args.size_skew is not None \
-                or args.node_bandwidth_gibps is not None:
-            ap.error("--dupres-ticks/--rebuild-steps/--rebuild-model/"
-                     "--rebuild-ticks-per-gib/--size-dist/--size-skew/"
-                     "--node-bandwidth-gibps only apply to "
-                     "--metric downtime or latency")
-    if args.metric != "downtime":
-        if args.engines is not None or args.lease_ticks is not None \
-                or args.view_change_ticks is not None:
-            ap.error("--engines/--lease-ticks/--view-change-ticks select "
-                     "the protocol zoo; use --metric downtime")
-    if args.engines is None:
-        args.engines = "lark,quorum"
-    if args.lease_ticks is None:
-        args.lease_ticks = 0
-    if args.view_change_ticks is None:
-        args.view_change_ticks = 0
-    if args.metric != "latency":
-        if args.key_zipf is not None or args.read_frac is not None \
-                or args.requests_per_tick is not None \
-                or args.slo_ticks is not None:
-            ap.error("--key-zipf/--read-frac/--requests-per-tick/"
-                     "--slo-ticks model the request workload; use "
-                     "--metric latency")
-    elif args.backend == "event":
-        ap.error("--metric latency runs the batched engines; use "
-                 "--backend numpy, jax, or pallas")
-    if args.metric == "latency":
-        if args.key_zipf is None:
-            args.key_zipf = 1.0
-        if args.read_frac is None:
-            args.read_frac = 0.8
-        if args.requests_per_tick is None:
-            args.requests_per_tick = 32.0
-        if args.slo_ticks is None:
-            args.slo_ticks = 8
-    else:
-        # other metrics never read these; keep the DowntimeParams
-        # zero-request defaults so params equality is stable
-        args.key_zipf, args.read_frac = 0.0, 1.0
-        args.requests_per_tick, args.slo_ticks = 0.0, 0
-    if args.rebuild_model is None:
-        args.rebuild_model = "fixed"
-    if args.rebuild_model == "reconfig" and args.rebuild_steps is not None:
-        ap.error("--rebuild-steps is the fixed-model knob; use "
-                 "--rebuild-ticks-per-gib with --rebuild-model reconfig")
-    if args.rebuild_model == "fixed" \
-            and args.rebuild_ticks_per_gib is not None:
-        ap.error("--rebuild-ticks-per-gib is the reconfig-model knob; use "
-                 "--rebuild-steps with --rebuild-model fixed")
-    if args.rebuild_model == "fixed" \
-            and (args.size_dist is not None or args.size_skew is not None
-                 or args.node_bandwidth_gibps is not None):
-        ap.error("--size-dist/--size-skew/--node-bandwidth-gibps model "
-                 "the reconfiguring baseline's data-sized catch-ups; use "
-                 "--rebuild-model reconfig")
-    if args.size_skew is not None \
-            and args.size_dist not in ("zipf", "lognormal"):
-        ap.error("--size-skew shapes the zipf/lognormal size "
-                 "distributions; pass --size-dist zipf|lognormal")
-    if args.dupres_ticks is None:
-        args.dupres_ticks = 1
-    if args.rebuild_steps is None:
-        args.rebuild_steps = 100
-    if args.rebuild_ticks_per_gib is None:
-        args.rebuild_ticks_per_gib = 100
-    if args.size_dist is None:
-        args.size_dist = "uniform"
-    if args.size_skew is None:
-        args.size_skew = 1.0
-    if args.node_bandwidth_gibps is None:
-        args.node_bandwidth_gibps = math.inf
-    # the knob *values* are validated in exactly one place — the
-    # DowntimeParams dataclass the engine itself consumes — so the CLI,
-    # direct simulate_downtime_batched() calls, and the CI smoke lane
-    # all raise the identical errors
+    provided = _provided_spec_flags(args)
     try:
-        dt_params = DowntimeParams(
-            dupres_ticks=args.dupres_ticks,
-            rebuild_steps=args.rebuild_steps,
-            rebuild_model=args.rebuild_model,
-            rebuild_ticks_per_gib=args.rebuild_ticks_per_gib,
-            size_dist=args.size_dist, size_skew=args.size_skew,
-            node_bandwidth_gibps=args.node_bandwidth_gibps,
-            key_zipf=args.key_zipf, read_frac=args.read_frac,
-            requests_per_tick=args.requests_per_tick,
-            slo_ticks=args.slo_ticks,
-            engines=tuple(e.strip() for e in args.engines.split(",")
-                          if e.strip()),
-            lease_ticks=args.lease_ticks,
-            view_change_ticks=args.view_change_ticks)
-    except ValueError as e:
-        ap.error(str(e))
-
-    names = _resolve_scenarios(args, ap)
-    rows = []
-    pac_block_p = block_t = None
-    if args.autotune:
-        n, parts = _grid_scale(args.full, args.smoke)
-        # rf of the first row the sweep will actually run (scenario grid
-        # when the i.i.d. grid is skipped)
-        if args.scenarios_only and names:
-            tune_rf = get_scenario(names[0]).grid[0][0]
+        if args.config:
+            if provided:
+                flags = ", ".join("--" + k.replace("_", "-")
+                                  for k in sorted(provided))
+                ap.error(f"--config is mutually exclusive with sweep "
+                         f"flags (got {flags}); edit the config or drop "
+                         "--config")
+            spec = ExperimentSpec.from_file(args.config)
         else:
-            tune_rf = _iid_grid(args.full, args.smoke)[0][0]
-        pac_block_p, block_t, row = _autotune_row(
-            n, parts, args.trials, args.devices, metric=args.metric,
-            rf=tune_rf, rebuild_model=args.rebuild_model,
-            packed=args.packed)
-        rows.append(row)
+            spec = ExperimentSpec.create(**provided)
+    except SpecError as e:
+        ap.error(str(e))
+    return spec, args
 
-    if args.metric == "latency":
-        common = dict(full=args.full, trials=args.trials,
-                      backend=args.backend, devices=args.devices,
-                      smoke=args.smoke, pac_block_p=pac_block_p,
-                      params=dt_params, packed=args.packed,
-                      block_t=block_t)
-        if not args.scenarios_only:
-            for r in run_latency(**common):
-                rows.append(r)
-                print(f"latency,rf{r['rf']}_p{r['p']:g},0,"
-                      f"lat_lark={r['lat_lark']:.3e};"
-                      f"lat_quorum={r['lat_quorum']:.3e};"
-                      f"p999_lark={r['p999_lark']:g};"
-                      f"p999_quorum={r['p999_quorum']:g};"
-                      f"slo_quorum={r['slo_quorum']:.3e}")
-        if names:
-            for r in run_latency_scenarios(names, **common):
-                rows.append(r)
-                print(f"latency_scenario,{r['scenario']}_rf{r['rf']}_"
-                      f"p{r['p']:g},0,lat_lark={r['lat_lark']:.3e};"
-                      f"lat_quorum={r['lat_quorum']:.3e};"
-                      f"p999_quorum={r['p999_quorum']:g};"
-                      f"slo_quorum={r['slo_quorum']:.3e}")
-    elif args.metric == "downtime":
-        common = dict(full=args.full, trials=args.trials,
-                      backend=args.backend, devices=args.devices,
-                      smoke=args.smoke, pac_block_p=pac_block_p,
-                      params=dt_params, packed=args.packed,
-                      block_t=block_t)
-        if not args.scenarios_only:
-            for r in run_downtime(**common):
-                rows.append(r)
-                if r["kind"] == "downtime_engine":
-                    print(f"downtime_engine,{r['engine']}_rf{r['rf']}_"
-                          f"p{r['p']:g},0,pause={r['pause']:.3e};"
-                          f"events={r['events']}")
-                else:
-                    print(f"downtime,rf{r['rf']}_p{r['p']:g},0,"
-                          f"pause_lark={r['pause_lark']:.3e};"
-                          f"pause_quorum={r['pause_quorum']:.3e};"
-                          f"ratio={r['ratio']:.2f}")
-        if names:
-            for r in run_downtime_scenarios(names, **common):
-                rows.append(r)
-                if r["kind"] == "downtime_engine_scenario":
-                    print(f"downtime_engine_scenario,{r['engine']}_"
-                          f"{r['scenario']}_rf{r['rf']}_p{r['p']:g},0,"
-                          f"pause={r['pause']:.3e};events={r['events']}")
-                else:
-                    print(f"downtime_scenario,{r['scenario']}_rf{r['rf']}_"
-                          f"p{r['p']:g},0,pause_lark={r['pause_lark']:.3e};"
-                          f"pause_quorum={r['pause_quorum']:.3e};"
-                          f"ratio={r['ratio']:.2f}")
-    else:
-        if not args.scenarios_only:
-            for r in run(full=args.full, seeds=tuple(range(args.trials)),
-                         backend=args.backend, devices=args.devices,
-                         smoke=args.smoke, pac_block_p=pac_block_p,
-                         packed=args.packed, block_t=block_t):
-                rows.append(r)
-                print(f"availability,rf{r['rf']}_p{r['p']:g},0,"
-                      f"u_lark={r['u_lark']:.3e};u_maj={r['u_maj']:.3e};"
-                      f"ratio={r['ratio']:.2f};"
-                      f"analytic={r['analytic_ratio']}")
-        if names:
-            for r in run_scenarios(names, full=args.full,
-                                   trials=args.trials,
-                                   backend=args.backend,
-                                   devices=args.devices,
-                                   smoke=args.smoke,
-                                   pac_block_p=pac_block_p,
-                                   packed=args.packed, block_t=block_t):
-                rows.append(r)
-                print(f"availability_scenario,{r['scenario']}_rf{r['rf']}_"
-                      f"p{r['p']:g},0,u_lark={r['u_lark']:.3e};"
-                      f"u_maj={r['u_maj']:.3e};ratio={r['ratio']:.2f}")
+
+def main(argv=None, *, strict: bool = True) -> int:
+    spec, args = build_spec(argv, strict=strict)
+    runner = ExperimentRunner(spec, config_path=args.config,
+                              events_path=args.events)
+    runner.run()
     if args.json:
-        meta = {"backend": args.backend, "trials": args.trials,
-                "devices": args.devices, "full": args.full,
-                "smoke": args.smoke, "scenarios": names,
-                "metric": args.metric, "packed": args.packed}
-        if args.metric == "latency":
-            meta["key_zipf"] = args.key_zipf
-            meta["read_frac"] = args.read_frac
-            meta["requests_per_tick"] = args.requests_per_tick
-            meta["slo_ticks"] = args.slo_ticks
-        # zoo meta only when the zoo is actually in play — a default
-        # lark,quorum run keeps emitting the pre-zoo meta byte for byte,
-        # so committed baselines regen-diff clean across this change
-        if args.metric == "downtime" and (
-                args.engines != "lark,quorum" or args.lease_ticks
-                or args.view_change_ticks):
-            meta["engines"] = args.engines
-            meta["lease_ticks"] = args.lease_ticks
-            meta["view_change_ticks"] = args.view_change_ticks
-        if args.metric in ("downtime", "latency"):
-            meta["rebuild_model"] = args.rebuild_model
-            meta["size_dist"] = args.size_dist
-            # match the result rows' normalization: the skew knob is
-            # inert under uniform, so record it as 0 there
-            meta["size_skew"] = args.size_skew \
-                if args.size_dist in ("zipf", "lognormal") else 0.0
-            meta["node_bandwidth_gibps"] = \
-                None if math.isinf(args.node_bandwidth_gibps) \
-                else args.node_bandwidth_gibps
-        doc = {"meta": meta,
-               "rows": [_json_safe(r) for r in rows]}
-        with open(args.json, "w") as fh:
-            json.dump(doc, fh, indent=1, sort_keys=True, allow_nan=False)
+        runner.write_summary(args.json)
     return 0
-
-
-def _json_safe(row):
-    """Non-finite floats (a ratio over a zero pause/unavailability) are not
-    RFC-JSON; dump them as null so jq/strict parsers can read the file."""
-    return {k: (None if isinstance(v, float) and not math.isfinite(v) else v)
-            for k, v in row.items()}
 
 
 if __name__ == "__main__":

@@ -5,14 +5,34 @@ baseline produced by the same command and exits 1 when any shared row's
 gated columns (u_lark/u_maj for availability rows, pause_lark /
 pause_quorum for --metric downtime rows, lat_lark/lat_quorum for
 --metric latency rows) drift more than --sigma combined standard errors
-(CI half-widths are 95% → se = ci/1.96).  Downtime rows are additionally
-keyed by rebuild_model, so fixed and reconfig baselines never gate each
-other; latency rows are further keyed by the workload knobs
-(read_frac/key_zipf/slo_ticks/requests_per_tick/dupres_ticks) — the same
-trajectories under a different workload are a different measurement, not
-drift.  Loads are strict RFC JSON (``Infinity``/``NaN`` tokens are
-rejected); a null gated value (a serialized non-finite) skips that
-column's gate with a note.
+(CI half-widths are 95% → se = ci/1.96).  Row identity and the gated
+column pairs come from one declarative table shared with the experiment
+layer that produces the rows — ``repro.experiments.schema`` — so the
+producer and the gate can never disagree about what a row *is*:
+downtime rows are keyed by rebuild_model and the size/bandwidth knobs,
+protocol-zoo engine rows by their explicit ``engine`` plus the zoo
+knobs, latency rows by the workload knobs
+(read_frac/key_zipf/slo_ticks/requests_per_tick/dupres_ticks) — the
+same trajectories under a different knob set are a different
+measurement, not drift.
+
+Loads are strict RFC JSON (``Infinity``/``NaN`` tokens are rejected);
+a null gated value (a serialized non-finite) skips that column's gate
+with a note.  Provenance-stamped dumps (``meta.schema_version`` ≥ 1)
+are verified on load: an unknown schema version is an error, the
+recorded ``provenance.spec_sha256`` must match the embedded
+``meta.spec``, and when the recorded config file still exists on disk
+its sha256 must match ``provenance.config_sha256`` (an edited config
+with a stale artifact fails loudly).  Pre-provenance dumps (the PR-1..8
+baselines, no ``schema_version``) still load, with a deprecation note
+asking for a regen.
+
+--identical swaps the sigma gate for a byte-identity gate: every row
+must serialize to exactly the same JSON as its baseline row, in the
+same order.  This is the CI reproducibility lane's check that a
+committed ``benchmarks/configs/*.toml`` regenerates its BENCH baseline
+row for row (the Monte Carlo draws counter-based randomness, so an
+unchanged tree reproduces the baseline exactly).
 
 --summary-json PATH additionally writes a machine-readable per-column
 verdict list (status ok/fail/null-skipped plus new-row/missing-row
@@ -20,48 +40,19 @@ entries, each with drift, se, and z-score) — the CI workflow renders it
 into the GitHub Actions step summary, and when $GITHUB_STEP_SUMMARY is
 set the script appends a markdown table there directly.
 
-The Monte Carlo draws counter-based randomness, so an unchanged tree
-reproduces the baseline *exactly*; drift within sigma allows for
-intentional stopping-rule or scenario retunes, anything beyond it means a
-semantic change that should come with a refreshed baseline:
+Drift within sigma allows for intentional stopping-rule or scenario
+retunes; anything beyond it means a semantic change that should come
+with a refreshed baseline.  Every committed baseline regenerates from
+its experiment config (the flag spellings in docs/BENCHMARKS.md remain
+equivalent):
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-    python benchmarks/availability_sweep.py --backend jax --trials 8 \
-        --devices 8 --scenario all --json benchmarks/BENCH_sweep.json
+    python benchmarks/availability_sweep.py \
+        --config benchmarks/configs/sweep.toml \
+        --json benchmarks/BENCH_sweep.json
 
-    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-    python benchmarks/availability_sweep.py --backend jax --trials 8 \
-        --devices 8 --metric downtime --smoke --scenario all \
-        --json benchmarks/BENCH_downtime.json
-
-    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-    python benchmarks/availability_sweep.py --backend jax --trials 8 \
-        --devices 8 --metric downtime --smoke --rebuild-model reconfig \
-        --scenario all --json benchmarks/BENCH_downtime_reconfig.json
-
-    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-    python benchmarks/availability_sweep.py --backend jax --trials 8 \
-        --devices 8 --metric downtime --smoke --rebuild-model reconfig \
-        --size-dist zipf --size-skew 1 --node-bandwidth-gibps 1 \
-        --scenario all --json benchmarks/BENCH_downtime_skew.json
-
-    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-    python benchmarks/availability_sweep.py --backend jax --trials 8 \
-        --devices 8 --metric latency --smoke --scenario all \
-        --json benchmarks/BENCH_latency.json
-
-    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-    python benchmarks/availability_sweep.py --backend jax --trials 8 \
-        --devices 8 --metric downtime --smoke --rebuild-model reconfig \
-        --engines lark,quorum,hermes,spinnaker --lease-ticks 40 \
-        --view-change-ticks 200 --scenario rolling-restart \
-        --json benchmarks/BENCH_shootout.json
-
-Protocol-zoo rows (kind "downtime_engine"/"downtime_engine_scenario",
-from --engines hermes/spinnaker) are keyed by their explicit ``engine``
-field plus the zoo knobs and gate a single pause/ci_pause column pair;
-the loader rejects engine rows whose engine field is missing or unknown
-rather than letting them silently match the quorum baseline columns.
+and likewise downtime.toml, downtime_reconfig.toml, downtime_skew.toml,
+latency.toml, shootout.toml → their BENCH_<name>.json.
 
 Fused-megakernel rows (--packed, bit-packed state + the fused pallas
 step kernel) are keyed identically to their unpacked counterparts ON
@@ -74,82 +65,28 @@ block_t x block_p race) carry kind "autotune" and are never gated.
 from __future__ import annotations
 
 import argparse
+import hashlib
 import json
 import math
 import os
 import sys
 
+try:
+    from repro.experiments import schema as _schema
+except ImportError:                      # pragma: no cover - path fallback
+    # this gate runs before PYTHONPATH=src in some CI lanes; the schema
+    # module is stdlib-only, so pulling it straight from the tree is safe
+    sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                    os.pardir, "src"))
+    from repro.experiments import schema as _schema
+
 _SE_FLOOR = 1e-12   # deterministic RNG: identical runs pass at se == 0
 
-
-#: gated value/CI column pairs per row kind ("availability" covers the
-#: legacy iid/scenario kinds; "downtime" rows carry pause fractions;
-#: "latency" rows carry mean added commit latencies)
-_GATED_COLS = {
-    "availability": (("u_lark", "ci_lark"), ("u_maj", "ci_maj")),
-    "downtime": (("pause_lark", "ci_pause_lark"),
-                 ("pause_quorum", "ci_pause_quorum")),
-    "downtime_engine": (("pause", "ci_pause"),),
-    "latency": (("lat_lark", "ci_lat_lark"),
-                ("lat_quorum", "ci_lat_quorum")),
-}
-
-#: engine names a "downtime_engine" row may carry — mirrors
-#: core.downtime_batched.ENGINES without importing the engine stack
-#: (this gate runs before PYTHONPATH=src in some CI lanes)
-_KNOWN_ENGINES = ("lark", "quorum", "hermes", "spinnaker")
-
-
-def row_key(r: dict):
-    if r.get("kind") == "scenario":
-        return ("scenario", r["scenario"], r["rf"], r["p"])
-    if r.get("kind") == "iid":
-        return ("iid", r["rf"], r["p"])
-    if r.get("kind") in ("downtime_engine", "downtime_engine_scenario"):
-        # protocol-zoo rows are keyed by the engine whose pause they
-        # measure — without the engine in the key, a hermes row and a
-        # spinnaker row at the same grid point would gate each other —
-        # plus the zoo knobs (a different lease / view-change window is
-        # a different measurement, like the latency workload knobs)
-        return ("downtime_engine", r["engine"], r.get("scenario", "iid"),
-                r["rf"], r["p"], r.get("rebuild_model", "fixed"),
-                r.get("lease_ticks", 0), r.get("view_change_ticks", 0),
-                r.get("size_dist", "uniform"), r.get("size_skew", 0.0),
-                r.get("node_bandwidth_gibps"))
-    if r.get("kind") in ("downtime", "downtime_scenario"):
-        # the two quorum-log baselines measure different things; rows from
-        # different rebuild models must never be compared (pre-roster
-        # baselines carry no rebuild_model field and are all "fixed") —
-        # and likewise for the size-distribution / bandwidth knobs (rows
-        # predating them are uniform/unshared, matching the defaults; a
-        # serialized null bandwidth is the unshared inf)
-        return ("downtime", r.get("scenario", "iid"), r["rf"], r["p"],
-                r.get("rebuild_model", "fixed"),
-                r.get("size_dist", "uniform"), r.get("size_skew", 0.0),
-                r.get("node_bandwidth_gibps"))
-    if r.get("kind") in ("latency", "latency_scenario"):
-        # the workload knobs select the measurement: a different request
-        # mix / skew / SLO / cost model is a different row family, never
-        # compared against another one's baseline
-        return ("latency", r.get("scenario", "iid"), r["rf"], r["p"],
-                r.get("rebuild_model", "fixed"),
-                r.get("read_frac"), r.get("key_zipf"),
-                r.get("slo_ticks"), r.get("requests_per_tick"),
-                r.get("dupres_ticks"))
-    return None                      # autotune/meta rows are not gated
-
-
-def row_cols(r: dict):
-    kind = r.get("kind", "")
-    # engine rows must match before the broader downtime prefix — they
-    # carry per-engine pause/ci_pause columns, not the lark/quorum pair
-    if kind.startswith("downtime_engine"):
-        return _GATED_COLS["downtime_engine"]
-    if kind.startswith("downtime"):
-        return _GATED_COLS["downtime"]
-    if kind.startswith("latency"):
-        return _GATED_COLS["latency"]
-    return _GATED_COLS["availability"]
+#: shared row-identity/column tables (repro.experiments.schema) — the
+#: same objects the runner uses to label its JSONL events
+row_key = _schema.row_key
+row_cols = _schema.row_cols
+_KNOWN_ENGINES = _schema.KNOWN_ENGINES
 
 
 def compare(new: dict, base: dict, sigma: float):
@@ -203,6 +140,31 @@ def compare(new: dict, base: dict, sigma: float):
     return failures, notes, checked, records
 
 
+def compare_identical(new: dict, base: dict):
+    """Byte-identity gate: the run's rows must serialize to exactly the
+    baseline's rows, same order, same values — the reproducibility
+    lane's proof that a config regenerates its committed baseline.
+    Returns (failures, checked)."""
+    nr, br = new["rows"], base["rows"]
+    failures = []
+    if len(nr) != len(br):
+        failures.append(f"row count differs: run has {len(nr)}, "
+                        f"baseline has {len(br)}")
+    for i, (a, b) in enumerate(zip(nr, br)):
+        ja = json.dumps(a, sort_keys=True, allow_nan=False)
+        jb = json.dumps(b, sort_keys=True, allow_nan=False)
+        if ja != jb:
+            diff_keys = sorted(
+                k for k in set(a) | set(b) if a.get(k) != b.get(k))
+            failures.append(
+                f"row {i} ({row_key(b) or b.get('kind')}) differs in: "
+                f"{', '.join(diff_keys)}")
+            if len(failures) >= 20:
+                failures.append("... (further diffs suppressed)")
+                break
+    return failures, min(len(nr), len(br))
+
+
 def summary_markdown(records, sigma: float, checked: int) -> str:
     """GitHub Actions step-summary table: every non-ok verdict in full,
     ok rows as one roll-up line (a green run should read as one line,
@@ -224,11 +186,68 @@ def summary_markdown(records, sigma: float, checked: int) -> str:
     return "\n".join(lines) + "\n"
 
 
-def load_rows(path: str) -> dict:
+def _spec_sha256(spec_mapping: dict) -> str:
+    """Recompute ExperimentSpec.content_hash() from an embedded
+    ``meta.spec`` mapping without importing the spec layer (this gate
+    must stay stdlib-only): the hash is sha256 over the sorted-key
+    compact JSON of the identity fields (everything but ``name``)."""
+    ident = {k: v for k, v in spec_mapping.items() if k != "name"}
+    blob = json.dumps(ident, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode("utf-8")).hexdigest()
+
+
+def _check_provenance(path: str, meta: dict, notes: list):
+    """Validate a dump's schema_version / provenance stamp.  Unknown
+    versions and internally-inconsistent stamps raise; a pre-provenance
+    dump (no schema_version) only collects a deprecation note."""
+    version = meta.get("schema_version")
+    if version is None:
+        notes.append(
+            f"{path}: pre-provenance dump (no meta.schema_version) — "
+            "still loadable, but regenerate it from its "
+            "benchmarks/configs/ spec to pick up the provenance stamp")
+        return
+    if version not in _schema.KNOWN_SCHEMA_VERSIONS:
+        raise ValueError(
+            f"{path}: unknown meta.schema_version {version!r}; this "
+            f"checker knows {list(_schema.KNOWN_SCHEMA_VERSIONS)} — "
+            "update the tools or regenerate the dump")
+    spec = meta.get("spec")
+    prov = meta.get("provenance")
+    if not isinstance(spec, dict) or not isinstance(prov, dict):
+        raise ValueError(
+            f"{path}: schema_version {version} dump without the "
+            "meta.spec / meta.provenance mappings — regenerate it with "
+            "availability_sweep.py --json")
+    recorded = prov.get("spec_sha256")
+    actual = _spec_sha256(spec)
+    if recorded != actual:
+        raise ValueError(
+            f"{path}: provenance.spec_sha256 {recorded!r} does not match "
+            f"the embedded meta.spec (expected {actual!r}) — the dump "
+            "was hand-edited or the stamp is stale; regenerate it")
+    config_path = prov.get("config_path")
+    if config_path and prov.get("config_sha256") \
+            and os.path.exists(config_path):
+        h = hashlib.sha256()
+        with open(config_path, "rb") as fh:
+            h.update(fh.read())
+        if h.hexdigest() != prov["config_sha256"]:
+            raise ValueError(
+                f"{path}: config {config_path} changed since this dump "
+                "was produced (sha256 mismatch vs "
+                "provenance.config_sha256) — regenerate the dump from "
+                "the current config")
+
+
+def load_rows(path: str, notes: list | None = None) -> dict:
     """Strict-RFC JSON load: `Infinity`/`NaN`/`-Infinity` tokens (which
     python's json writes and reads happily, but jq and most parsers
     reject) fail loudly — a current sweep serializes non-finite values as
-    null, so their presence means a stale or hand-edited dump."""
+    null, so their presence means a stale or hand-edited dump.  Also
+    validates the provenance stamp (see _check_provenance) and rejects
+    engine rows whose engine field is missing or unknown rather than
+    letting them silently match the quorum baseline columns."""
     def _reject(token):
         raise ValueError(
             f"{path}: non-finite JSON value {token!r} is not RFC JSON — "
@@ -236,6 +255,11 @@ def load_rows(path: str) -> dict:
             "(non-finite ratios serialize as null)")
     with open(path) as fh:
         doc = json.load(fh, parse_constant=_reject)
+    collected = notes if notes is not None else []
+    _check_provenance(path, doc.get("meta", {}), collected)
+    if notes is None:
+        for s in collected:
+            print(f"note: {s}")
     for r in doc.get("rows", ()):
         if str(r.get("kind", "")).startswith("downtime_engine"):
             engine = r.get("engine")
@@ -258,32 +282,51 @@ def main(argv=None, *, strict: bool = True) -> int:
     ap.add_argument("baseline", help="committed baseline JSON")
     ap.add_argument("--sigma", type=float, default=2.0,
                     help="allowed drift in combined standard errors")
+    ap.add_argument("--identical", action="store_true",
+                    help="require byte-identical rows instead of the "
+                         "sigma gate (reproducibility lane)")
     ap.add_argument("--summary-json", metavar="PATH",
                     help="write the per-column verdict list (status / "
                          "drift / z-score) as a JSON artifact")
     args = ap.parse_args(argv if argv is not None else sys.argv[1:])
 
-    new = load_rows(args.results)
-    base = load_rows(args.baseline)
-    failures, notes, checked, records = compare(new, base, args.sigma)
+    notes = []
+    new = load_rows(args.results, notes)
+    base = load_rows(args.baseline, notes)
+    if args.identical:
+        failures, checked = compare_identical(new, base)
+        records = [{"status": "fail", "key": [], "detail": f}
+                   for f in failures]
+    else:
+        failures, cmp_notes, checked, records = compare(new, base,
+                                                        args.sigma)
+        notes.extend(cmp_notes)
     if args.summary_json:
         doc = {"sigma": args.sigma, "checked": checked,
+               "identical": args.identical,
                "failures": len(failures), "records": records}
         with open(args.summary_json, "w") as fh:
             json.dump(doc, fh, indent=1, sort_keys=True)
     step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
-    if step_summary:
+    if step_summary and not args.identical:
         with open(step_summary, "a") as fh:
             fh.write(summary_markdown(records, args.sigma, checked))
     for s in notes:
         print(f"note: {s}")
     if failures:
-        print(f"REGRESSION: {len(failures)} of {checked} gated rows "
-              f"outside {args.sigma:g} sigma")
+        if args.identical:
+            print(f"NOT IDENTICAL: {len(failures)} difference(s) over "
+                  f"{checked} rows")
+        else:
+            print(f"REGRESSION: {len(failures)} of {checked} gated rows "
+                  f"outside {args.sigma:g} sigma")
         for s in failures:
             print(f"  {s}")
         return 1
-    print(f"ok: {checked} rows within {args.sigma:g} sigma of baseline")
+    if args.identical:
+        print(f"ok: {checked} rows byte-identical to baseline")
+    else:
+        print(f"ok: {checked} rows within {args.sigma:g} sigma of baseline")
     return 0
 
 

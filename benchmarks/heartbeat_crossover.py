@@ -20,6 +20,11 @@ def crossover(P: int = 4096, rf: int = 3) -> float:
     return math.sqrt(P * rf * (rf - 1))
 
 
+def cli_options() -> tuple:
+    """No flags of its own (benchmarks/run.py unknown-flag contract)."""
+    return ()
+
+
 def main(argv=None, *, strict: bool = True):  # noqa: ARG001 - run.py contract
     P, rf = 4096, 3
     n_star = crossover(P, rf)

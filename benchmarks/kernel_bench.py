@@ -38,11 +38,23 @@ def _time(fn, *args, iters=5) -> float:
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def main(argv=None, *, strict: bool = True):
+def _build_parser():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0],
                                  allow_abbrev=False)
     ap.add_argument("--autotune", action="store_true",
                     help="race pallas PAC block_p candidates")
+    return ap
+
+
+def cli_options() -> tuple:
+    """Option strings this suite accepts (benchmarks/run.py uses the
+    union over all suites to reject flags nobody recognizes)."""
+    return tuple(o for a in _build_parser()._actions
+                 for o in a.option_strings)
+
+
+def main(argv=None, *, strict: bool = True):
+    ap = _build_parser()
     args, extra = ap.parse_known_args(argv if argv is not None
                                       else sys.argv[1:])
     if strict and extra:

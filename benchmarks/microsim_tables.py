@@ -33,6 +33,11 @@ def run(ticks: int = 520_000):
     return out
 
 
+def cli_options() -> tuple:
+    """No flags of its own (benchmarks/run.py unknown-flag contract)."""
+    return ()
+
+
 def main(argv=None, *, strict: bool = True):  # noqa: ARG001 - run.py contract
     ticks = 520_000
     results = run(ticks=ticks)

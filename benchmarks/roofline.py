@@ -152,6 +152,11 @@ def mc_step_rows() -> List[Dict]:
     return rows
 
 
+def cli_options() -> tuple:
+    """No flags of its own (benchmarks/run.py unknown-flag contract)."""
+    return ()
+
+
 def main(argv=None, *, strict: bool = True):  # noqa: ARG001 - run.py contract
     rows = load_cells()
     for r in rows:

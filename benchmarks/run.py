@@ -11,27 +11,72 @@ Prints ``name,us_per_call,derived`` CSV rows:
 The same argv goes to every suite, but each suite parses it with
 ``strict=False`` (parse_known_args), so suite-specific flags like the
 sweep's --backend/--trials/--devices pass harmlessly through the suites
-that don't know them.  Run a suite standalone to get strict parsing back
-(unknown flags fail loudly there).
+that don't know them.  A flag *no* suite recognizes is a typo, not a
+pass-through: every suite publishes its option strings via
+``cli_options()``, and a token outside the union gets a loud warning
+naming the nearest valid flag — or, under $CI (or a --config run, where
+a silently-dropped override would corrupt a pinned experiment), a hard
+error.  Run a suite standalone to get strict parsing back.
 """
 from __future__ import annotations
 
+import difflib
+import os
 import sys
 import time
 
 
-def main() -> None:
+def _unknown_flags(argv, suites):
+    """argv tokens that look like flags but appear in no suite's
+    cli_options() — each as (token, suggestion-or-None)."""
+    known = set()
+    for suite in suites:
+        known.update(suite.cli_options())
+    known.update(("-h", "--help"))
+    unknown = []
+    for tok in argv:
+        if not tok.startswith("-") or tok == "-":
+            continue
+        flag = tok.split("=", 1)[0]
+        if flag in known:
+            continue
+        close = difflib.get_close_matches(flag, sorted(known), n=1)
+        unknown.append((flag, close[0] if close else None))
+    return unknown
+
+
+def main() -> int:
     argv = sys.argv[1:]
+    # `python benchmarks/run.py` puts benchmarks/ (not the repo root) on
+    # sys.path; add the root so the package import below works either way
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if root not in sys.path:
+        sys.path.insert(0, root)
     from benchmarks import (availability_sweep, heartbeat_crossover,
                             kernel_bench, microsim_tables, roofline)
 
+    suites = (heartbeat_crossover, kernel_bench, availability_sweep,
+              microsim_tables, roofline)
+    unknown = _unknown_flags(argv, suites)
+    if unknown:
+        for flag, close in unknown:
+            hint = f" (did you mean {close!r}?)" if close else ""
+            print(f"run.py: warning: no benchmark suite recognizes "
+                  f"{flag!r}{hint} — it would be silently dropped",
+                  file=sys.stderr)
+        if os.environ.get("CI") or "--config" in {t.split("=", 1)[0]
+                                                  for t in argv}:
+            print("run.py: error: refusing to run with unrecognized "
+                  "flags (CI/spec mode)", file=sys.stderr)
+            return 2
+
     t0 = time.time()
-    for suite in (heartbeat_crossover, kernel_bench, availability_sweep,
-                  microsim_tables, roofline):
+    for suite in suites:
         suite.main(argv, strict=False)
     print(f"benchmarks_total,all,{(time.time()-t0)*1e6:.0f},seconds="
           f"{time.time()-t0:.1f}")
+    return 0
 
 
 if __name__ == '__main__':
-    main()
+    sys.exit(main())

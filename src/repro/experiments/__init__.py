@@ -1,0 +1,9 @@
+"""Declarative experiment layer: frozen specs, a config-driven runner,
+and provenance-stamped artifacts.
+
+Import shape matters here: ``schema`` is dependency-free (the regression
+gate loads it without jax on the path), ``spec`` pulls in the core engine
+constants for validation, and ``runner`` pulls in the full engine stack.
+Import the submodule you need rather than relying on package-level
+re-exports, so cheap consumers stay cheap.
+"""

@@ -261,3 +261,130 @@ def test_summary_json_and_step_summary(tmp_path, monkeypatch):
     assert json.loads(summary.read_text())["failures"] == 0
     green = (tmp_path / "green.md").read_text()
     assert "flagged: 0" in green and "|" not in green
+
+
+# -- provenance-stamped loads --------------------------------------------
+
+def _stamped_doc(rows, spec=None, **prov_overrides):
+    """A minimal schema_version-1 dump with an internally consistent
+    provenance stamp (spec_sha256 recomputed the same way the checker
+    does)."""
+    spec = dict(spec or {"name": "t", "metric": "availability",
+                         "backend": "numpy", "trials": 2})
+    prov = {"spec_sha256": check_regression._spec_sha256(spec),
+            "config_path": None, "config_sha256": None}
+    prov.update(prov_overrides)
+    return {"meta": {"schema_version": 1, "spec": spec,
+                     "provenance": prov},
+            "rows": rows}
+
+
+def _dump(tmp_path, name, doc):
+    import json
+    p = tmp_path / name
+    p.write_text(json.dumps(doc))
+    return str(p)
+
+
+def test_pre_provenance_dump_loads_with_deprecation_note(tmp_path):
+    path = _dump(tmp_path, "old.json", {"rows": [_row()]})
+    notes = []
+    doc = check_regression.load_rows(path, notes)
+    assert doc["rows"]
+    assert any("pre-provenance" in s for s in notes)
+    assert any("benchmarks/configs/" in s for s in notes)
+
+
+def test_stamped_dump_loads_clean(tmp_path):
+    path = _dump(tmp_path, "new.json", _stamped_doc([_row()]))
+    notes = []
+    check_regression.load_rows(path, notes)
+    assert notes == []
+
+
+def test_unknown_schema_version_is_rejected(tmp_path):
+    import pytest
+    doc = _stamped_doc([_row()])
+    doc["meta"]["schema_version"] = 99
+    path = _dump(tmp_path, "v99.json", doc)
+    with pytest.raises(ValueError, match="unknown meta.schema_version 99"):
+        check_regression.load_rows(path)
+
+
+def test_stamp_without_spec_or_provenance_is_rejected(tmp_path):
+    import pytest
+    for missing in ("spec", "provenance"):
+        doc = _stamped_doc([_row()])
+        del doc["meta"][missing]
+        path = _dump(tmp_path, f"no_{missing}.json", doc)
+        with pytest.raises(ValueError, match="meta.spec / meta.provenance"):
+            check_regression.load_rows(path)
+
+
+def test_spec_hash_mismatch_is_rejected(tmp_path):
+    import pytest
+    doc = _stamped_doc([_row()])
+    # hand-edit the embedded spec after stamping — the classic stale/
+    # tampered artifact
+    doc["meta"]["spec"]["trials"] = 16
+    path = _dump(tmp_path, "edited.json", doc)
+    with pytest.raises(ValueError, match="spec_sha256 .* does not match"):
+        check_regression.load_rows(path)
+
+
+def test_spec_hash_ignores_the_name_field(tmp_path):
+    # name is display-only, never identity: renaming the embedded spec
+    # must not invalidate the stamp
+    doc = _stamped_doc([_row()])
+    doc["meta"]["spec"]["name"] = "renamed"
+    path = _dump(tmp_path, "renamed.json", doc)
+    check_regression.load_rows(path, [])
+
+
+def test_changed_config_file_is_rejected(tmp_path):
+    import hashlib
+    import pytest
+    cfg = tmp_path / "exp.toml"
+    cfg.write_text('metric = "availability"\n')
+    sha = hashlib.sha256(cfg.read_bytes()).hexdigest()
+    good = _stamped_doc([_row()], config_path=str(cfg), config_sha256=sha)
+    check_regression.load_rows(_dump(tmp_path, "good.json", good), [])
+    cfg.write_text('metric = "availability"\ntrials = 9\n')
+    with pytest.raises(ValueError, match="changed since this dump"):
+        check_regression.load_rows(_dump(tmp_path, "stale.json", good))
+    # a config that no longer exists on disk cannot be verified — load
+    # proceeds (moving an artifact between machines must not fail it)
+    gone = _stamped_doc([_row()], config_path=str(tmp_path / "gone.toml"),
+                        config_sha256=sha)
+    check_regression.load_rows(_dump(tmp_path, "gone.json", gone), [])
+
+
+# -- the --identical byte-identity gate ----------------------------------
+
+def test_compare_identical_passes_on_equal_and_names_diff_keys():
+    rows = [_row(), _dt_row(model="fixed")]
+    failures, checked = check_regression.compare_identical(
+        {"rows": rows}, {"rows": [dict(r) for r in rows]})
+    assert not failures and checked == 2
+    perturbed = [dict(_row(), u_lark=9.9e-4, ticks=1),
+                 _dt_row(model="fixed")]
+    failures, _ = check_regression.compare_identical(
+        {"rows": perturbed}, {"rows": rows})
+    assert len(failures) == 1
+    assert "row 0" in failures[0]
+    assert "ticks" in failures[0] and "u_lark" in failures[0]
+
+
+def test_compare_identical_flags_row_count_mismatch():
+    failures, checked = check_regression.compare_identical(
+        {"rows": [_row()]}, {"rows": [_row(), _row(rf=3)]})
+    assert any("row count differs" in f for f in failures)
+    assert checked == 1
+
+
+def test_identical_mode_end_to_end(tmp_path):
+    same = _dump(tmp_path, "same.json", _stamped_doc([_row(), _dt_row()]))
+    assert check_regression.main([same, same, "--identical"]) == 0
+    other = _dump(tmp_path, "other.json",
+                  _stamped_doc([_row(u=2e-4), _dt_row()]))
+    assert check_regression.main([other, same, "--identical"]) == 1

@@ -1,0 +1,105 @@
+"""Distill a sweep's JSONL events stream into a perf-baseline JSON.
+
+``availability_sweep.py --events PATH`` records one JSON object per
+result row with real wall-clock position/deltas.  This tool reduces one
+or more such streams to the stable perf surface CI tracks commit over
+commit: per run (keyed by the spec name, falling back to metric) the
+total wall-clock, row count, rows-per-second, and per-row-kind wall
+time; stamped with the producing commit.  ``tools/perf_delta.py``
+compares two of these files and renders the comparison into the GitHub
+step summary.
+
+Usage:
+    python tools/perf_baseline.py events.jsonl [more.jsonl ...] \
+        --out perf_baseline.json [--git-sha SHA]
+
+Multiple runs in one stream (run_batch) are split on their run_start
+records.  Rows before any run_start are ignored; a stream whose run_end
+is missing (killed run) still contributes its rows with wall_s taken
+from the last row's t_s.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+
+
+def _git_sha():
+    try:
+        return subprocess.run(["git", "rev-parse", "HEAD"],
+                              capture_output=True, text=True,
+                              check=True).stdout.strip()
+    except (OSError, subprocess.CalledProcessError):
+        return None
+
+
+def parse_events(paths):
+    """events JSONL → list of per-run dicts (name, spec_sha256, rows,
+    wall_s, rows_per_s, kinds{kind: {rows, wall_s}})."""
+    runs = []
+    cur = None
+    for path in paths:
+        with open(path) as fh:
+            for line in fh:
+                line = line.strip()
+                if not line:
+                    continue
+                ev = json.loads(line)
+                kind = ev.get("event")
+                if kind == "run_start":
+                    cur = {"name": ev.get("name") or ev.get("metric", ""),
+                           "metric": ev.get("metric"),
+                           "backend": ev.get("backend"),
+                           "spec_sha256": ev.get("spec_sha256"),
+                           "rows": 0, "wall_s": 0.0, "kinds": {}}
+                    runs.append(cur)
+                elif kind == "row" and cur is not None:
+                    cur["rows"] += 1
+                    cur["wall_s"] = max(cur["wall_s"], ev.get("t_s", 0.0))
+                    k = ev.get("kind") or "?"
+                    bucket = cur["kinds"].setdefault(
+                        k, {"rows": 0, "wall_s": 0.0})
+                    bucket["rows"] += 1
+                    bucket["wall_s"] += ev.get("dt_s", 0.0)
+                elif kind == "run_end" and cur is not None:
+                    if ev.get("wall_s") is not None:
+                        cur["wall_s"] = ev["wall_s"]
+                    cur = None
+    for r in runs:
+        r["rows_per_s"] = (r["rows"] / r["wall_s"]
+                           if r["wall_s"] > 0 else None)
+    return runs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("events", nargs="+",
+                    help="one or more --events JSONL streams")
+    ap.add_argument("--out", required=True, metavar="PATH",
+                    help="perf-baseline JSON to write")
+    ap.add_argument("--git-sha", default=None,
+                    help="commit to stamp (default: git rev-parse HEAD)")
+    args = ap.parse_args(argv if argv is not None else sys.argv[1:])
+
+    runs = parse_events(args.events)
+    if not runs:
+        print(f"perf_baseline: no run_start records in "
+              f"{', '.join(args.events)}", file=sys.stderr)
+        return 1
+    doc = {"schema_version": 1,
+           "git_sha": args.git_sha or _git_sha(),
+           "runs": {r["name"] or f"run{i}": r
+                    for i, r in enumerate(runs)}}
+    with open(args.out, "w") as fh:
+        json.dump(doc, fh, indent=1, sort_keys=True)
+    for name, r in sorted(doc["runs"].items()):
+        rps = f"{r['rows_per_s']:.3f}" if r["rows_per_s"] else "—"
+        print(f"perf,{name},0,rows={r['rows']};wall_s={r['wall_s']:.2f};"
+              f"rows_per_s={rps}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

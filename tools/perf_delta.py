@@ -1,0 +1,104 @@
+"""Compare two perf-baseline JSONs (tools/perf_baseline.py output) and
+report the commit-over-commit wall-clock / rows-per-second movement.
+
+CI runs the reproducibility lane's sweep with --events, distills the
+stream with perf_baseline.py, restores the previous commit's baseline
+from the actions cache, and calls this tool: matching runs (same name)
+get a per-run wall_s / rows_per_s delta, printed as CSV and — when
+$GITHUB_STEP_SUMMARY is set — appended there as a markdown table.
+
+This is tracking, not gating, by default: wall-clock on shared CI
+runners is noisy, so the tool always exits 0 unless --max-regression is
+given (fractional slowdown on wall_s above which it exits 1, e.g. 0.5
+= fail when more than 50% slower).  A missing baseline (first run, or
+an expired cache) is a clean exit with a note, never a failure.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def load(path: str) -> dict:
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def deltas(new: dict, base: dict):
+    """Per-run comparison rows: (name, new_run, base_run_or_None,
+    wall_ratio_or_None)."""
+    out = []
+    for name, run in sorted(new.get("runs", {}).items()):
+        b = base.get("runs", {}).get(name)
+        ratio = None
+        if b and b.get("wall_s") and run.get("wall_s") is not None:
+            ratio = run["wall_s"] / b["wall_s"]
+        out.append((name, run, b, ratio))
+    return out
+
+
+def markdown(rows, new_sha, base_sha) -> str:
+    lines = ["### Perf delta (wall-clock, informational)",
+             f"- new: `{(new_sha or 'unknown')[:12]}` vs baseline: "
+             f"`{(base_sha or 'unknown')[:12]}`", "",
+             "| run | rows | wall_s | baseline wall_s | ratio | rows/s |",
+             "|---|---|---|---|---|---|"]
+    for name, run, b, ratio in rows:
+        bw = f"{b['wall_s']:.2f}" if b else "—"
+        rt = f"{ratio:.2f}x" if ratio is not None else "—"
+        rps = (f"{run['rows_per_s']:.3f}"
+               if run.get("rows_per_s") else "—")
+        lines.append(f"| {name} | {run['rows']} | {run['wall_s']:.2f} "
+                     f"| {bw} | {rt} | {rps} |")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("new", help="this commit's perf-baseline JSON")
+    ap.add_argument("baseline", nargs="?", default=None,
+                    help="previous perf-baseline JSON (omit or point at "
+                         "a missing file on the first run)")
+    ap.add_argument("--max-regression", type=float, default=None,
+                    metavar="FRAC",
+                    help="exit 1 when any matching run's wall_s grew by "
+                         "more than this fraction (default: never gate)")
+    args = ap.parse_args(argv if argv is not None else sys.argv[1:])
+
+    new = load(args.new)
+    if not args.baseline or not os.path.exists(args.baseline):
+        print("perf_delta: no previous baseline — first run, nothing to "
+              "compare")
+        for name, run in sorted(new.get("runs", {}).items()):
+            print(f"perf_delta,{name},0,wall_s={run['wall_s']:.2f};"
+                  "baseline=none")
+        return 0
+    base = load(args.baseline)
+    rows = deltas(new, base)
+    worst = None
+    for name, run, b, ratio in rows:
+        if ratio is None:
+            print(f"perf_delta,{name},0,wall_s={run['wall_s']:.2f};"
+                  "baseline=none")
+            continue
+        print(f"perf_delta,{name},0,wall_s={run['wall_s']:.2f};"
+              f"baseline_wall_s={b['wall_s']:.2f};ratio={ratio:.3f}")
+        if worst is None or ratio > worst[1]:
+            worst = (name, ratio)
+    step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if step_summary:
+        with open(step_summary, "a") as fh:
+            fh.write(markdown(rows, new.get("git_sha"),
+                              base.get("git_sha")))
+    if args.max_regression is not None and worst \
+            and worst[1] > 1.0 + args.max_regression:
+        print(f"perf_delta: {worst[0]} is {worst[1]:.2f}x the baseline "
+              f"wall-clock (limit {1.0 + args.max_regression:.2f}x)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
