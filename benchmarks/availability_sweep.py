@@ -41,8 +41,13 @@ one "downtime_engine" row per grid point, keyed by engine name.
 --requests-per-tick offered cluster load, per-key dup-res first-touch
 charges for LARK vs full rebuild-wait charges for the quorum-log
 baseline (and the Hermes-style read-local contrast).  Rows carry
-p50/p99/p999 added commit latency, the --slo-ticks violation fraction,
-and the quorum wait histogram.  Latency rows accept every downtime knob
+p50/p99/p999 added commit latency, the --slo-ticks violation fraction
+(strict >; --slo-curve-bins adds the full violation curve over the
+2^j - 1 threshold sweep), and the quorum wait histogram.  --write-skew
+draws each partition's write fraction around 1 - read_frac (mean-pinned,
+independent of key popularity), and --node-bandwidth-gibps makes
+fixed-model rebuilds share node ingest bandwidth just like reconfig
+catch-ups.  Latency rows accept every downtime knob
 (the protocol under the workload is the same) and are batched-only.
 
 Backends (--backend):
@@ -112,6 +117,7 @@ SPEC_FLAGS = {
     "lease_ticks": "lease_ticks", "view_change_ticks": "view_change_ticks",
     "key_zipf": "key_zipf", "read_frac": "read_frac",
     "requests_per_tick": "requests_per_tick", "slo_ticks": "slo_ticks",
+    "write_skew": "write_skew", "slo_curve_bins": "slo_curve_bins",
     "scenario": "scenarios", "scenarios": "scenarios",
     "scenarios_only": "scenarios_only", "packed": "packed",
     "autotune": "autotune",
@@ -168,8 +174,10 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--node-bandwidth-gibps", type=float, default=None,
                     help="per-node catch-up ingest bandwidth in "
                          "full-speed streams; concurrent rebuilds on one "
-                         "recruit share it ('inf' disables sharing, the "
-                         "default; --rebuild-model reconfig only)")
+                         "node share it ('inf' disables sharing, the "
+                         "default; applies to both rebuild models — "
+                         "fixed-model rebuilds replay onto the lost "
+                         "replica's own node)")
     ap.add_argument("--engines", default=None, metavar="LIST",
                     help="comma-separated protocol engines to report "
                          f"(subset of {','.join(ENGINES)}; default "
@@ -194,8 +202,20 @@ def build_parser() -> argparse.ArgumentParser:
                          "(--metric latency only; default 32)")
     ap.add_argument("--slo-ticks", type=int, default=None,
                     help="SLO threshold: rows report the fraction of "
-                         "requests whose added commit latency exceeds "
-                         "this (--metric latency only; default 8)")
+                         "requests whose added commit latency STRICTLY "
+                         "exceeds this (0 counts any added latency; "
+                         "--metric latency only; default 8)")
+    ap.add_argument("--write-skew", type=float, default=None,
+                    help="skew the per-partition write fraction around "
+                         "1 - read_frac (mean-pinned Pareto shape, own "
+                         "RNG salt, independent of key popularity; 0 = "
+                         "exactly uniform mix; --metric latency only; "
+                         "default 0)")
+    ap.add_argument("--slo-curve-bins", type=int, default=None,
+                    help="report the SLO-violation curve over the "
+                         "power-of-two thresholds 2^j - 1, j < BINS, "
+                         "next to the --slo-ticks scalar (0 = scalar "
+                         "only; --metric latency only; default 0)")
     ap.add_argument("--trials", type=int, default=None,
                     help="seeds (event) or batch size (batched backends)")
     ap.add_argument("--devices", type=int, default=None,

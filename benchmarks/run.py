@@ -17,13 +17,35 @@ pass-through: every suite publishes its option strings via
 naming the nearest valid flag — or, under $CI (or a --config run, where
 a silently-dropped override would corrupt a pinned experiment), a hard
 error.  Run a suite standalone to get strict parsing back.
+
+``STANDALONE_TOOLS`` names the benchmarks/ modules that are deliberately
+NOT suites: they parse their own argv strictly, emit no ``name,us,...``
+CSV, and must be invoked directly (``python -m benchmarks.<tool>``) —
+running them under the shared argv would either crash on the sweep's
+flags or silently ignore their own.  The exclusion is explicit (and
+pinned by tests/test_experiments.py) so a tool documented in
+docs/BENCHMARKS.md is always either in the suites tuple or in this list.
 """
 from __future__ import annotations
 
 import difflib
+import importlib
 import os
 import sys
 import time
+
+#: the run.py suites, in execution order — every one parses the shared
+#: argv with strict=False and emits ``name,us,...`` CSV rows
+SUITE_NAMES = ("heartbeat_crossover", "kernel_bench",
+               "availability_sweep", "microsim_tables", "roofline")
+
+#: benchmarks/ modules that are standalone CLIs, not run.py suites — see
+#: the module docstring.  perf_probe re-lowers single cells under
+#: config/sharding variants (strict own argv, sets XLA_FLAGS at import);
+#: make_experiments_md regenerates EXPERIMENTS.md from committed dry-run
+#: artifacts (no flags at all).
+STANDALONE_TOOLS = ("perf_probe", "make_experiments_md",
+                    "check_regression")
 
 
 def _unknown_flags(argv, suites):
@@ -52,11 +74,8 @@ def main() -> int:
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     if root not in sys.path:
         sys.path.insert(0, root)
-    from benchmarks import (availability_sweep, heartbeat_crossover,
-                            kernel_bench, microsim_tables, roofline)
-
-    suites = (heartbeat_crossover, kernel_bench, availability_sweep,
-              microsim_tables, roofline)
+    suites = tuple(importlib.import_module(f"benchmarks.{name}")
+                   for name in SUITE_NAMES)
     unknown = _unknown_flags(argv, suites)
     if unknown:
         for flag, close in unknown:

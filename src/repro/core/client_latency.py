@@ -37,9 +37,22 @@ reads and writes.  Outputs are p50/p99/p999 commit latency (over the
 full request distribution, zeros included — the bucketed percentile is
 the smallest power-of-two bucket lower edge whose CDF covers the
 quantile, so p999 >= p99 >= p50 by construction), the SLO-violation
-fraction (requests over `slo_ticks`), and the mean added latency, each
+fraction (requests strictly over `slo_ticks`; slo_ticks=0 counts every
+request with any added latency), and the mean added latency, each
 per protocol, plus the quorum latency histogram next to the engine's
 pause histograms.
+
+Three sharpening knobs, each byte-identical to the prior model at its
+degenerate setting: `write_skew` draws every partition's write fraction
+around 1 - read_frac (mean-pinned Pareto factors under _WRITE_SALT,
+independent of key popularity; 0 = the exactly-uniform mix),
+`slo_curve_bins` reports the full SLO-violation curve over the
+power-of-two threshold sweep 2^j - 1 derived from the same bucketed
+histograms (the `slo_ticks` scalar IS the curve at its threshold,
+exactly; 0 = scalar only), and `node_bandwidth_gibps` applies to
+rebuild_model="fixed" as well — concurrent fixed-model rebuilds
+replaying onto one node split its bandwidth exactly like the reconfig
+catch-ups (inf = the unshared legacy model, bit-for-bit).
 
 Zero-knob limit (pinned exactly by tests/test_client_latency.py):
 dupres_ticks=0 never dirties a key, read_frac=1 zeroes the write rate —
@@ -71,6 +84,11 @@ from .downtime_batched import (BatchedDowntimeResult, DowntimeParams,
 #: per-run constants may draw from the counter-hash family under their own
 #: salt without perturbing node trajectories)
 _KEY_SALT = 0xC2B2AE35
+
+#: dedicated counter-RNG salt for the per-partition write-fraction draw
+#: (`write_skew`) — its own stream, so the write mix is independent of
+#: both the node trajectories and the key -> partition hash
+_WRITE_SALT = 0x85EBCA6B
 
 #: keys per partition in the workload model.  A module constant, not a
 #: knob: it only sets the granularity of the analytic dirty-key carry
@@ -119,6 +137,49 @@ def partition_request_weights(seed: int, partitions: int, *,
     return w / w.sum()
 
 
+def partition_write_fractions(seed: int, partitions: int, *,
+                              read_frac: float = 0.8,
+                              write_skew: float = 0.0) -> np.ndarray:
+    """(P,) float64 per-partition write fractions, mean-pinned to
+    1 - read_frac.
+
+    write_skew=0 short-circuits to the exactly-constant
+    `1 - read_frac` table (the legacy uniform mix, bit-for-bit).
+    Otherwise each partition draws a Pareto-shaped factor
+    (1 - u)^-write_skew under _WRITE_SALT and the table is
+    min(c * draw, 1) with c the unique waterfilling scale that pins the
+    MEAN write fraction to `1 - read_frac` exactly — a fraction cannot
+    exceed 1 (every request a write), and a naive rescale-then-clip
+    would collapse the mean under the heavy Pareto tail, so the scale
+    is solved against the saturation (property-tested across skews in
+    tests/test_client_latency.py).  The draw is independent of key
+    popularity — the partition request *rate* stays
+    `partition_request_weights`, only its read/write split moves.
+    Always host-side numpy: every backend receives the identical
+    table."""
+    if partitions <= 0:
+        raise ValueError("partitions must be >= 1")
+    target = 1.0 - read_frac
+    if write_skew == 0 or target == 0.0 or target == 1.0:
+        return np.full(partitions, target)
+    seed_mix = _mix32(np.asarray([(seed & 0xFFFFFFFF) ^ 0x6A09E667],
+                                 dtype=np.uint32), np)
+    u = _uniforms(seed_mix, np.asarray(0, dtype=np.uint32), _WRITE_SALT,
+                  np.zeros(1, dtype=np.uint32), partitions, np)[0] \
+        .astype(np.float64)
+    raw = (1.0 - u) ** (-float(write_skew))
+    # exact waterfilling: with the m largest draws saturated at 1, the
+    # scale solving mean = target is (target*P - m) / sum(rest); the
+    # first m where that scale leaves draw m itself unsaturated is
+    # consistent, and then mean(w) = (m + (target*P - m)) / P = target
+    r = np.sort(raw)[::-1]
+    tail = r[::-1].cumsum()[::-1]                 # tail[m] = sum r[m:]
+    m = np.arange(partitions, dtype=np.float64)
+    cm = (target * partitions - m) / tail
+    msat = int(np.argmax(cm * r < 1.0))           # first consistent m
+    return np.minimum(cm[msat] * raw, 1.0)
+
+
 def key_bucket_shares(key_zipf: float, *,
                       keys_per_partition: int = KEYS_PER_PARTITION,
                       n_buckets: int = N_KEY_BUCKETS):
@@ -153,6 +214,10 @@ class _LatencyPlan:
     kf: np.ndarray           # (NB,) float32 keys per bucket (K * f_b)
     lamw: np.ndarray         # (P,) float32 write requests/tick
     pow_tables: np.ndarray   # (nbits, P, NB) float32 decay squares
+    #: (P,) float64 per-partition write fractions, or None under the
+    #: uniform mix (write_skew=0) — consumed host-side at chunk drains
+    #: to weight hermes' write-path share of the dup charges
+    wfp: Optional[np.ndarray] = None
 
 
 def _percentile(masses, total: float, q: float) -> float:
@@ -160,7 +225,14 @@ def _percentile(masses, total: float, q: float) -> float:
     distribution of `total` requests with point `masses` [(value, count)]
     at positive latencies and the rest at exactly 0.  Walking the sorted
     values makes q -> value non-decreasing, so p999 >= p99 >= p50 always
-    holds on emitted rows."""
+    holds on emitted rows.
+
+    Boundary semantics (pinned by adversarial tests): the walk takes the
+    smallest value whose cumulative mass *reaches* q * total (`>=`, not
+    `>`), so a CDF landing exactly on the quantile selects that value,
+    not the next one; an all-zero-mass distribution returns 0.0 for
+    every q; and a total smaller than the charged mass still terminates
+    (the zero mass is clamped at 0)."""
     if total <= 0:
         return 0.0
     masses = sorted((m for m in masses if m[1] > 0), key=lambda m: m[0])
@@ -220,6 +292,17 @@ class BatchedLatencyResult:
     slo_lark: float                  # fraction of requests > slo_ticks
     slo_quorum: float
     slo_hermes: float
+    write_skew: float = 0.0
+    slo_curve_bins: int = 0
+    node_bandwidth_gibps: float = math.inf
+    #: SLO curves (slo_curve_bins > 0 only): violation fractions over
+    #: the power-of-two threshold sweep 2^j - 1, j = 0..bins-1 — each
+    #: curve is non-increasing in the threshold, and at the j whose
+    #: threshold equals slo_ticks the curve value IS the scalar slo_*
+    slo_curve_edges: np.ndarray = field(repr=False, default=None)
+    slo_curve_lark: np.ndarray = field(repr=False, default=None)
+    slo_curve_quorum: np.ndarray = field(repr=False, default=None)
+    slo_curve_hermes: np.ndarray = field(repr=False, default=None)
     hist_edges: np.ndarray = field(repr=False, default=None)
     hist_quorum_req: np.ndarray = field(repr=False, default=None)
     lat_lark_trials: np.ndarray = field(repr=False, default=None)
@@ -236,7 +319,14 @@ def make_latency_plan(seed: int, partitions: int, params: DowntimeParams,
                                   key_zipf=params.key_zipf)
     f, g = key_bucket_shares(params.key_zipf)
     lam = params.requests_per_tick * w
-    lamw = (lam * (1.0 - params.read_frac)).astype(np.float32)
+    wfp = None
+    if params.write_skew > 0:
+        wfp = partition_write_fractions(seed, partitions,
+                                        read_frac=params.read_frac,
+                                        write_skew=params.write_skew)
+        lamw = (lam * wfp).astype(np.float32)
+    else:
+        lamw = (lam * (1.0 - params.read_frac)).astype(np.float32)
     # same subnormal flush as the decay tables (kernels/latency.py):
     # XLA's DAZ would silently zero these, numpy would not
     lamw[lamw < np.float32(1e-30)] = 0.0
@@ -245,7 +335,8 @@ def make_latency_plan(seed: int, partitions: int, params: DowntimeParams,
         kf=(KEYS_PER_PARTITION * f).astype(np.float32),
         lamw=lamw,
         pow_tables=decay_pow_tables(lam, g, f, KEYS_PER_PARTITION,
-                                    max_ticks))
+                                    max_ticks),
+        wfp=wfp)
 
 
 def simulate_client_latency(
@@ -253,6 +344,7 @@ def simulate_client_latency(
         max_ticks: int = 3_000_000,
         key_zipf: float = 1.0, read_frac: float = 0.8,
         requests_per_tick: float = 32.0, slo_ticks: int = 8,
+        write_skew: float = 0.0, slo_curve_bins: int = 0,
         dupres_ticks: int = 1, rebuild_steps: int = 100,
         hist_bins: int = 16, rebuild_model: str = "fixed",
         rebuild_ticks_per_gib: int = 100, size_dist: str = "uniform",
@@ -277,7 +369,8 @@ def simulate_client_latency(
             size_dist=size_dist, size_skew=size_skew,
             node_bandwidth_gibps=node_bandwidth_gibps,
             key_zipf=key_zipf, read_frac=read_frac,
-            requests_per_tick=requests_per_tick, slo_ticks=slo_ticks)
+            requests_per_tick=requests_per_tick, slo_ticks=slo_ticks,
+            write_skew=write_skew, slo_curve_bins=slo_curve_bins)
     plan = make_latency_plan(seed, partitions, params, max_ticks)
     res = simulate_downtime_batched(
         partitions=partitions, seed=seed, max_ticks=max_ticks,
@@ -294,6 +387,10 @@ def simulate_client_latency(
     qsum_tot = float(raw["qsum"].sum())
     wf = 1.0 - params.read_frac
     dup_cost = float(params.dupres_ticks)
+    # skewed write mix: the engine pooled a second, write-fraction-
+    # weighted view of the dup charges; its absence (write_skew=0) keeps
+    # the legacy uniform-mix hermes expressions byte-identical
+    dupw_tot = float(raw["dupw"].sum()) if "dupw" in raw else None
 
     if req > 0:
         lat_lark = dup_cost * dup_tot / req
@@ -302,8 +399,16 @@ def simulate_client_latency(
         laq_b = raw["qsum"] / req_b
         slo_lark = (dup_tot / req) if dup_cost > params.slo_ticks else 0.0
         slo_quorum = qslo_tot / req
+        if dupw_tot is not None:
+            lat_hermes = dup_cost * dupw_tot / req
+            slo_hermes = (dupw_tot / req) \
+                if dup_cost > params.slo_ticks else 0.0
+        else:
+            lat_hermes = wf * lat_lark
+            slo_hermes = wf * slo_lark
     else:
         lat_lark = lat_quorum = slo_lark = slo_quorum = 0.0
+        lat_hermes = slo_hermes = 0.0
         lal_b = np.zeros_like(req_b)
         laq_b = np.zeros_like(req_b)
     ci_l = ci_q = 0.0
@@ -313,8 +418,9 @@ def simulate_client_latency(
         ci_l = t * float(lal_b.std(ddof=1))
         ci_q = t * float(laq_b.std(ddof=1))
 
+    hermes_mass = dupw_tot if dupw_tot is not None else wf * dup_tot
     lark_masses = [(params.dupres_ticks, dup_tot)]
-    hermes_masses = [(params.dupres_ticks, wf * dup_tot)]
+    hermes_masses = [(params.dupres_ticks, hermes_mass)]
     quorum_masses = [(1 << k, float(qhist[k]))
                      for k in range(params.hist_bins)]
     pcts = {}
@@ -325,6 +431,46 @@ def simulate_client_latency(
                 "p990", "p99")
             pcts[f"{key}_{name}"] = _percentile(masses, req, q)
 
+    curve_edges = curve_lark = curve_quorum = curve_hermes = None
+    if params.slo_curve_bins > 0:
+        # violation-fraction curves over the threshold sweep 2^j - 1.
+        # A wait pays > 2^j - 1 iff it pays >= 2^j iff it landed in
+        # histogram bucket >= j, so the quorum curve is the qhist tail
+        # sums.  At the bin whose threshold equals slo_ticks the in-scan
+        # scalar (one f32 product per interval) and the tail sum (per-
+        # bucket f32 accumulators) agree only up to accumulation order,
+        # so the scalar is substituted there — "the old scalar IS the
+        # curve at slo_ticks" holds exactly — and the neighbors are
+        # clamped (an ulp-level correction at most) to keep the curve
+        # monotone non-increasing by construction.
+        J = params.slo_curve_bins
+        curve_edges = np.asarray([(1 << j) - 1 for j in range(J)],
+                                 dtype=np.int64)
+        if req > 0:
+            tail = qhist[::-1].cumsum()[::-1]
+            curve_quorum = tail[:J] / req
+            curve_lark = np.asarray(
+                [(dup_tot / req) if dup_cost > t else 0.0
+                 for t in curve_edges])
+            if dupw_tot is not None:
+                curve_hermes = np.asarray(
+                    [(dupw_tot / req) if dup_cost > t else 0.0
+                     for t in curve_edges])
+            else:
+                curve_hermes = wf * curve_lark
+            js = np.flatnonzero(curve_edges == params.slo_ticks)
+            if js.size:
+                j = int(js[0])
+                curve_quorum[j] = slo_quorum
+                curve_quorum[:j] = np.maximum(curve_quorum[:j],
+                                              slo_quorum)
+                curve_quorum[j + 1:] = np.minimum(curve_quorum[j + 1:],
+                                                  slo_quorum)
+        else:
+            curve_lark = np.zeros(J)
+            curve_quorum = np.zeros(J)
+            curve_hermes = np.zeros(J)
+
     return BatchedLatencyResult(
         p=res.p, rf=res.rf, n=res.n, partitions=res.partitions,
         trials=res.trials, backend=res.backend, devices=res.devices,
@@ -334,8 +480,11 @@ def simulate_client_latency(
         read_frac=params.read_frac,
         requests_per_tick=params.requests_per_tick,
         slo_ticks=params.slo_ticks, req_total=req,
+        write_skew=params.write_skew,
+        slo_curve_bins=params.slo_curve_bins,
+        node_bandwidth_gibps=params.node_bandwidth_gibps,
         lat_lark=lat_lark, lat_quorum=lat_quorum,
-        lat_hermes=wf * lat_lark,
+        lat_hermes=lat_hermes,
         ci_lat_lark=ci_l, ci_lat_quorum=ci_q,
         p50_lark=pcts["p50_lark"], p99_lark=pcts["p99_lark"],
         p999_lark=pcts["p999_lark"],
@@ -344,7 +493,9 @@ def simulate_client_latency(
         p50_hermes=pcts["p50_hermes"], p99_hermes=pcts["p99_hermes"],
         p999_hermes=pcts["p999_hermes"],
         slo_lark=slo_lark, slo_quorum=slo_quorum,
-        slo_hermes=wf * slo_lark,
+        slo_hermes=slo_hermes,
+        slo_curve_edges=curve_edges, slo_curve_lark=curve_lark,
+        slo_curve_quorum=curve_quorum, slo_curve_hermes=curve_hermes,
         hist_edges=np.asarray([1 << k for k in range(params.hist_bins)],
                               dtype=np.int64),
         hist_quorum_req=qhist,

@@ -30,7 +30,15 @@ protocol state machines per step instead of an instantaneous average:
                          nodes, statically; every replica loss starts a
                          constant `rebuild_steps`-tick countdown during
                          which commits pause (log-based replica catch-up
-                         under an equal storage budget).
+                         under an equal storage budget).  A finite
+                         `node_bandwidth_gibps` makes concurrent
+                         catch-ups replaying onto the same node share
+                         its ingest bandwidth exactly like the reconfig
+                         model below (the log replays onto the lost
+                         replica's own node — the lowest lost
+                         succession lane); inf — the default — is the
+                         unshared constant-countdown model, bit for
+                         bit.
                reconfig  the replica set is a carried per-partition
                          *roster* of succession ranks.  After a replica
                          loss the protocol recruits the next up node in
@@ -149,6 +157,13 @@ _REB_BIG = np.int32(2 ** 30)   # "never finishes" remaining-ticks sentinel
 #: the partition weight table degenerates to a handful of point masses
 _KEY_ZIPF_MAX = 8.0
 
+#: largest accepted write_skew (the client-latency workload's
+#: per-partition write-mix Pareto exponent, core/client_latency.py):
+#: same concentration rationale as _KEY_ZIPF_MAX — past this the
+#: bounded-Pareto draws collapse the write mix onto a handful of
+#: saturated (write fraction 1) partitions and the mean pin degenerates
+_WRITE_SKEW_MAX = 8.0
+
 
 @dataclass(frozen=True)
 class DowntimeParams:
@@ -174,11 +189,22 @@ class DowntimeParams:
     size_skew: float = 1.0
     node_bandwidth_gibps: float = math.inf
     # client-latency workload knobs (core/client_latency.py; inert for the
-    # plain downtime metric — the defaults are the zero-request limit)
+    # plain downtime metric — the defaults are the zero-request limit).
+    # slo_ticks uses a strict `>` (a request violates iff its added
+    # latency exceeds the threshold), so slo_ticks=0 is a *live* edge
+    # threshold — every request with any positive added latency violates
+    # — and doubles as the inert non-latency sentinel only because
+    # requests_per_tick=0 offers no requests to violate it.
+    # write_skew skews the per-partition write fraction around
+    # 1 - read_frac (0 = exactly uniform); slo_curve_bins requests a
+    # violation-fraction curve over thresholds 2^j - 1, j < bins (0 =
+    # the single slo_ticks point only).
     key_zipf: float = 0.0
     read_frac: float = 1.0
     requests_per_tick: float = 0.0
     slo_ticks: int = 0
+    write_skew: float = 0.0
+    slo_curve_bins: int = 0
     # protocol-zoo knobs: which engines to report, and their pause costs
     # (lease_ticks — Hermes membership-lease epoch length; a suspected
     # replica blocks writes until it elapses.  view_change_ticks —
@@ -231,12 +257,11 @@ class DowntimeParams:
                 "(the fixed-point rate quantum — below it even an "
                 "uncontended catch-up rounds to zero progress; "
                 "inf disables bandwidth sharing)")
-        if not self.reconfig and (self.size_dist != "uniform"
-                                  or self.bandwidth_shared):
+        if not self.reconfig and self.size_dist != "uniform":
             raise ValueError(
-                "size_dist and node_bandwidth_gibps model the "
-                "reconfiguring baseline's data-sized catch-ups; "
-                "use rebuild_model='reconfig'")
+                "size_dist models the reconfiguring baseline's "
+                "data-sized catch-ups; use rebuild_model='reconfig' "
+                "(node_bandwidth_gibps applies to both rebuild models)")
         if not 0 <= self.key_zipf <= _KEY_ZIPF_MAX:
             raise ValueError(
                 f"key_zipf must be in [0, {_KEY_ZIPF_MAX:g}] (the zipf "
@@ -247,7 +272,20 @@ class DowntimeParams:
                 and math.isfinite(self.requests_per_tick)):
             raise ValueError("requests_per_tick must be finite and >= 0")
         if self.slo_ticks < 0:
-            raise ValueError("slo_ticks must be >= 0")
+            raise ValueError("slo_ticks must be >= 0 (0 is a live "
+                             "threshold under the strict-> rule: every "
+                             "request with positive added latency "
+                             "violates it)")
+        if not 0 <= self.write_skew <= _WRITE_SKEW_MAX:
+            raise ValueError(
+                f"write_skew must be in [0, {_WRITE_SKEW_MAX:g}] (the "
+                "per-partition write-mix Pareto exponent; 0 is exactly "
+                "uniform)")
+        if not 0 <= self.slo_curve_bins <= self.hist_bins:
+            raise ValueError(
+                "slo_curve_bins must be in [0, hist_bins] — the curve's "
+                "2^j - 1 thresholds are derived from the power-of-two "
+                "latency histogram and cannot outrun its buckets")
 
     @property
     def reconfig(self) -> bool:
@@ -486,7 +524,8 @@ def _hist_add(xp, hist_bins: int, hist, mask, d):
 def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
                dupres_ticks: int, rebuild_steps: int, hist_bins: int,
                rebuild_model: str = "fixed", rebuild_ticks=None,
-               bandwidth_fp=None, cnt_fn=None, packed: bool = False,
+               bandwidth_fp=None, cnt_fn=None, rebuild_fp=None,
+               packed: bool = False,
                lat_fn=None, engines: tuple = (), lease_ticks: int = 0,
                view_change_ticks: int = 0, disable=frozenset()):
     hermes = "hermes" in engines
@@ -773,6 +812,119 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
             out = out + (xp.sum(hstate[0], axis=1).astype(xp.int32),)
         return carry, out
 
+    def step_fixed_bw(carry, s):
+        """The fixed model with per-node bandwidth-contended rebuilds:
+        `step`'s state machines verbatim, except qreb is carried in
+        _REB_SCALE fixed-point work units (restart value `rebuild_fp`)
+        and each interval's progress rate is the bandwidth share the
+        rebuilding node grants — the identical rate block the reconfig
+        steps run, so the two models' contention math can never drift
+        apart.  The replica set is static, so the ingesting node is the
+        lost replica's own (the log replays onto the lowest lost
+        succession lane); it rides in a carried `recruit` leaf exactly
+        like the reconfig carry.  bandwidth_fp=None never dispatches
+        here — the legacy `step` runs untouched, which is what keeps
+        node_bandwidth_gibps=inf bit-identical to the unshared model.
+        Like step_reconfig_packed, the post-event evaluation runs before
+        the interval charges (one fused dt_fn call on the packed pallas
+        path folds eval + node counts); the counts and interval_pause
+        still see interval-start carry state, so this is a pure dataflow
+        reorder of `step`."""
+        (now, up, ev_t, full, rr_t, rr_idx, lane0, ldn, lt0, qrep, qreb,
+         qdn, qt0, leader, lpt, qpt, lev, qev, lhist, qhist,
+         recruit) = carry[:21]
+        k = 21
+        hstate = None
+        if hermes:
+            hstate = carry[k:k + 7]
+            k += 7
+        lat = carry[k:]
+        B = up.shape[0]               # local trials (a shard of the batch)
+        t_clamp, dt, active, up, ev_t, rr_t, rr_idx = advance(
+            now, up, ev_t, rr_t, rr_idx, lane0, s)
+        dt_i = t_clamp - now                                  # (B,) int32
+
+        # -- post-event cluster state + the in-flight node counts from
+        # the carried interval-start recruit/qreb (the same reduction as
+        # the reconfig steps; one fused call when packed)
+        up_succ = up[:, succ]                                 # (B, P, n)
+        rep_new = up_succ[:, :, :rf]                          # replica lanes
+        inflight = (qreb > 0) & (recruit < n)
+        repm = None
+        if packed:
+            upw = xp.moveaxis(bitpack.pack_words(up_succ, xp), -1, 1)
+            out_t = dt_fn(upw, full, None, recruit, inflight)
+            lark, qmaj, ldr, lfull = out_t[:4]
+            counts = out_t[-1]
+            crepsw = out_t[-2]
+            if hermes:
+                repm = out_t[5]
+        else:
+            out_t = dt_fn(up_succ.reshape(B * P, n),
+                          full.reshape(B * P, n), None, recruit, inflight)
+            lark = out_t[0].reshape(B, P)
+            qmaj = out_t[1].reshape(B, P)
+            ldr = out_t[2].reshape(B, P)
+            lfull = out_t[3].reshape(B, P)
+            counts = out_t[-1]
+            if hermes:
+                repm = out_t[5].reshape(B, P)
+        kk = xp.take_along_axis(counts,
+                                xp.clip(recruit, 0, n - 1), axis=1)
+        # sentinel-recruit partitions must not inherit node n-1's
+        # in-flight count from the clipped gather (see step_reconfig)
+        kk = xp.where(recruit < n, xp.maximum(kk, 1), 1)
+        rate = xp.minimum(xp.int32(_REB_SCALE),
+                          xp.int32(bandwidth_fp) // kk)
+
+        lpt, qpt, qreb, qdn, qhist, qmaj_prev, rem0 = interval_pause(
+            now, dt, dt_i, ldn, qrep, qreb, qdn, qt0, lpt, qpt, qhist,
+            rate=rate)
+        if hermes:
+            hstate = hermes_interval(now, dt, dt_i, ldn, hstate)
+        lat = lat_interval(lat, dt_i, ldn, qmaj_prev, rem0)
+        now = t_clamp
+
+        if packed:
+            full = xp.where(lark[:, None, :], crepsw, full)
+        else:
+            full = xp.where(lark[:, :, None],
+                            out_t[-2].reshape(B, P, n), full)
+        ldn, lt0, leader, lpt, lev, lhist, pen = lark_transitions(
+            t_clamp, lark, ldr, lfull, ldn, lt0, leader, lpt, lev, lhist)
+        lat = lat_dirty_reset(lat, pen)
+
+        # -- a replica loss (re)starts the constant countdown, now in
+        # fixed-point units, and pins the rebuild to the lost replica's
+        # node: the lowest replica lane that went up -> down this step
+        # (simultaneous losses replay onto the first — one log stream
+        # per partition, like the reconfig model's single recruit)
+        if rebuild_fp is not None and rebuild_fp > 0:
+            lost = qrep & ~rep_new                            # (B, P, rf)
+            loss = xp.any(lost, axis=2)
+            qreb = xp.where(loss, xp.int32(rebuild_fp), qreb)
+            rank = xp.min(xp.where(lost,
+                                   xp.arange(rf, dtype=xp.int32)
+                                   [None, None, :], xp.int32(rf)), axis=2)
+            node = succ[xp.arange(P, dtype=xp.int32)[None, :],
+                        xp.clip(rank, 0, rf - 1)]
+            recruit = xp.where(loss, node, recruit)
+        qdn, qt0, qev, qhist = quorum_transitions(
+            t_clamp, qmaj, qreb, qdn, qt0, qev, qhist)
+        qrep = rep_new
+        if hermes:
+            hstate = hermes_post(t_clamp, lark, repm, hstate)
+
+        carry = (now, up, ev_t, full, rr_t, rr_idx, lane0, ldn, lt0,
+                 qrep, qreb, qdn, qt0, leader, lpt, qpt, lev, qev,
+                 lhist, qhist, recruit) + (hstate if hermes else ()) + lat
+        out = (t_clamp, xp.sum(ldn, axis=1).astype(xp.int32),
+               xp.sum(qdn, axis=1).astype(xp.int32),
+               xp.sum(up, axis=1).astype(xp.int32))
+        if hermes:
+            out = out + (xp.sum(hstate[0], axis=1).astype(xp.int32),)
+        return carry, out
+
     lanes_n = xp.arange(n, dtype=xp.int32)
 
     def recruit_roster(up_succ, rup, roster):
@@ -1037,6 +1189,8 @@ def _make_step(xp, dt_fn, advance, succ, *, n: int, P: int, rf: int,
 
     if rebuild_model == "reconfig":
         return step_reconfig_packed if packed else step_reconfig
+    if bandwidth_fp is not None:
+        return step_fixed_bw
     return step
 
 
@@ -1126,7 +1280,12 @@ def simulate_downtime_batched(
                    the catch-up stalls until contention eases, which is
                    why bandwidth itself must be >= 1/256).  The default
                    inf disables sharing and is bit-identical to the
-                   unshared parallel-rebuild model.  Reconfig only.
+                   unshared parallel-rebuild model.  Applies to both
+                   rebuild models: under rebuild_model="fixed" a lost
+                   replica's log replays onto its *own* node (lowest
+                   lost succession rank), so concurrent fixed-model
+                   rebuilds landing on one node split its bandwidth the
+                   same way reconfig catch-ups do.
     hist_bins      power-of-two duration buckets ([1,2), [2,4), ...,
                    top bucket open-ended).
 
@@ -1177,7 +1336,8 @@ def simulate_downtime_batched(
     if unknown:
         raise ValueError(f"unknown disable predicates {sorted(unknown)}; "
                          f"expected a subset of {DISABLE_PREDICATES}")
-    if reconfig and max_ticks > (2 ** 31 - 1) // _REB_SCALE - 2:
+    if (reconfig or bandwidth_shared) \
+            and max_ticks > (2 ** 31 - 1) // _REB_SCALE - 2:
         raise ValueError("max_ticks too large for the fixed-point "
                          f"catch-up countdowns (<= "
                          f"{(2 ** 31 - 1) // _REB_SCALE - 2})")
@@ -1213,6 +1373,12 @@ def simulate_downtime_batched(
                            int(_REB_BIG))) if bandwidth_shared else None
     cnt_fn = (lambda rec, act: _rebuild_node_counts_impl(
         rec, act, n_real=n, backend=backend)) if bandwidth_shared else None
+    # fixed-model restart value in fixed-point work units; the horizon
+    # cap keeps rebuild_steps * _REB_SCALE inside int32 and is
+    # observationally invisible (a countdown past the horizon can never
+    # complete in-simulation), mirroring _partition_rebuild_ticks's cap
+    rebuild_fp = int(min(rebuild_steps, max_ticks + 1)) * _REB_SCALE \
+        if (bandwidth_shared and not reconfig) else None
     advance = _make_node_advance(
         xp, n=n, horizon=horizon, dt_vec=dt_vec, geo_masks=geo_masks,
         geo_tables=geo_tables, seed_mix=seed_mix,
@@ -1238,6 +1404,7 @@ def simulate_downtime_batched(
                       rebuild_model=rebuild_model,
                       rebuild_ticks=rebuild_ticks,
                       bandwidth_fp=bandwidth_fp, cnt_fn=cnt_fn,
+                      rebuild_fp=rebuild_fp,
                       packed=packed, lat_fn=lat_fn, engines=zoo,
                       lease_ticks=lease_ticks,
                       view_change_ticks=view_change_ticks,
@@ -1275,6 +1442,10 @@ def simulate_downtime_batched(
         # no catch-up in flight at t=0, so no recruit node to ingest on
         recruit0 = xp.full((B, P), n, dtype=xp.int32)
         carry = carry + (roster0, recruit0)
+    elif bandwidth_shared:
+        # fixed model with bandwidth contention carries only the
+        # rebuilding-node leaf (the replica set itself is static)
+        carry = carry + (xp.full((B, P), n, dtype=xp.int32),)
     h0 = len(carry)                   # hermes leaves start here (if any)
     if hermes_on:
         # the t=0 membership view is the kernel's repmask on the initial
@@ -1334,6 +1505,13 @@ def simulate_downtime_batched(
         lat_qhist = np.zeros((B, _lat_plan.nbins))
         lat_qslo = np.zeros(B)
         lat_qsum = np.zeros(B)
+        lat_wfp = None
+        if _lat_plan.wfp is not None:
+            # skewed write mix: pool a second, write-fraction-weighted
+            # view of the same dup charges (hermes pays dup-res on writes
+            # only, so its share is per-partition under write_skew)
+            lat_wfp = np.asarray(_lat_plan.wfp, dtype=np.float64)
+            lat_dupw = np.zeros((B, _lat_plan.kf.shape[0]))
     traj = [] if trajectory else None
     stopped = False
     s0 = 1
@@ -1369,7 +1547,10 @@ def simulate_downtime_batched(
             # summation order independent of backend and device sharding
             # (the dirty fractions persist; the charges restart per chunk)
             lt_ = carry[lat_i:]
-            lat_dup += np.asarray(lt_[1], dtype=np.float64).sum(axis=1)
+            dup_bp = np.asarray(lt_[1], dtype=np.float64)
+            lat_dup += dup_bp.sum(axis=1)
+            if lat_wfp is not None:
+                lat_dupw += (dup_bp * lat_wfp[None, :, None]).sum(axis=1)
             lat_qhist += np.asarray(lt_[2], dtype=np.float64).sum(axis=1)
             lat_qslo += np.asarray(lt_[3], dtype=np.float64).sum(axis=1)
             lat_qsum += np.asarray(lt_[4], dtype=np.float64).sum(axis=1)
@@ -1420,6 +1601,8 @@ def simulate_downtime_batched(
     if _lat_plan is not None:
         lat_raw = {"dup": lat_dup, "qhist": lat_qhist, "qslo": lat_qslo,
                    "qsum": lat_qsum, "now": now.copy()}
+        if lat_wfp is not None:
+            lat_raw["dupw"] = lat_dupw
 
     def _engine_stats(pt_tot):
         u = min(float(pt_tot.sum()) / pt, 1.0)
@@ -1455,8 +1638,7 @@ def simulate_downtime_batched(
         rebuild_ticks_per_gib=rebuild_ticks_per_gib if reconfig else 0,
         size_dist=size_dist if reconfig else "uniform",
         size_skew=size_skew if size_dist in ("zipf", "lognormal") else 0.0,
-        node_bandwidth_gibps=node_bandwidth_gibps if reconfig
-        else math.inf,
+        node_bandwidth_gibps=node_bandwidth_gibps,
         hist_edges=np.asarray([1 << k for k in range(hist_bins)],
                               dtype=np.int64),
         hist_lark=lhist_tot, hist_quorum=qhist_tot,

@@ -299,7 +299,7 @@ def _gen_run_downtime_scenarios(names, full: bool = False, trials: int = 4,
 
 
 def _latency_row(r, *, kind: str, scenario: str):
-    return {
+    row = {
         "kind": kind, "scenario": scenario, "rf": r.rf, "p": r.p,
         "lat_lark": r.lat_lark, "lat_quorum": r.lat_quorum,
         "lat_hermes": r.lat_hermes,
@@ -321,6 +321,20 @@ def _latency_row(r, *, kind: str, scenario: str):
         "slo_ticks": r.slo_ticks,
         "ticks": r.ticks,
     }
+    # the sharpening knobs only add columns when set, so rows at their
+    # degenerate settings stay byte-identical to the pre-knob baselines
+    # (the schema's row-key defaults supply the absent values)
+    if r.write_skew:
+        row["write_skew"] = r.write_skew
+    if math.isfinite(r.node_bandwidth_gibps):
+        row["node_bandwidth_gibps"] = r.node_bandwidth_gibps
+    if r.slo_curve_bins:
+        row["slo_curve_bins"] = r.slo_curve_bins
+        row["slo_curve_edges"] = r.slo_curve_edges.tolist()
+        row["slo_curve_lark"] = r.slo_curve_lark.tolist()
+        row["slo_curve_quorum"] = r.slo_curve_quorum.tolist()
+        row["slo_curve_hermes"] = r.slo_curve_hermes.tolist()
+    return row
 
 
 def _gen_run_latency(full: bool = False, trials: int = 4,

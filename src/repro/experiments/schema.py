@@ -67,7 +67,9 @@ ROW_KEY_FIELDS = {
     "latency": (("scenario", "iid"), ("rf", _REQUIRED), ("p", _REQUIRED),
                 ("rebuild_model", "fixed"), ("read_frac", None),
                 ("key_zipf", None), ("slo_ticks", None),
-                ("requests_per_tick", None), ("dupres_ticks", None)),
+                ("requests_per_tick", None), ("dupres_ticks", None),
+                ("write_skew", 0.0), ("node_bandwidth_gibps", None),
+                ("slo_curve_bins", 0)),
 }
 
 #: row ``kind`` value → (key family, gated-column family); scenario

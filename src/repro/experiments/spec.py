@@ -52,9 +52,12 @@ _DOWNTIME_KEYS = ("dupres_ticks", "rebuild_steps", "rebuild_model",
 #: spec keys that select the protocol zoo (--metric downtime only)
 _ZOO_KEYS = ("engines", "lease_ticks", "view_change_ticks")
 #: spec keys that model the request workload (--metric latency only)
-_LATENCY_KEYS = ("key_zipf", "read_frac", "requests_per_tick", "slo_ticks")
-#: reconfig-only knobs among _DOWNTIME_KEYS
-_RECONFIG_KEYS = ("size_dist", "size_skew", "node_bandwidth_gibps")
+_LATENCY_KEYS = ("key_zipf", "read_frac", "requests_per_tick", "slo_ticks",
+                 "write_skew", "slo_curve_bins")
+#: reconfig-only knobs among _DOWNTIME_KEYS (node_bandwidth_gibps left
+#: this set when fixed-model rebuilds gained bandwidth contention — it
+#: now applies to both rebuild models)
+_RECONFIG_KEYS = ("size_dist", "size_skew")
 
 #: per-metric defaults for the latency workload knobs — the non-latency
 #: values are the zero-request limit DowntimeParams defaults to, so
@@ -107,11 +110,18 @@ class ExperimentSpec:
     engines: tuple = ("lark", "quorum")
     lease_ticks: int = 0
     view_change_ticks: int = 0
-    # client-request workload (latency metric)
+    # client-request workload (latency metric).  slo_ticks=0 doubles as
+    # the non-latency sentinel default AND a live strict-> threshold
+    # under metric 'latency' (every request with any added latency
+    # violates) — the per-metric default tables below keep the two
+    # readings from colliding: a latency spec defaults to 8, so 0 there
+    # is always an explicit caller choice
     key_zipf: float = 0.0
     read_frac: float = 1.0
     requests_per_tick: float = 0.0
     slo_ticks: int = 0
+    write_skew: float = 0.0
+    slo_curve_bins: int = 0
 
     def __post_init__(self):
         object.__setattr__(self, "scenarios", tuple(self.scenarios))
@@ -168,7 +178,8 @@ class ExperimentSpec:
             node_bandwidth_gibps=self.node_bandwidth_gibps,
             key_zipf=self.key_zipf, read_frac=self.read_frac,
             requests_per_tick=self.requests_per_tick,
-            slo_ticks=self.slo_ticks, engines=self.engines,
+            slo_ticks=self.slo_ticks, write_skew=self.write_skew,
+            slo_curve_bins=self.slo_curve_bins, engines=self.engines,
             lease_ticks=self.lease_ticks,
             view_change_ticks=self.view_change_ticks)
 
@@ -333,6 +344,8 @@ class ExperimentSpec:
             meta["read_frac"] = self.read_frac
             meta["requests_per_tick"] = self.requests_per_tick
             meta["slo_ticks"] = self.slo_ticks
+            meta["write_skew"] = self.write_skew
+            meta["slo_curve_bins"] = self.slo_curve_bins
         if self.metric == "downtime" and self.zoo_live():
             meta["engines"] = ",".join(self.engines)
             meta["lease_ticks"] = self.lease_ticks

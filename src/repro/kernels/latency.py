@@ -45,7 +45,9 @@ Charge model per event interval of length dt (interval-start state):
           replica majority is up, i.e. commits would otherwise flow)
           waits out the remaining rebuild: a write landing tau ticks
           into the interval pays rem - tau ticks.  Writes arrive at
-          lamw_j per tick; paying ticks, power-of-two latency buckets,
+          lamw_j per tick (under `write_skew` that rate already carries
+          the per-partition mix — the skew needs no in-scan change);
+          paying ticks, power-of-two latency buckets,
           the SLO-violation count, and the latency sum are all closed
           forms in (rem, dt) — integer comparisons plus float32 scaling.
   hermes  reads never pay (local reads); the write path is derived
@@ -163,7 +165,12 @@ def quorum_step(rem, dt, qok, lamw, lanes, *, nbins: int, slo_ticks: int,
       qhist  (..., L) float32 expected requests landing in power-of-two
              latency bucket k = [2^k, 2^(k+1)) (top bucket open-ended);
              lanes >= nbins are padding and yield exact 0.
-      qslo   (..., 1) expected requests with latency > slo_ticks.
+      qslo   (..., 1) expected requests with latency STRICTLY > slo_ticks
+             (slo_cnt = max(min(dt, rem - slo_ticks), 0): a write paying
+             exactly slo_ticks does not violate; slo_ticks=0 therefore
+             counts every request with any added latency — a live
+             threshold, not a disable switch, pinned by
+             tests/test_client_latency.py).
       qsum   (..., 1) expected total latency ticks (for the mean).
     All counts are integer tick arithmetic scaled once by the float32
     write rate — deterministic on every backend."""

@@ -21,6 +21,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.client_latency import (_percentile, key_bucket_shares,
                                        partition_request_weights,
+                                       partition_write_fractions,
                                        simulate_client_latency)
 from repro.core.downtime_batched import DowntimeParams, \
     simulate_downtime_batched
@@ -248,3 +249,176 @@ def test_charged_fraction_bounded_by_offered_load():
     req = _KW["requests_per_tick"] * raw["now"].sum()
     assert raw["dup"].sum() <= req * 1.0000001
     assert raw["qslo"].sum() <= req * (1 - _KW["read_frac"]) * 1.0000001
+
+
+# ---------------------------------------------------------------------------
+# _percentile boundary semantics (adversarial pins)
+# ---------------------------------------------------------------------------
+
+def test_percentile_exact_cdf_landing_takes_value():
+    """A cumulative mass landing *exactly* on q * total selects that
+    value (the walk uses >=), never the next one up."""
+    masses = [(1.0, 32.0), (2.0, 32.0)]
+    assert _percentile(masses, 64.0, 0.5) == 1.0
+    assert _percentile(masses, 64.0, 0.75) == 2.0
+    # the zero-latency mass exactly covering q returns 0.0, not the
+    # smallest positive value
+    assert _percentile([(5.0, 1.0)], 100.0, 0.99) == 0.0
+    assert _percentile([(5.0, 1.0)], 100.0, 0.995) == 5.0
+
+
+def test_percentile_zero_mass_and_zero_total():
+    assert _percentile([], 100.0, 0.999) == 0.0
+    assert _percentile([(3.0, 0.0)], 100.0, 0.5) == 0.0
+    assert _percentile([(3.0, 1.0)], 0.0, 0.5) == 0.0
+    assert _percentile([(3.0, 1.0)], -1.0, 0.999) == 0.0
+
+
+def test_percentile_single_bucket_and_overcharged_total():
+    # one point mass covering everything: every quantile lands on it
+    for q in (0.5, 0.99, 0.999):
+        assert _percentile([(7.0, 10.0)], 10.0, q) == 7.0
+    # charged mass exceeding the total (float drift): the zero mass is
+    # clamped at 0 and the walk still terminates on the charged values
+    assert _percentile([(3.0, 200.0)], 100.0, 0.5) == 3.0
+    assert _percentile([(3.0, 200.0)], 100.0, 0.999) == 3.0
+    # unsorted input is sorted by value before walking
+    assert _percentile([(9.0, 1.0), (2.0, 99.0)], 100.0, 0.5) == 2.0
+
+
+# ---------------------------------------------------------------------------
+# strict-> SLO threshold (slo_ticks=0 is a live edge, not a sentinel)
+# ---------------------------------------------------------------------------
+
+def test_slo_strict_threshold_semantics():
+    """A request violates iff its added latency strictly exceeds
+    slo_ticks: LARK's charge is exactly dupres_ticks per dup-res, so
+    slo_ticks == dupres_ticks charges nothing and slo_ticks just below
+    charges every dup-res."""
+    at = simulate_client_latency(backend="numpy",
+                                 **{**_KW, "slo_ticks": 4})
+    below = simulate_client_latency(backend="numpy",
+                                    **{**_KW, "slo_ticks": 3})
+    assert at.slo_lark == 0.0 and at.slo_hermes == 0.0
+    assert below.slo_lark > 0.0
+    # slo_ticks=0 is live under strict >: any positive added latency
+    # violates, so the LARK fraction equals any other threshold below
+    # dupres_ticks and quorum counts at least as many waits
+    live = simulate_client_latency(backend="numpy",
+                                   **{**_KW, "slo_ticks": 0})
+    assert live.slo_lark == below.slo_lark > 0.0
+    assert live.slo_quorum >= below.slo_quorum
+
+
+# ---------------------------------------------------------------------------
+# SLO curves
+# ---------------------------------------------------------------------------
+
+def test_slo_curve_monotone_and_endpoint_exact():
+    r = simulate_client_latency(
+        backend="numpy", **{**_KW, "slo_ticks": 3, "slo_curve_bins": 8})
+    edges = np.asarray(r.slo_curve_edges)
+    assert edges.tolist() == [(1 << j) - 1 for j in range(8)]
+    for curve in (r.slo_curve_lark, r.slo_curve_quorum,
+                  r.slo_curve_hermes):
+        c = np.asarray(curve)
+        assert c.shape == (8,)
+        assert np.all((c >= 0.0) & (c <= 1.0))
+        assert np.all(np.diff(c) <= 0.0)        # non-increasing
+    # slo_ticks=3 sits on curve edge 2^2 - 1: the curve reproduces the
+    # scalar columns there bitwise
+    j = int(np.flatnonzero(edges == 3)[0])
+    assert r.slo_curve_lark[j] == r.slo_lark
+    assert r.slo_curve_quorum[j] == r.slo_quorum
+    assert r.slo_curve_hermes[j] == r.slo_hermes
+
+
+def test_slo_curve_off_threshold_still_monotone():
+    # slo_ticks=2 is not a 2^j - 1 edge: no substitution happens, the
+    # curve must still be monotone and bounded
+    r = simulate_client_latency(backend="numpy",
+                                **{**_KW, "slo_curve_bins": 6})
+    for curve in (r.slo_curve_lark, r.slo_curve_quorum,
+                  r.slo_curve_hermes):
+        c = np.asarray(curve)
+        assert np.all(np.diff(c) <= 0.0) and np.all((c >= 0) & (c <= 1))
+
+
+def test_slo_curve_off_by_default():
+    r = simulate_client_latency(backend="numpy", **_KW)
+    assert r.slo_curve_bins == 0
+    assert r.slo_curve_edges is None and r.slo_curve_lark is None
+
+
+# ---------------------------------------------------------------------------
+# per-partition write mix
+# ---------------------------------------------------------------------------
+
+def test_write_fractions_uniform_at_zero_skew():
+    w = partition_write_fractions(7, 64, read_frac=0.8, write_skew=0.0)
+    assert np.all(w == 1.0 - 0.8)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=2, max_value=128),
+       st.integers(min_value=1, max_value=32),
+       st.integers(min_value=0, max_value=4),
+       st.integers(min_value=0, max_value=1000))
+def test_write_fractions_mean_pinned(partitions, skew_quarters,
+                                     rf_quarters, seed):
+    """mean(w) == 1 - read_frac to float64 round-off for any skew, even
+    deep into saturation (the waterfilling pin), and every fraction stays
+    a valid probability."""
+    rf = rf_quarters / 4.0
+    w = partition_write_fractions(seed, partitions, read_frac=rf,
+                                  write_skew=skew_quarters / 4.0)
+    assert w.shape == (partitions,)
+    assert np.all((w >= 0.0) & (w <= 1.0))
+    assert abs(w.mean() - (1.0 - rf)) < 1e-12
+
+
+def test_write_skew_leaves_lark_path_untouched():
+    """The write mix reweights lamw (the quorum/hermes write-arrival
+    table) only — LARK's dup-res charges ride the full request stream
+    and must stay bit-identical under skew."""
+    base = simulate_client_latency(backend="numpy", **_KW)
+    sk = simulate_client_latency(backend="numpy", write_skew=1.0, **_KW)
+    assert np.array_equal(_raw(base)["dup"], _raw(sk)["dup"])
+    assert sk.lat_lark == base.lat_lark
+    assert sk.p999_lark == base.p999_lark
+    assert "dupw" in _raw(sk) and "dupw" not in _raw(base)
+    assert sk.write_skew == 1.0 and base.write_skew == 0.0
+
+
+# ---------------------------------------------------------------------------
+# fixed-model bandwidth contention
+# ---------------------------------------------------------------------------
+
+def test_fixed_bandwidth_contention_changes_waits():
+    """A tight shared-bandwidth budget stretches fixed-model rebuilds,
+    so quorum waits grow; the knob must actually bite."""
+    base = simulate_client_latency(backend="numpy", **_KW)
+    tight = simulate_client_latency(backend="numpy",
+                                    node_bandwidth_gibps=0.25, **_KW)
+    assert tight.rebuild_model == "fixed"
+    assert math.isfinite(tight.node_bandwidth_gibps)
+    assert tight.lat_quorum > base.lat_quorum
+
+
+def test_new_knobs_backend_matrix_bit_identical():
+    """All three knobs live at once: numpy, jax, jax-packed, and pallas
+    must agree bit-for-bit on every raw accumulator and on the curve."""
+    kw = {**_KW, "write_skew": 1.0, "node_bandwidth_gibps": 0.5,
+          "slo_curve_bins": 8}
+    base = simulate_client_latency(backend="numpy", **kw)
+    for backend, extra in (("jax", {}), ("jax", {"packed": True}),
+                           ("pallas", {})):
+        other = simulate_client_latency(backend=backend, **extra, **kw)
+        for k in ("dup", "dupw", "qhist", "qslo", "qsum", "now"):
+            assert np.array_equal(_raw(base)[k], _raw(other)[k]), \
+                (backend, extra, k)
+        assert base.lat_lark == other.lat_lark
+        assert base.lat_quorum == other.lat_quorum
+        assert base.lat_hermes == other.lat_hermes
+        assert np.array_equal(base.slo_curve_quorum,
+                              other.slo_curve_quorum)

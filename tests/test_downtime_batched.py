@@ -418,11 +418,13 @@ def test_size_dist_validation():
     with pytest.raises(ValueError, match="size_dist"):
         simulate_downtime_batched(rebuild_model="reconfig",
                                   size_dist="pareto", **_KW)
-    # the skew/bandwidth knobs describe reconfig catch-ups only
+    # the size knobs describe reconfig catch-ups only; bandwidth sharing
+    # now applies to the fixed model too
     with pytest.raises(ValueError, match="reconfig"):
         simulate_downtime_batched(size_dist="zipf", **_KW)
-    with pytest.raises(ValueError, match="reconfig"):
-        simulate_downtime_batched(node_bandwidth_gibps=1.0, **_KW)
+    simulate_downtime_batched(node_bandwidth_gibps=1.0, **_KW)
+    with pytest.raises(ValueError, match="quantum"):
+        simulate_downtime_batched(node_bandwidth_gibps=0.003, **_KW)
     with pytest.raises(ValueError, match="node_bandwidth_gibps"):
         simulate_downtime_batched(rebuild_model="reconfig",
                                   node_bandwidth_gibps=0.0, **_KW)

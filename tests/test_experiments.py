@@ -311,3 +311,68 @@ def test_sweep_main_still_accepts_loose_parsing_for_run_py():
     spec, _ = sweep.build_spec(["--backend", "numpy", "--smoke",
                                 "--some-other-suites-flag"], strict=False)
     assert spec.backend == "numpy" and spec.smoke
+
+
+def test_every_benchmark_module_is_suite_or_standalone_tool():
+    """run.py's suite tuple plus STANDALONE_TOOLS must cover every
+    benchmarks/*.py module, with no overlap — a new tool can never be
+    silently neither (run under the shared argv it would crash or drop
+    flags; left off both lists it would never run at all)."""
+    run_spec = importlib.util.spec_from_file_location(
+        "bench_run_cov", REPO / "benchmarks" / "run.py")
+    bench_run = importlib.util.module_from_spec(run_spec)
+    run_spec.loader.exec_module(bench_run)
+    suites = set(bench_run.SUITE_NAMES)
+    tools = set(bench_run.STANDALONE_TOOLS)
+    modules = {p.stem for p in (REPO / "benchmarks").glob("*.py")
+               if p.stem != "run"}
+    assert suites | tools == modules, \
+        (suites | tools) ^ modules
+    assert not suites & tools
+
+
+# -- latency rows: sharpening knobs add columns only when set ------------
+
+def test_latency_row_degenerate_knobs_add_no_columns():
+    """write_skew=0 / bw=inf / slo_curve_bins=0 rows must carry exactly
+    the pre-knob key set — that is what keeps regenerated baselines
+    byte-identical to the committed ones row for row."""
+    import math
+
+    import numpy as np
+    base = dict(
+        rf=2, p=1e-4, lat_lark=0.1, lat_quorum=0.2, lat_hermes=0.02,
+        ci_lat_lark=0.01, ci_lat_quorum=0.01,
+        p50_lark=0.0, p99_lark=1.0, p999_lark=4.0,
+        p50_quorum=0.0, p99_quorum=1.0, p999_quorum=4.0,
+        p50_hermes=0.0, p99_hermes=1.0, p999_hermes=4.0,
+        slo_lark=0.0, slo_quorum=0.0, slo_hermes=0.0, req_total=100.0,
+        hist_edges=np.arange(3), hist_quorum_req=np.zeros(3),
+        dupres_ticks=1, rebuild_model="fixed", key_zipf=1.0,
+        read_frac=0.8, requests_per_tick=32.0, slo_ticks=8, ticks=1000,
+        write_skew=0.0, node_bandwidth_gibps=math.inf, slo_curve_bins=0,
+        slo_curve_edges=None, slo_curve_lark=None,
+        slo_curve_quorum=None, slo_curve_hermes=None)
+    deg = runner_mod._latency_row(SimpleNamespace(**base),
+                                  kind="latency", scenario="iid")
+    for key in ("write_skew", "node_bandwidth_gibps", "slo_curve_bins",
+                "slo_curve_edges", "slo_curve_lark", "slo_curve_quorum",
+                "slo_curve_hermes"):
+        assert key not in deg, key
+    curves = np.zeros(4)
+    knobbed = runner_mod._latency_row(
+        SimpleNamespace(**{**base, "write_skew": 1.0,
+                           "node_bandwidth_gibps": 0.5,
+                           "slo_curve_bins": 4, "slo_curve_edges": curves,
+                           "slo_curve_lark": curves,
+                           "slo_curve_quorum": curves,
+                           "slo_curve_hermes": curves}),
+        kind="latency", scenario="iid")
+    assert knobbed["write_skew"] == 1.0
+    assert knobbed["node_bandwidth_gibps"] == 0.5
+    assert knobbed["slo_curve_bins"] == 4
+    assert knobbed["slo_curve_quorum"] == [0.0] * 4
+    # and the two rows key differently under the schema (the knobs are
+    # part of the row identity, so a knobbed rerun can't shadow a
+    # baseline row)
+    assert schema.row_key(deg) != schema.row_key(knobbed)

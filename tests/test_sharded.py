@@ -189,28 +189,40 @@ def test_eight_device_latency_run_bit_identical_to_single():
     reported latency column must be byte-identical between --devices 1
     and a forced 8-device mesh, unpacked jax AND the packed pallas
     carry — the latency leaves ride the generic trials-axis cspec, so
-    any drift here is a sharding bug in the carry layout."""
+    any drift here is a sharding bug in the carry layout.  Run twice:
+    the legacy workload and the sharpened knobs (write skew + a finite
+    fixed-model bandwidth + SLO curves) at once."""
     script = textwrap.dedent("""
         import numpy as np
         from repro.core.client_latency import simulate_client_latency
-        kw = dict(n=6, rf=2, p=2e-4, partitions=64, trials=8,
-                  max_ticks=8_000, min_ticks=8_000, chunk_steps=64,
-                  seed=11, dupres_ticks=4, requests_per_tick=8.0,
-                  key_zipf=1.0, read_frac=0.8, slo_ticks=2)
-        r1 = simulate_client_latency(backend="jax", devices=1, **kw)
-        for backend, packed in (("jax", False), ("pallas", True)):
-            for d in (4, 8):
-                rd = simulate_client_latency(backend=backend, devices=d,
-                                             packed=packed, **kw)
-                raw1 = r1.downtime.latency_raw
-                rawd = rd.downtime.latency_raw
-                for k in ("dup", "qhist", "qslo", "qsum", "now"):
-                    assert np.array_equal(raw1[k], rawd[k]), \\
-                        (backend, packed, d, k)
-                assert r1.lat_lark == rd.lat_lark
-                assert r1.lat_quorum == rd.lat_quorum
-                assert r1.p999_quorum == rd.p999_quorum
-                assert r1.slo_quorum == rd.slo_quorum
+        base = dict(n=6, rf=2, p=2e-4, partitions=64, trials=8,
+                    max_ticks=8_000, min_ticks=8_000, chunk_steps=64,
+                    seed=11, dupres_ticks=4, requests_per_tick=8.0,
+                    key_zipf=1.0, read_frac=0.8, slo_ticks=2)
+        sharp = dict(base, write_skew=1.0, node_bandwidth_gibps=0.5,
+                     slo_curve_bins=8)
+        for kw in (base, sharp):
+            r1 = simulate_client_latency(backend="jax", devices=1, **kw)
+            raw1 = r1.downtime.latency_raw
+            keys = ("dup", "qhist", "qslo", "qsum", "now")
+            if "dupw" in raw1:
+                keys = keys + ("dupw",)
+            for backend, packed in (("jax", False), ("pallas", True)):
+                for d in (4, 8):
+                    rd = simulate_client_latency(backend=backend,
+                                                 devices=d,
+                                                 packed=packed, **kw)
+                    rawd = rd.downtime.latency_raw
+                    for k in keys:
+                        assert np.array_equal(raw1[k], rawd[k]), \\
+                            (backend, packed, d, k)
+                    assert r1.lat_lark == rd.lat_lark
+                    assert r1.lat_quorum == rd.lat_quorum
+                    assert r1.p999_quorum == rd.p999_quorum
+                    assert r1.slo_quorum == rd.slo_quorum
+                    assert (r1.slo_curve_quorum is None
+                            or np.array_equal(r1.slo_curve_quorum,
+                                              rd.slo_curve_quorum))
         print("OK")
     """)
     env = dict(os.environ,

@@ -204,11 +204,22 @@ def test_downtime_params_validation_errors():
         DowntimeParams(rebuild_model="reconfig", size_skew=-0.1)
     with pytest.raises(ValueError, match="quantum"):
         DowntimeParams(rebuild_model="reconfig", node_bandwidth_gibps=0)
-    # skew/bandwidth knobs describe reconfig's data-sized catch-ups only
+    # the size knobs describe reconfig's data-sized catch-ups only;
+    # node_bandwidth_gibps now applies to both rebuild models
     with pytest.raises(ValueError, match="reconfig"):
         DowntimeParams(size_dist="zipf")
-    with pytest.raises(ValueError, match="reconfig"):
-        DowntimeParams(node_bandwidth_gibps=4.0)
+    p = DowntimeParams(node_bandwidth_gibps=4.0)
+    assert p.bandwidth_shared and not p.reconfig
+    with pytest.raises(ValueError, match="quantum"):
+        DowntimeParams(node_bandwidth_gibps=0.003)
+    with pytest.raises(ValueError, match="write_skew"):
+        DowntimeParams(write_skew=-0.1)
+    with pytest.raises(ValueError, match="write_skew"):
+        DowntimeParams(write_skew=9.0)
+    with pytest.raises(ValueError, match="slo_curve_bins"):
+        DowntimeParams(slo_curve_bins=-1)
+    with pytest.raises(ValueError, match="slo_curve_bins"):
+        DowntimeParams(hist_bins=16, slo_curve_bins=17)
 
 
 def test_downtime_params_reconfig_properties():
